@@ -1,0 +1,74 @@
+"""Paper Figure 5 — clustering performance vs baselines.
+
+Dense (Sift/Gist-like): GEEK vs Lloyd vs k-means++ vs sampled-kmeans (FAISS
+analogue). Hetero/sparse (GeoNames/URL-like): GEEK vs k-modes. Reports
+running time + mean radius at matched k* (the paper's protocol).
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, mean_radius, timeit
+from repro.core import baselines
+from repro.core.geek import GeekConfig, fit_dense, fit_hetero, fit_sparse, \
+    hetero_codes
+from repro.data import synthetic
+
+# tuned per the paper's grid-search protocol (Fig 4 sweep; see bench_params)
+CFG = GeekConfig(m=40, t=128, bucket_k=2, bucket_l=16, silk_l=8, delta=5,
+                 k_max=512, pair_cap=1 << 15, t_cat=8, doph_m=64)
+
+
+def run(quick: bool = True, n: int = 8192) -> None:
+    key = jax.random.PRNGKey(0)
+    iters = 1 if quick else 3
+
+    # -- dense ---------------------------------------------------------------
+    data = synthetic.sift_like(key, n=n, k=64)
+    res = fit_dense(data.x, jax.random.PRNGKey(1), CFG)
+    k = int(res.k_star)
+    sec = timeit(lambda: fit_dense(data.x, jax.random.PRNGKey(1), CFG),
+                 iters=iters)
+    emit("fig5/dense/geek", sec,
+         f"k*={k};radius={mean_radius(res.radius, res.center_valid):.4f}")
+
+    for name, fn in [
+        ("lloyd", lambda: baselines.lloyd(data.x, k, jax.random.PRNGKey(2),
+                                          iters=10)),
+        ("kmeans++_1pass", lambda: baselines.seed_then_assign(
+            data.x, k, jax.random.PRNGKey(3))),
+        ("sampled_kmeans", lambda: baselines.sampled_kmeans(
+            data.x, k, jax.random.PRNGKey(4), iters=10)),
+    ]:
+        sec = timeit(fn, iters=iters)
+        r = fn()
+        emit(f"fig5/dense/{name}", sec,
+             f"k={k};radius={mean_radius(r.radius, r.center_valid):.4f}")
+
+    # -- heterogeneous --------------------------------------------------------
+    h = synthetic.geonames_like(key, n=n // 2, k=32)
+    resh = fit_hetero(h.x_num, h.x_cat, jax.random.PRNGKey(1), CFG)
+    kh = int(resh.k_star)
+    sec = timeit(lambda: fit_hetero(h.x_num, h.x_cat, jax.random.PRNGKey(1),
+                                    CFG), iters=iters)
+    emit("fig5/hetero/geek", sec,
+         f"k*={kh};radius={mean_radius(resh.radius, resh.center_valid):.4f}")
+    codes = hetero_codes(h.x_num, h.x_cat, CFG.t_cat)
+    sec = timeit(lambda: baselines.kmodes(codes, kh, jax.random.PRNGKey(2),
+                                          iters=5), iters=iters)
+    r = baselines.kmodes(codes, kh, jax.random.PRNGKey(2), iters=5)
+    emit("fig5/hetero/kmodes", sec,
+         f"k={kh};radius={mean_radius(r.radius, r.center_valid):.4f}")
+
+    # -- sparse ---------------------------------------------------------------
+    s = synthetic.url_like(key, n=n // 2, k=32)
+    ress = fit_sparse(s.sets, s.mask, jax.random.PRNGKey(1), CFG)
+    sec = timeit(lambda: fit_sparse(s.sets, s.mask, jax.random.PRNGKey(1),
+                                    CFG), iters=iters)
+    emit("fig5/sparse/geek", sec,
+         f"k*={int(ress.k_star)};"
+         f"radius={mean_radius(ress.radius, ress.center_valid):.4f}")
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,42 @@
+"""Paper Table 1 — empirical complexity: phase times vs n, and SILK's
+k-independence (time flat in k_max while assignment grows ~linearly)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.geek import GeekConfig, fit_dense
+from repro.data.synthetic import sift_like
+
+BASE = GeekConfig(m=16, t=32, silk_l=4, delta=10, k_max=128, pair_cap=1 << 14)
+
+
+def run(quick: bool = True, base_n: int = 2048) -> None:
+    key = jax.random.PRNGKey(1)
+    # time vs n (expect ~n log n growth; slope on log-log close to 1)
+    ns = [base_n, 2 * base_n, 4 * base_n] if quick else \
+        [base_n, 2 * base_n, 4 * base_n, 8 * base_n]
+    times = []
+    for n in ns:
+        data = sift_like(jax.random.PRNGKey(0), n=n, k=32)
+        sec = timeit(lambda: fit_dense(data.x, key, BASE),
+                     iters=1 if quick else 3)
+        times.append(sec)
+        emit(f"table1/n={n}", sec, "")
+    slope = np.polyfit(np.log(ns), np.log(times), 1)[0]
+    emit("table1/loglog_slope_n", 0.0, f"slope={slope:.2f}")
+
+    # SILK k-independence: total time vs k_max
+    data = sift_like(jax.random.PRNGKey(0), n=2 * base_n, k=64)
+    for kk in ([64, 512] if quick else [64, 256, 1024]):
+        cfg = dataclasses.replace(BASE, k_max=kk)
+        sec = timeit(lambda: fit_dense(data.x, key, cfg),
+                     iters=1 if quick else 3)
+        emit(f"table1/k_max={kk}", sec, "")
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,45 @@
+"""Paper Figure 4 — parameter study of t, m, L, K, delta over Sift-like data.
+
+Reproduces the qualitative findings:
+  * t controls bucket granularity -> larger t supports larger k*
+  * m and L trade time for seeds (more tables -> more seeds)
+  * K and delta barely matter (K=3, delta=10 defaults)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from benchmarks.common import emit, mean_radius, timeit
+from repro.core.geek import GeekConfig, fit_dense
+from repro.data.synthetic import sift_like
+
+BASE = GeekConfig(m=16, t=32, silk_k=3, silk_l=4, delta=10, k_max=256,
+                  pair_cap=1 << 14)
+
+
+def run(quick: bool = True, n: int = 8192) -> None:
+    data = sift_like(jax.random.PRNGKey(0), n=n, k=64)
+    key = jax.random.PRNGKey(1)
+
+    sweeps = {
+        "t": [32, 64] if quick else [16, 32, 64, 128],
+        "m": [16, 32] if quick else [8, 16, 32],
+        "silk_l": [2, 6] if quick else [2, 4, 8],
+        "silk_k": [2, 4] if quick else [2, 3, 4],
+        "delta": [1, 50] if quick else [1, 10, 50],
+    }
+    for field, values in sweeps.items():
+        for v in values:
+            cfg = dataclasses.replace(BASE, **{field: v})
+            fn = lambda: fit_dense(data.x, key, cfg)
+            sec = timeit(fn, warmup=1, iters=1 if quick else 3)
+            res = fn()
+            emit(f"fig4/{field}={v}", sec,
+                 f"k*={int(res.k_star)};radius="
+                 f"{mean_radius(res.radius, res.center_valid):.4f}")
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,72 @@
+"""Paper Figure 6 — initial seeding: SILK vs k-means++ vs random.
+
+Seeding time only, then the same one-pass assignment for all methods; the
+paper's claims: SILK radius << both, SILK time ~ k-independent while
+k-means++ time is linear in k.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, mean_radius, timeit
+from repro.core import assign as A
+from repro.core import baselines, lsh
+from repro.core.buckets import partition_even
+from repro.core.geek import GeekConfig
+from repro.core.silk import silk_seeding
+
+# tuned per the paper's grid-search protocol (Fig 4 sweep)
+CFG = GeekConfig(m=40, t=128, silk_l=8, delta=5, k_max=512, pair_cap=1 << 15)
+
+
+def _silk_seed_then_assign(x, key, cfg):
+    k1, k2 = jax.random.split(key)
+    a = lsh.qalsh_projections(k1, x.shape[1], cfg.m, dtype=x.dtype)
+    buckets = partition_even(lsh.qalsh_hash(x, a), cfg.t)
+    seeds, _ = silk_seeding(buckets, k2, silk_k=cfg.silk_k, silk_l=cfg.silk_l,
+                            delta=cfg.delta, pair_cap=cfg.pair_cap,
+                            k_max=cfg.k_max)
+    centers, valid = A.centroid_centers(x, seeds)
+    labels, d2 = A.assign_l2(x, centers, valid)
+    radius = A.cluster_radius(jnp.sqrt(d2), labels, cfg.k_max)
+    return seeds.k_star, radius, valid
+
+
+def run(quick: bool = True, n: int = 8192) -> None:
+    from repro.data.synthetic import sift_like
+    data = sift_like(jax.random.PRNGKey(0), n=n, k=64)
+    iters = 1 if quick else 3
+
+    fn = jax.jit(lambda key: _silk_seed_then_assign(data.x, key, CFG),
+                 static_argnums=())
+    sec = timeit(lambda: fn(jax.random.PRNGKey(1)), iters=iters)
+    k_star, radius, valid = fn(jax.random.PRNGKey(1))
+    k = int(k_star)
+    emit("fig6/silk", sec, f"k*={k};radius={mean_radius(radius, valid):.4f}")
+
+    for name, method in [("kmeans++", "kmeans++"), ("random", "random")]:
+        g = lambda: baselines.seed_then_assign(data.x, k, jax.random.PRNGKey(2),
+                                               method=method)
+        sec = timeit(g, iters=iters)
+        r = g()
+        emit(f"fig6/{name}", sec,
+             f"k={k};radius={mean_radius(r.radius, r.center_valid):.4f}")
+
+    # k-(in)dependence: time vs k for SILK (via k_max) and k-means++
+    if not quick:
+        for kk in (64, 256, 1024):
+            import dataclasses
+            cfg = dataclasses.replace(CFG, k_max=kk)
+            f2 = jax.jit(lambda key: _silk_seed_then_assign(data.x, key, cfg))
+            emit(f"fig6/silk_k={kk}",
+                 timeit(lambda: f2(jax.random.PRNGKey(1)), iters=2), "")
+            emit(f"fig6/kmeans++_k={kk}",
+                 timeit(lambda: baselines.seed_then_assign(
+                     data.x, kk, jax.random.PRNGKey(2)), iters=2), "")
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,29 @@
+"""Shared benchmark utilities: timing protocol + result rows."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-clock seconds of a blocking call (post-warmup)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.time()
+        jax.block_until_ready(fn(*args))
+        times.append(time.time() - t0)
+    return float(np.median(times))
+
+
+def mean_radius(radius, valid) -> float:
+    r = jnp.where(valid, radius, 0.0)
+    return float(r.sum() / jnp.maximum(valid.sum(), 1))
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    print(f"{name},{seconds*1e6:.0f},{derived}", flush=True)

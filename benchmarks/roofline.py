@@ -1,0 +1,70 @@
+"""§Roofline collector: renders the per-(arch × shape × mesh) table from the
+dry-run JSONs (experiments/dryrun/*.json) and ranks hillclimb candidates.
+
+  PYTHONPATH=src python -m benchmarks.roofline --dir experiments/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load_rows(directory: str) -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_row(r: dict) -> str:
+    if r["status"] != "ok":
+        reason = r.get("reason", r.get("error", ""))[:48]
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                f"{r['status']} | {reason} | | | | | |")
+    rl = r["roofline"]
+    mem = r["memory"]["live_bytes"] / 2 ** 30
+    fits = "yes" if r["memory"]["fits_16g"] else "**NO**"
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rl['t_compute_s']*1e3:9.1f} | {rl['t_memory_s']*1e3:9.1f} "
+            f"| {rl['t_collective_s']*1e3:9.1f} | {rl['bottleneck']:10s} "
+            f"| {rl['useful_flops_ratio']:.3f} | {mem:7.1f} | {fits} |")
+
+
+HEADER = ("| arch | shape | mesh | compute ms | memory ms | collective ms "
+          "| bottleneck | useful | GiB/chip | fits 16G |\n"
+          "|---|---|---|---|---|---|---|---|---|---|")
+
+
+def hillclimb_candidates(rows: list[dict]) -> list[tuple[str, dict]]:
+    ok = [r for r in rows if r["status"] == "ok" and r["mesh"] == "16x16"]
+    tagged = []
+    if ok:
+        worst_useful = min(ok, key=lambda r: r["roofline"]["useful_flops_ratio"])
+        tagged.append(("worst useful-FLOPs ratio", worst_useful))
+        coll = max(ok, key=lambda r: r["roofline"]["t_collective_s"]
+                   / max(r["roofline"]["step_time_bound_s"], 1e-12))
+        tagged.append(("most collective-bound", coll))
+    return tagged
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default=None, choices=[None, "16x16", "2x16x16"])
+    args = ap.parse_args()
+    rows = load_rows(args.dir)
+    if args.mesh:
+        rows = [r for r in rows if r["mesh"] == args.mesh]
+    print(HEADER)
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        print(fmt_row(r))
+    print()
+    for tag, r in hillclimb_candidates(rows):
+        print(f"hillclimb candidate ({tag}): {r['arch']} × {r['shape']}")
+
+
+if __name__ == "__main__":
+    main()

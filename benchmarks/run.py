@@ -1,0 +1,48 @@
+"""Benchmark entry point — one harness per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. ``--full`` widens the sweeps
+(quick mode keeps the whole suite a few minutes on one CPU core).
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig5]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="fig4|fig5|fig6|fig7|table1")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (bench_clustering, bench_complexity, bench_params,
+                            bench_scaling, bench_seeding)
+    suites = {
+        "fig4": lambda: bench_params.run(quick=quick),
+        "fig5": lambda: bench_clustering.run(quick=quick),
+        "fig6": lambda: bench_seeding.run(quick=quick),
+        "fig7": lambda: bench_scaling.run(quick=quick),
+        "table1": lambda: bench_complexity.run(quick=quick),
+    }
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            fn()
+        except Exception:
+            failed += 1
+            traceback.print_exc()
+            print(f"{name}/SUITE,0,FAILED", flush=True)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""GEEK as a first-class LM feature: KV-cache microclustering.
+
+The paper positions GEEK as a *substrate* for other methods (§3.6: high-k*
+microclusters with small radii accelerate downstream algorithms). Here the
+downstream algorithm is long-context attention: the key vectors of a
+prefix are GEEK-microclustered and each cluster is replaced by its
+centroid (weighted by cluster size) — a drop-in KV compressor. Because
+SILK discovers k* from the data, the compression rate adapts to the
+prefix's redundancy instead of being a fixed hyperparameter.
+
+    PYTHONPATH=src python examples/lm_kv_clustering.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.geek import GeekConfig, fit_dense
+from repro.models import init_params
+from repro.models import model as MODEL
+from repro.models import transformer as T
+
+
+def main():
+    cfg = get_arch("qwen3_0_6b", smoke=True)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 1, 512
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+
+    # run prefill to fill the KV cache of every layer
+    caches = T.stack_cache_init(cfg, B, S)
+    _, caches, _ = MODEL.forward(params, cfg, toks, caches=caches,
+                                 cache_len=jnp.zeros((), jnp.int32))
+
+    # microcluster the keys of layer 0, head 0
+    k_cache = caches[0]["k"][0, 0]                    # (S, hkv, hd) stacked
+    v_cache = caches[0]["v"][0, 0]
+    hkv, hd = k_cache.shape[1:]
+
+    gcfg = GeekConfig(m=16, t=32, silk_l=5, delta=1, k_max=256,
+                      pair_cap=8192)
+
+    def compress(keys, vals, tag):
+        res = fit_dense(keys, jax.random.PRNGKey(2), gcfg)
+        k_star = int(res.k_star)
+        labels = np.array(res.labels)
+        cent_k = np.array(res.centers)[:k_star]
+        sizes = np.bincount(labels, minlength=gcfg.k_max)[:k_star]
+        sizes = sizes.astype(np.float32)
+        cent_v = np.zeros((k_star, keys.shape[1]), np.float32)
+        np.add.at(cent_v, labels, np.array(vals))
+        cent_v /= np.maximum(sizes, 1)[:, None]
+        q = np.array(jax.random.normal(jax.random.PRNGKey(3),
+                                       (keys.shape[1],))) / np.sqrt(hd)
+
+        def softmax(x):
+            e = np.exp(x - x.max())
+            return e / e.sum()
+
+        full = softmax(np.array(keys) @ q) @ np.array(vals)
+        logits_c = cent_k @ q + np.log(np.maximum(sizes, 1))  # size correction
+        comp = softmax(logits_c) @ cent_v
+        err = np.abs(full - comp).max() / (np.abs(full).max() + 1e-9)
+        print(f"[kv-clustering] {tag}: S={keys.shape[0]} -> k*={k_star} "
+              f"({keys.shape[0] / max(k_star, 1):.0f}x fewer keys), "
+              f"attention rel err {err:.4f}")
+
+    # 1) random-init model: keys are near-isotropic -> SILK *discovers* the
+    #    lack of structure (tiny k*). The compression rate is adaptive, not
+    #    a fixed hyperparameter — exactly the paper's k-free seeding story.
+    compress(k_cache[:, 0, :], v_cache[:, 0, :], "random-init cache")
+
+    # 2) a trained model's long-context cache is redundant; emulate that
+    #    redundancy with blob-structured keys to show the mechanism's
+    #    accuracy when structure exists.
+    from repro.data.synthetic import dense_blobs
+    blobs = dense_blobs(jax.random.PRNGKey(4), n=S, d=int(hd), k=24,
+                        spread=0.01)
+    vals_structured = blobs.x * 0.5
+    compress(blobs.x, vals_structured, "structured cache ")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""GEEK quickstart: cluster 3 data types in ~a minute on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import collections
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines
+from repro.core.geek import GeekConfig, fit_dense, fit_hetero, fit_sparse
+from repro.data import synthetic
+
+
+def purity(labels, true):
+    labels, true = np.array(labels), np.array(true)
+    return sum(collections.Counter(true[labels == c]).most_common(1)[0][1]
+               for c in set(labels.tolist())) / len(labels)
+
+
+def mean_radius(res):
+    return float(jnp.where(res.center_valid, res.radius, 0).sum()
+                 / jnp.maximum(res.center_valid.sum(), 1))
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    cfg = GeekConfig(m=16, t=32, bucket_k=2, bucket_l=12, silk_l=4, delta=5,
+                     k_max=128, pair_cap=8192)
+
+    print("== dense (Sift-like, Euclidean) ==")
+    d = synthetic.sift_like(key, n=4000, k=32)
+    t0 = time.time()
+    res = fit_dense(d.x, jax.random.PRNGKey(1), cfg)
+    jax.block_until_ready(res.labels)
+    print(f"  GEEK: k*={int(res.k_star)} (discovered, not pre-specified) "
+          f"purity={purity(res.labels, d.true_labels):.3f} "
+          f"mean_radius={mean_radius(res):.4f} time={time.time()-t0:.1f}s")
+    r = baselines.seed_then_assign(d.x, int(res.k_star), jax.random.PRNGKey(2),
+                                   method="random")
+    rr = float(jnp.where(r.center_valid, r.radius, 0).sum()
+               / r.center_valid.sum())
+    print(f"  random seeding + one pass (same k): mean_radius={rr:.4f}")
+
+    print("== heterogeneous (GeoNames-like, 1-Jaccard) ==")
+    h = synthetic.geonames_like(key, n=3000, k=16)
+    res = fit_hetero(h.x_num, h.x_cat, jax.random.PRNGKey(1), cfg)
+    print(f"  GEEK: k*={int(res.k_star)} "
+          f"purity={purity(res.labels, h.true_labels):.3f} "
+          f"mean_radius={mean_radius(res):.4f}")
+
+    print("== sparse (URL-like, Jaccard via DOPH) ==")
+    s = synthetic.url_like(key, n=2000, k=16)
+    res = fit_sparse(s.sets, s.mask, jax.random.PRNGKey(1), cfg)
+    print(f"  GEEK: k*={int(res.k_star)} "
+          f"purity={purity(res.labels, s.true_labels):.3f} "
+          f"mean_radius={mean_radius(res):.4f}")
+
+
+if __name__ == "__main__":
+    main()

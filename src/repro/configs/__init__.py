@@ -1,0 +1,35 @@
+"""Assigned-architecture registry: ``get_arch(name)`` / ``list_archs()``.
+
+Each module defines CONFIG (the exact assigned dimensions) and
+SMOKE_CONFIG (a reduced same-family config for CPU smoke tests).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ArchConfig
+
+ARCH_IDS = [
+    "smollm_360m",
+    "granite_34b",
+    "qwen3_0_6b",
+    "qwen1_5_0_5b",
+    "jamba_v0_1_52b",
+    "internvl2_1b",
+    "rwkv6_1_6b",
+    "kimi_k2_1t_a32b",
+    "llama4_maverick_400b_a17b",
+    "musicgen_medium",
+]
+
+_ALIASES = {i.replace("_", "-"): i for i in ARCH_IDS}
+
+
+def get_arch(name: str, smoke: bool = False) -> ArchConfig:
+    name = _ALIASES.get(name, name)
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.SMOKE_CONFIG if smoke else mod.CONFIG
+
+
+def list_archs() -> list[str]:
+    return list(ARCH_IDS)

@@ -1,0 +1,9 @@
+"""GEEK core: the paper's contribution as composable JAX modules."""
+from repro.core.geek import (  # noqa: F401
+    GeekConfig,
+    GeekResult,
+    fit_dense,
+    fit_hetero,
+    fit_sparse,
+)
+from repro.core.silk import SeedPairs, Seeds, silk_seeding  # noqa: F401

@@ -1,0 +1,133 @@
+"""Central vectors + one-pass data assignment (paper §3.3).
+
+Central vectors:
+- homogeneous dense  -> centroid (segment-mean over seed-group members)
+- hetero / sparse    -> per-attribute mode over the unified categorical codes
+  (sort-based segment mode: no (k, d, cardinality) one-hot blow-up)
+
+Assignment: a single nearest-central-vector pass. The hot loop is the
+O(n·d·k) fused distance+argmin — Pallas kernel on TPU
+(`repro.kernels.distance_argmin`), pure-jnp here as oracle/CPU path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.silk import Seeds
+from repro.utils.hashing import run_starts
+
+
+# ---------------------------------------------------------------------------
+# Central vectors
+# ---------------------------------------------------------------------------
+
+def centroid_centers(x: jax.Array, seeds: Seeds) -> tuple[jax.Array, jax.Array]:
+    """(k_max, d) centroids + (k_max,) validity from seed-group members."""
+    k_max = seeds.k_max
+    g = jnp.where(seeds.valid, seeds.group, k_max)
+    w = seeds.valid.astype(x.dtype)
+    sums = jax.ops.segment_sum(x[seeds.id] * w[:, None], g, num_segments=k_max + 1)[:k_max]
+    cnt = jax.ops.segment_sum(w, g, num_segments=k_max + 1)[:k_max]
+    centers = sums / jnp.maximum(cnt, 1.0)[:, None]
+    return centers, cnt > 0
+
+
+def mode_centers(codes: jax.Array, seeds: Seeds, *, attr_chunk: int = 64
+                 ) -> tuple[jax.Array, jax.Array]:
+    """(k_max, d) per-attribute modes + validity, via sort-based counting.
+
+    For each (group, attribute) cell: mode = value with the largest member
+    count (ties -> smallest value, deterministic). Works for arbitrary
+    32-bit code cardinality (DOPH codes included).
+    """
+    k_max = seeds.k_max
+    c = seeds.id.shape[0]
+    d = codes.shape[1]
+    g = jnp.where(seeds.valid, seeds.group, k_max)
+    member_codes = codes[seeds.id].astype(jnp.int32)      # (C, d)
+    cnt = jax.ops.segment_sum(seeds.valid.astype(jnp.int32), g,
+                              num_segments=k_max + 1)[:k_max]
+
+    out = []
+    for a0 in range(0, d, attr_chunk):
+        a1 = min(a0 + attr_chunk, d)
+        w = a1 - a0
+        vals = member_codes[:, a0:a1].T.reshape(-1)       # (w*C,)
+        cell = (jnp.broadcast_to(jnp.arange(w, dtype=jnp.int32)[:, None] * (k_max + 1), (w, c))
+                + g[None, :]).reshape(-1)                 # (w*C,) cell = attr*(k+1)+grp
+        valid = jnp.broadcast_to(seeds.valid, (w, c)).reshape(-1)
+        order = jnp.lexsort((vals, cell, ~valid))
+        cell_s, val_s, v_s = cell[order], vals[order], valid[order]
+        starts = run_starts(cell_s, val_s, valid=v_s)
+        run_id = jnp.cumsum(starts.astype(jnp.int32)) - 1
+        counts = jax.ops.segment_sum(v_s.astype(jnp.int32), run_id,
+                                     num_segments=w * c)
+        ncells = w * (k_max + 1)
+        run_cnt = jnp.where(starts, counts[run_id], 0)
+        best_cnt = jax.ops.segment_max(run_cnt, cell_s, num_segments=ncells)
+        is_best = starts & (run_cnt == best_cnt[cell_s]) & (run_cnt > 0)
+        big = jnp.int32(jnp.iinfo(jnp.int32).max)
+        mode = jax.ops.segment_min(jnp.where(is_best, val_s, big), cell_s,
+                                   num_segments=ncells)
+        out.append(mode.reshape(w, k_max + 1)[:, :k_max].T)  # (k_max, w)
+    centers = jnp.concatenate(out, axis=1)
+    centers = jnp.where((cnt > 0)[:, None], centers, 0)
+    return centers, cnt > 0
+
+
+# ---------------------------------------------------------------------------
+# One-pass assignment (jnp path; Pallas kernel in repro.kernels)
+# ---------------------------------------------------------------------------
+
+def assign_l2(x: jax.Array, centers: jax.Array, center_valid: jax.Array,
+              *, block: int = 4096) -> tuple[jax.Array, jax.Array]:
+    """Nearest centroid under Euclidean distance. Returns (labels, sq_dists)."""
+    csq = jnp.sum(centers * centers, axis=-1)
+    inf = jnp.array(jnp.finfo(x.dtype).max, x.dtype)
+
+    def chunk(xb):
+        xsq = jnp.sum(xb * xb, axis=-1, keepdims=True)
+        d2 = xsq - 2.0 * (xb @ centers.T) + csq[None, :]
+        d2 = jnp.where(center_valid[None, :], d2, inf)
+        lab = jnp.argmin(d2, axis=-1)
+        return lab.astype(jnp.int32), jnp.maximum(jnp.min(d2, axis=-1), 0.0)
+
+    return _blocked(chunk, x, block)
+
+
+def assign_hamming(codes: jax.Array, centers: jax.Array, center_valid: jax.Array,
+                   *, block: int = 4096) -> tuple[jax.Array, jax.Array]:
+    """Nearest center under attribute-mismatch count (≈ 1-Jaccard on
+    minwise codes: P[code match] = J). Returns (labels, mismatch counts)."""
+    d = codes.shape[1]
+    big = jnp.int32(d + 1)
+
+    def chunk(xb):
+        eq = (xb[:, None, :] == centers[None, :, :]).sum(axis=-1)
+        dist = d - eq
+        dist = jnp.where(center_valid[None, :], dist, big)
+        lab = jnp.argmin(dist, axis=-1)
+        return lab.astype(jnp.int32), jnp.min(dist, axis=-1).astype(jnp.float32)
+
+    return _blocked(chunk, codes, block)
+
+
+def _blocked(fn, x, block):
+    n = x.shape[0]
+    if n <= block:
+        return fn(x)
+    pad = (-n) % block
+    xp = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    labs, dists = jax.lax.map(fn, xp.reshape(-1, block, *x.shape[1:]))
+    return labs.reshape(-1)[:n], dists.reshape(-1)[:n]
+
+
+def cluster_radius(dists: jax.Array, labels: jax.Array, k_max: int) -> jax.Array:
+    """Paper's effectiveness metric: per-cluster max point-center distance.
+    Clusters that received no points report radius 0."""
+    return jnp.maximum(jax.ops.segment_max(dists, labels, num_segments=k_max), 0.0)
+
+
+def cluster_sizes(labels: jax.Array, k_max: int) -> jax.Array:
+    return jax.ops.segment_sum(jnp.ones_like(labels), labels, num_segments=k_max)

@@ -1,0 +1,160 @@
+"""Baselines the paper compares against (§4.1): Lloyd, k-means++ seeding,
+random seeding, sampled k-means (FAISS-style 256·k subsample), and k-modes.
+
+All share GEEK's assignment primitives so timing comparisons isolate the
+seeding/iteration strategy, exactly as in the paper's Figure 5/6 setup.
+(Yinyang is an exactness-preserving Lloyd accelerator; on TPU the fused
+assignment kernel plays that role, so Lloyd is the iteration baseline.)
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import assign as assign_mod
+
+
+class KMeansResult(NamedTuple):
+    labels: jax.Array
+    dists: jax.Array
+    centers: jax.Array
+    center_valid: jax.Array
+    radius: jax.Array
+    iters: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Seeding
+# ---------------------------------------------------------------------------
+
+def random_seeds(x: jax.Array, k: int, key: jax.Array) -> jax.Array:
+    idx = jax.random.choice(key, x.shape[0], (k,), replace=False)
+    return x[idx]
+
+
+def kmeanspp_seeds(x: jax.Array, k: int, key: jax.Array) -> jax.Array:
+    """k-means++ D^2 sampling (Arthur & Vassilvitskii '07): O(ndk), k rounds."""
+    n = x.shape[0]
+    xsq = jnp.sum(x * x, axis=-1)
+    k0, key = jax.random.split(key)
+    first = x[jax.random.randint(k0, (), 0, n)]
+
+    def step(d2, subkey):
+        probs = jnp.maximum(d2, 0.0)
+        probs = probs / jnp.maximum(probs.sum(), 1e-30)
+        idx = jax.random.choice(subkey, n, (), p=probs)
+        c = x[idx]
+        d2_new = jnp.minimum(d2, xsq - 2.0 * (x @ c) + jnp.sum(c * c))
+        return d2_new, c
+
+    d2 = xsq - 2.0 * (x @ first) + jnp.sum(first * first)
+    keys = jax.random.split(key, k - 1)
+    _, rest = jax.lax.scan(step, d2, keys)
+    return jnp.concatenate([first[None], rest], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Lloyd iterations (Euclidean)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k", "iters", "init", "block"))
+def lloyd(x: jax.Array, k: int, key: jax.Array, *, iters: int = 25,
+          init: str = "random", block: int = 4096) -> KMeansResult:
+    if init == "random":
+        centers = random_seeds(x, k, key)
+    elif init == "kmeans++":
+        centers = kmeanspp_seeds(x, k, key)
+    else:
+        raise ValueError(init)
+    return _lloyd_iterate(x, centers, iters, block)
+
+
+def _lloyd_iterate(x, centers, iters, block):
+    k = centers.shape[0]
+    valid0 = jnp.ones((k,), bool)
+
+    def body(_, carry):
+        centers, valid = carry
+        labels, _ = assign_mod.assign_l2(x, centers, valid, block=block)
+        sums = jax.ops.segment_sum(x, labels, num_segments=k)
+        cnt = jax.ops.segment_sum(jnp.ones((x.shape[0],), x.dtype), labels,
+                                  num_segments=k)
+        new = sums / jnp.maximum(cnt, 1.0)[:, None]
+        keep = cnt > 0
+        return jnp.where(keep[:, None], new, centers), keep
+
+    centers, valid = jax.lax.fori_loop(0, iters, body, (centers, valid0))
+    labels, d2 = assign_mod.assign_l2(x, centers, valid, block=block)
+    dists = jnp.sqrt(d2)
+    radius = assign_mod.cluster_radius(dists, labels, k)
+    return KMeansResult(labels, dists, centers, valid, radius,
+                        jnp.int32(iters))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters", "sample_per_k", "block"))
+def sampled_kmeans(x: jax.Array, k: int, key: jax.Array, *, iters: int = 25,
+                   sample_per_k: int = 256, block: int = 4096) -> KMeansResult:
+    """FAISS-style: train k-means on a uniform 256·k subsample, then one
+    full assignment pass (the paper's Sift1B scalability comparison)."""
+    n = x.shape[0]
+    s = min(sample_per_k * k, n)
+    ks, kc = jax.random.split(key)
+    idx = jax.random.choice(ks, n, (s,), replace=False)
+    sub = lloyd(x[idx], k, kc, iters=iters, block=block)
+    labels, d2 = assign_mod.assign_l2(x, sub.centers, sub.center_valid, block=block)
+    dists = jnp.sqrt(d2)
+    radius = assign_mod.cluster_radius(dists, labels, k)
+    return KMeansResult(labels, dists, sub.centers, sub.center_valid, radius,
+                        jnp.int32(iters))
+
+
+# ---------------------------------------------------------------------------
+# k-modes (categorical codes, Huang '98) — paper's hetero/sparse baseline
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k", "iters", "block"))
+def kmodes(codes: jax.Array, k: int, key: jax.Array, *, iters: int = 10,
+           block: int = 4096) -> KMeansResult:
+    n, d = codes.shape
+    idx = jax.random.choice(key, n, (k,), replace=False)
+    centers = codes[idx]
+    valid0 = jnp.ones((k,), bool)
+
+    from repro.core.silk import Seeds  # mode update reuses the seed machinery
+
+    def body(_, carry):
+        centers, valid = carry
+        labels, _ = assign_mod.assign_hamming(codes, centers, valid, block=block)
+        seeds = Seeds(group=labels, id=jnp.arange(n, dtype=jnp.int32),
+                      valid=jnp.ones((n,), bool), k_star=jnp.int32(k), k_max=k)
+        new, keep = assign_mod.mode_centers(codes, seeds)
+        return jnp.where(keep[:, None], new, centers), keep
+
+    centers, valid = jax.lax.fori_loop(0, iters, body, (centers, valid0))
+    labels, dist = assign_mod.assign_hamming(codes, centers, valid, block=block)
+    dists = dist / d
+    radius = assign_mod.cluster_radius(dists, labels, k)
+    return KMeansResult(labels, dists, centers, valid, radius, jnp.int32(iters))
+
+
+# ---------------------------------------------------------------------------
+# Seeding-only entry points (paper Figure 6: seed, then ONE assignment pass)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k", "method", "block"))
+def seed_then_assign(x: jax.Array, k: int, key: jax.Array, *,
+                     method: str = "kmeans++", block: int = 4096) -> KMeansResult:
+    if method == "kmeans++":
+        centers = kmeanspp_seeds(x, k, key)
+    elif method == "random":
+        centers = random_seeds(x, k, key)
+    else:
+        raise ValueError(method)
+    valid = jnp.ones((k,), bool)
+    labels, d2 = assign_mod.assign_l2(x, centers, valid, block=block)
+    dists = jnp.sqrt(d2)
+    radius = assign_mod.cluster_radius(dists, labels, k)
+    return KMeansResult(labels, dists, centers, valid, radius, jnp.int32(0))

@@ -1,0 +1,97 @@
+"""Unified bucket format (paper §3.1): every data type becomes BucketTables.
+
+A `BucketTables` is T hash tables over the same n objects. In table t,
+object `ids[t, p]` lives in bucket `segments[t, p]` (dense per-table index,
+ascending along p). Exactly one entry per (table, object): the flattened
+view has T·n entries — the quantity N_B·D_B that drives SILK's complexity
+(paper §3.5).
+
+Two construction paths:
+- `partition_even`        : QALSH rank-partition, homogeneous dense data
+                            (Algorithm 1 — sort each table, cut into t buckets)
+- `partition_by_signature`: MinHash (K, L) static bucketing, heterogeneous /
+                            sparse data (Algorithms 2 & 3)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.hashing import run_starts
+
+
+class BucketTables(NamedTuple):
+    ids: jax.Array          # (T, n) int32 — data ids, sorted by bucket within table
+    segments: jax.Array     # (T, n) int32 — dense bucket index within table
+    num_buckets: jax.Array  # (T,)  int32 — # non-empty buckets per table
+    buckets_per_table: int  # static cap on buckets per table (t or n)
+
+    @property
+    def num_tables(self) -> int:
+        return self.ids.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.ids.shape[1]
+
+    @property
+    def total_bucket_cap(self) -> int:
+        return self.num_tables * self.buckets_per_table
+
+    def flatten(self) -> tuple[jax.Array, jax.Array]:
+        """(T·n,) ids and *global* segment ids (table-offset applied)."""
+        T, n = self.ids.shape
+        offs = (jnp.arange(T, dtype=jnp.int32) * self.buckets_per_table)[:, None]
+        return self.ids.reshape(-1), (self.segments + offs).reshape(-1)
+
+
+def partition_even(h: jax.Array, t: int) -> BucketTables:
+    """Algorithm 1: sort each hash table, evenly partition into t buckets.
+
+    h: (n, m) QALSH values. Bucket of the rank-r object is floor(r·t/n), so
+    bucket sizes differ by at most one — the paper's granularity-control
+    replacement for the hard-to-tune bucket width w.
+    """
+    n, m = h.shape
+    order = jnp.argsort(h, axis=0)                      # (n, m) — ids by rank
+    ranks = jnp.arange(n, dtype=jnp.int32)
+    seg = (ranks * t // n).astype(jnp.int32)            # (n,) even partition
+    ids = order.T.astype(jnp.int32)                     # (m, n)
+    segments = jnp.broadcast_to(seg, (m, n))
+    return BucketTables(ids, segments, jnp.full((m,), t, jnp.int32), t)
+
+
+def partition_by_boundaries(h: jax.Array, boundaries: jax.Array) -> BucketTables:
+    """Distributed variant of Algorithm 1: bucket via precomputed quantile
+    boundaries (t-1 per table) instead of a global sort. Used by the
+    shard_map pipeline — see DESIGN.md §2 (sample-quantile adaptation).
+    """
+    n, m = h.shape
+    t = boundaries.shape[1] + 1
+    # bucket id per object = #boundaries below its hash value
+    bid = jax.vmap(jnp.searchsorted, in_axes=(1, 1))(boundaries, h)  # (m, n)
+    bid = bid.astype(jnp.int32)
+    order = jnp.argsort(bid, axis=1)
+    ids = jnp.take_along_axis(
+        jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (m, n)), order, axis=1)
+    segments = jnp.take_along_axis(bid, order, axis=1)
+    return BucketTables(ids, segments, jnp.full((m,), t, jnp.int32), t)
+
+
+def partition_by_signature(sigs: jax.Array) -> BucketTables:
+    """Algorithms 2 & 3: group objects whose (K-fold) MinHash signatures
+    collide. sigs: (L, n) uint32. Buckets per table ≤ n (cap = n).
+    """
+    L, n = sigs.shape
+
+    def one_table(sig):
+        order = jnp.argsort(sig)
+        ss = sig[order]
+        starts = run_starts(ss)
+        seg = jnp.cumsum(starts.astype(jnp.int32)) - 1
+        return order.astype(jnp.int32), seg, seg[-1] + 1
+
+    ids, segments, nb = jax.vmap(one_table)(sigs)
+    return BucketTables(ids, segments, nb.astype(jnp.int32), n)

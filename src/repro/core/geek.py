@@ -1,0 +1,163 @@
+"""GEEK — the end-to-end generic clustering pipeline (paper §3, Figure 1).
+
+    data  --[LSH family for the data's metric]-->  buckets
+    buckets --[SILK]--> seed groups (k* discovered, not pre-specified)
+    seeds --[central vectors + ONE assignment pass]--> clusters
+
+Three entry points, one per data type (paper Algorithms 1-3):
+  - fit_dense(x)              Euclidean, QALSH rank-partition buckets
+  - fit_hetero(x_num, x_cat)  1-Jaccard on attribute-value sets, MinHash buckets
+  - fit_sparse(sets, mask)    Jaccard on sets, DOPH -> MinHash buckets
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import assign as assign_mod
+from repro.core import lsh
+from repro.core.buckets import BucketTables, partition_by_signature, partition_even
+from repro.core.silk import Seeds, silk_seeding
+from repro.utils.hashing import combine2_u32, derive_hash_keys
+
+
+@dataclasses.dataclass(frozen=True)
+class GeekConfig:
+    # -- data transformation (paper §3.1) --
+    m: int = 40            # QALSH hash tables (homogeneous dense)
+    t: int = 64            # buckets per QALSH table (granularity knob)
+    bucket_k: int = 3      # K for MinHash (K, L) bucketing (hetero/sparse)
+    bucket_l: int = 20     # L for MinHash (K, L) bucketing
+    t_cat: int = 16        # discretization bins for numeric attributes (hetero)
+    doph_m: int = 64       # DOPH output dimensionality (sparse)
+    # -- SILK (paper §3.2) --
+    silk_k: int = 3        # K (paper default)
+    silk_l: int = 5        # L for SILK rounds
+    delta: int = 10        # seeding threshold
+    # -- static shape budgets --
+    k_max: int = 1024      # max seed groups kept (top-k_max by size)
+    pair_cap: int = 1 << 16
+    # -- assignment --
+    assign_block: int = 4096
+    use_pallas: bool = False  # fused Pallas distance+argmin (TPU); jnp otherwise
+
+
+class GeekResult(NamedTuple):
+    labels: jax.Array        # (n,) int32
+    dists: jax.Array         # (n,) distance to assigned center
+    centers: jax.Array       # (k_max, d) centroids or modes
+    center_valid: jax.Array  # (k_max,) bool
+    k_star: jax.Array        # () int32 — discovered #clusters
+    radius: jax.Array        # (k_max,) per-cluster max distance
+    seeds: Seeds
+    overflow: jax.Array      # () int32 — static-budget truncation diagnostic
+
+
+def _finish_dense(x, seeds: Seeds, cfg: GeekConfig, overflow):
+    centers, cvalid = assign_mod.centroid_centers(x, seeds)
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        labels, d2 = kops.distance_argmin_l2(x, centers, cvalid)
+    else:
+        labels, d2 = assign_mod.assign_l2(x, centers, cvalid, block=cfg.assign_block)
+    dists = jnp.sqrt(d2)
+    radius = assign_mod.cluster_radius(dists, labels, cfg.k_max)
+    return GeekResult(labels, dists, centers, cvalid, seeds.k_star, radius,
+                      seeds, overflow)
+
+
+def _finish_codes(codes, seeds: Seeds, cfg: GeekConfig, overflow):
+    centers, cvalid = assign_mod.mode_centers(codes, seeds)
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        labels, dists = kops.distance_argmin_hamming(codes, centers, cvalid)
+    else:
+        labels, dists = assign_mod.assign_hamming(codes, centers, cvalid,
+                                                  block=cfg.assign_block)
+    dists = dists / codes.shape[1]  # normalize to ≈ (1 - Jaccard)
+    radius = assign_mod.cluster_radius(dists, labels, cfg.k_max)
+    return GeekResult(labels, dists, centers, cvalid, seeds.k_star, radius,
+                      seeds, overflow)
+
+
+# ---------------------------------------------------------------------------
+# Homogeneous dense (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def fit_dense(x: jax.Array, key: jax.Array, cfg: GeekConfig) -> GeekResult:
+    k_proj, k_silk = jax.random.split(key)
+    a = lsh.qalsh_projections(k_proj, x.shape[1], cfg.m, dtype=x.dtype)
+    buckets = partition_even(lsh.qalsh_hash(x, a), cfg.t)
+    seeds, overflow = silk_seeding(buckets, k_silk, silk_k=cfg.silk_k,
+                                   silk_l=cfg.silk_l, delta=cfg.delta,
+                                   pair_cap=cfg.pair_cap, k_max=cfg.k_max)
+    return _finish_dense(x, seeds, cfg, overflow)
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous dense (Algorithm 2)
+# ---------------------------------------------------------------------------
+
+def discretize_numeric(x_num: jax.Array, t_cat: int) -> jax.Array:
+    """Rank-partition each numeric attribute into t_cat categorical codes
+    (the paper reuses the homogeneous even-partition trick per attribute)."""
+    n = x_num.shape[0]
+    ranks = jnp.argsort(jnp.argsort(x_num, axis=0), axis=0)
+    return (ranks * t_cat // n).astype(jnp.int32)
+
+
+def hetero_codes(x_num: jax.Array, x_cat: jax.Array, t_cat: int) -> jax.Array:
+    """Unified categorical codes: discretized numeric ++ raw categorical."""
+    parts = []
+    if x_num is not None and x_num.shape[1] > 0:
+        parts.append(discretize_numeric(x_num, t_cat))
+    if x_cat is not None and x_cat.shape[1] > 0:
+        parts.append(x_cat.astype(jnp.int32))
+    return jnp.concatenate(parts, axis=1)
+
+
+def _code_items(codes: jax.Array, key: jax.Array) -> jax.Array:
+    """Attribute-value pairs as hashed set items: item_j = H(j, code_j)."""
+    (hk,) = derive_hash_keys(key, (1,))
+    dims = jnp.arange(codes.shape[1], dtype=jnp.int32)[None, :]
+    return combine2_u32(jnp.broadcast_to(dims, codes.shape), codes, hk[0], hk[1])
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def fit_hetero(x_num: jax.Array, x_cat: jax.Array, key: jax.Array,
+               cfg: GeekConfig) -> GeekResult:
+    k_item, k_sig, k_silk = jax.random.split(key, 3)
+    codes = hetero_codes(x_num, x_cat, cfg.t_cat)
+    items = _code_items(codes, k_item)
+    sig_keys = derive_hash_keys(k_sig, (cfg.bucket_l, cfg.bucket_k))
+    sigs = lsh.minhash_signatures(items, jnp.ones_like(items, bool), sig_keys)
+    buckets = partition_by_signature(sigs)
+    seeds, overflow = silk_seeding(buckets, k_silk, silk_k=cfg.silk_k,
+                                   silk_l=cfg.silk_l, delta=cfg.delta,
+                                   pair_cap=cfg.pair_cap, k_max=cfg.k_max)
+    return _finish_codes(codes, seeds, cfg, overflow)
+
+
+# ---------------------------------------------------------------------------
+# Sparse (Algorithm 3)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def fit_sparse(sets: jax.Array, mask: jax.Array, key: jax.Array,
+               cfg: GeekConfig) -> GeekResult:
+    k_doph, k_item, k_sig, k_silk = jax.random.split(key, 4)
+    codes = lsh.doph_codes(sets, mask, k_doph, cfg.doph_m)     # (n, doph_m)
+    codes = (codes >> jnp.uint32(16)).astype(jnp.int32)        # 16-bit codes
+    items = _code_items(codes, k_item)
+    sig_keys = derive_hash_keys(k_sig, (cfg.bucket_l, cfg.bucket_k))
+    sigs = lsh.minhash_signatures(items, jnp.ones_like(items, bool), sig_keys)
+    buckets = partition_by_signature(sigs)
+    seeds, overflow = silk_seeding(buckets, k_silk, silk_k=cfg.silk_k,
+                                   silk_l=cfg.silk_l, delta=cfg.delta,
+                                   pair_cap=cfg.pair_cap, k_max=cfg.k_max)
+    return _finish_codes(codes, seeds, cfg, overflow)

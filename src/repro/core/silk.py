@@ -1,0 +1,167 @@
+"""SILK — Seeding based on simILar bucKets (paper §3.2, Algorithm 4).
+
+Pipeline per SILK hash table:
+  1. MinHash each *bucket* (a set of data ids) into a K-fold signature.
+  2. Buckets with colliding signatures form a *bin*.
+  3. Majority voting inside each bin: ids present in more than half of the
+     bin's buckets form the shared core C_shared.
+  4. Cores with |C_shared| >= delta become candidate seed groups.
+Repeating for L tables over-generates near-duplicate cores, so one more
+SILK round over the cores themselves (min_bin_size=1, delta=1) performs the
+paper's near-duplicate removal.
+
+Everything is expressed as fixed-shape sort + segment ops (TPU-native
+equivalent of the paper's GPU hash tables — see DESIGN.md §2). The rounds
+are vmapped over the L SILK tables.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.buckets import BucketTables
+from repro.core.lsh import minhash_over_segments
+from repro.utils.hashing import derive_hash_keys, run_starts
+
+
+class SeedPairs(NamedTuple):
+    """Padded (group, id) membership pairs for candidate seed groups."""
+    group: jax.Array       # (C,) int32 — dense group index, -1 when invalid
+    id: jax.Array          # (C,) int32 — data id
+    valid: jax.Array       # (C,) bool
+    num_groups: jax.Array  # ()  int32
+    overflow: jax.Array    # ()  int32 — pairs dropped by the static cap
+
+
+class Seeds(NamedTuple):
+    """Final seed groups after dedup + top-k_max selection."""
+    group: jax.Array       # (C,) int32 in [0, k_max) or -1
+    id: jax.Array          # (C,) int32
+    valid: jax.Array       # (C,) bool
+    k_star: jax.Array      # ()  int32 — discovered number of seeds (paper: k*)
+    k_max: int             # static budget
+
+
+def _compact_pairs(group, ids, valid, cap: int):
+    """Keep at most ``cap`` pairs, lowest group ids first (deterministic)."""
+    invalid = ~valid
+    order = jnp.lexsort((ids, group, invalid))
+    overflow = jnp.maximum(valid.sum() - cap, 0)
+    take = order[:cap]
+    return group[take], ids[take], valid[take], overflow
+
+
+def silk_round(
+    flat_ids: jax.Array,      # (P,) int32 — bucket member ids
+    flat_seg: jax.Array,      # (P,) int32 — global bucket index in [0, nbcap)
+    entry_valid: jax.Array,   # (P,) bool
+    nbcap: int,               # static cap on #buckets
+    keys: jax.Array,          # (K, 2) uint32 minhash keys for this table
+    delta: int,               # seeding threshold (paper: delta)
+    min_bin_size: int,        # 2 for seeding (skip |Bin|<=1), 1 for dedup
+    pair_cap: int,
+) -> SeedPairs:
+    """One SILK table: bucket-minhash -> bins -> majority vote -> cores."""
+    P = flat_ids.shape[0]
+    ones = entry_valid.astype(jnp.int32)
+
+    # -- bucket signatures + sizes -----------------------------------------
+    sizes = jax.ops.segment_sum(ones, flat_seg, num_segments=nbcap)
+    sig = minhash_over_segments(flat_ids, flat_seg, nbcap, keys, valid=entry_valid)
+    bucket_valid = sizes > 0
+
+    # -- bins: group buckets by signature ----------------------------------
+    border = jnp.lexsort((sig, ~bucket_valid))           # valid first, by sig
+    sig_s = sig[border]
+    bval_s = bucket_valid[border]
+    bstarts = run_starts(sig_s, valid=bval_s)
+    bin_id_s = jnp.cumsum(bstarts.astype(jnp.int32)) - 1
+    bin_of_bucket = jnp.zeros((nbcap,), jnp.int32).at[border].set(bin_id_s)
+    bin_nbuckets = jax.ops.segment_sum(bval_s.astype(jnp.int32), bin_id_s,
+                                       num_segments=nbcap)
+
+    # -- majority voting over (bin, id) pairs -------------------------------
+    ebin = bin_of_bucket[flat_seg]
+    eorder = jnp.lexsort((flat_ids, ebin, ~entry_valid))
+    eb_s = ebin[eorder]
+    id_s = flat_ids[eorder]
+    ev_s = entry_valid[eorder]
+    rstarts = run_starts(eb_s, id_s, valid=ev_s)
+    run_id = jnp.cumsum(rstarts.astype(jnp.int32)) - 1
+    counts = jax.ops.segment_sum(ev_s.astype(jnp.int32), run_id, num_segments=P)
+    cnt_here = counts[run_id]
+    nb_here = bin_nbuckets[eb_s]
+    maj = rstarts & (cnt_here * 2 > nb_here) & (nb_here >= min_bin_size)
+
+    # -- seed-group selection: |C_shared| >= delta ---------------------------
+    core_size = jax.ops.segment_sum(maj.astype(jnp.int32), eb_s, num_segments=nbcap)
+    keep_bin = core_size >= delta
+    new_group_of_bin = jnp.cumsum(keep_bin.astype(jnp.int32)) - 1
+    num_groups = keep_bin.sum().astype(jnp.int32)
+
+    out_valid = maj & keep_bin[eb_s]
+    out_group = jnp.where(out_valid, new_group_of_bin[eb_s], -1)
+    g, i, v, overflow = _compact_pairs(out_group, id_s, out_valid, pair_cap)
+    return SeedPairs(g, i, v, num_groups, overflow)
+
+
+def select_top_groups(pairs: SeedPairs, group_cap: int, k_max: int) -> Seeds:
+    """Keep the k_max largest groups (static budget; paper §3.3 generates
+    'more seeds than needed' — the budget is how we bound shapes)."""
+    sizes = jax.ops.segment_sum(pairs.valid.astype(jnp.int32),
+                                jnp.where(pairs.valid, pairs.group, group_cap),
+                                num_segments=group_cap + 1)[:group_cap]
+    top_sizes, top_idx = jax.lax.top_k(sizes, k_max)
+    remap = jnp.full((group_cap + 1,), -1, jnp.int32)
+    remap = remap.at[top_idx].set(
+        jnp.where(top_sizes > 0, jnp.arange(k_max, dtype=jnp.int32), -1))
+    new_group = remap[jnp.where(pairs.valid, pairs.group, group_cap)]
+    valid = pairs.valid & (new_group >= 0)
+    k_star = (top_sizes > 0).sum().astype(jnp.int32)
+    return Seeds(jnp.where(valid, new_group, -1), pairs.id, valid, k_star, k_max)
+
+
+def silk_seeding(
+    buckets: BucketTables,
+    key: jax.Array,
+    *,
+    silk_k: int,
+    silk_l: int,
+    delta: int,
+    pair_cap: int,
+    k_max: int,
+) -> tuple[Seeds, jax.Array]:
+    """Full SILK (Algorithm 4): L seeding rounds + one dedup round.
+
+    Returns (seeds, total_overflow). Overflow > 0 means the static pair
+    budget truncated candidate cores (increase ``pair_cap``).
+    """
+    flat_ids, flat_seg = buckets.flatten()
+    entry_valid = jnp.ones_like(flat_ids, dtype=bool)
+    nbcap = buckets.total_bucket_cap
+
+    table_keys = derive_hash_keys(key, (silk_l + 1, silk_k))
+
+    rounds = jax.vmap(
+        lambda tk: silk_round(flat_ids, flat_seg, entry_valid, nbcap, tk,
+                              delta, 2, pair_cap)
+    )(table_keys[:silk_l])
+
+    # stack rounds; group ids offset per round (each round's groups < pair_cap)
+    offs = (jnp.arange(silk_l, dtype=jnp.int32) * pair_cap)[:, None]
+    cat_group = jnp.where(rounds.valid, rounds.group + offs, -1).reshape(-1)
+    cat_ids = rounds.id.reshape(-1)
+    cat_valid = rounds.valid.reshape(-1)
+    group_cap = silk_l * pair_cap
+
+    # dedup round: cores are buckets now; singleton bins are kept (a unique
+    # core bins alone and majority-votes into itself unchanged)
+    seg = jnp.where(cat_valid, cat_group, group_cap - 1)
+    dedup = silk_round(cat_ids, seg, cat_valid, group_cap,
+                       table_keys[silk_l], 1, 1, pair_cap)
+
+    seeds = select_top_groups(dedup, pair_cap, k_max)
+    overflow = rounds.overflow.sum() + dedup.overflow
+    return seeds, overflow

@@ -1,0 +1,1 @@
+from repro.distributed.compression import compressed_psum  # noqa: F401

@@ -1,0 +1,69 @@
+"""Gradient compression: int8 ring all-reduce with error feedback.
+
+A plain f32 all-reduce moves ~2·N·4 bytes per device (ring). This module
+implements the quantized equivalent with real int8 wire traffic:
+
+    1. quantize local tensor to int8 (per-tensor max scale)
+    2. reduce-scatter phase: all_to_all the int8 shards, dequantize and
+       sum locally in f32
+    3. re-quantize the reduced shard, all_gather it (int8)
+    4. dequantize with the gathered scales
+
+Wire bytes drop 4x (both phases move int8). The quantization residual can
+be carried by the caller via error feedback (`quantize` returns the
+residual) so the bias vanishes over steps — 1-bit-Adam style.
+
+Used by the shard_map DDP path (`launch/train.py --compress-grads`);
+the HLO all-to-all/all-gather show s8 operands, which the roofline
+collector counts (this is how the collective-term win is measured).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array):
+    """Per-tensor symmetric int8. Returns (q, scale, residual)."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    resid = x32 - q.astype(jnp.float32) * scale
+    return q, scale, resid
+
+
+def compressed_psum(x: jax.Array, axis_name: str):
+    """Mean over `axis_name` with int8 wire format. Call inside shard_map.
+    x: any-shape f32/bf16. Returns (mean, residual) — feed residual back
+    into the next step's gradient (error feedback)."""
+    g = jax.lax.axis_size(axis_name)
+    shape = x.shape
+    n = x.size
+    pad = (-n) % g
+    flat = jnp.pad(x.reshape(-1).astype(jnp.float32), (0, pad))
+
+    q, scale, resid = quantize_int8(flat)
+    # phase 1: reduce-scatter (int8 on the wire)
+    qs = q.reshape(g, -1)
+    recv = jax.lax.all_to_all(qs, axis_name, split_axis=0, concat_axis=0,
+                              tiled=True)
+    scales = jax.lax.all_gather(scale, axis_name)            # (g,) f32
+    # recv: (g, n/g) int8 — row j is device j's shard slice
+    local = jnp.sum(recv.reshape(g, -1).astype(jnp.float32)
+                    * scales[:, None], axis=0) / g
+    # phase 2: all-gather the reduced shard (int8 on the wire)
+    q2, scale2, _ = quantize_int8(local)
+    gq = jax.lax.all_gather(q2, axis_name)                   # (g, n/g) int8
+    gs = jax.lax.all_gather(scale2, axis_name)               # (g,)
+    out = (gq.astype(jnp.float32) * gs[:, None]).reshape(-1)[:n]
+    resid = resid[:n].reshape(shape)
+    return out.reshape(shape).astype(x.dtype), resid.astype(jnp.float32)
+
+
+def compressed_psum_tree(grads, axis_name: str):
+    """Tree version; returns (means, residuals)."""
+    flat, treedef = jax.tree_util.tree_flatten(grads)
+    outs = [compressed_psum(g, axis_name) for g in flat]
+    means = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    resids = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return means, resids

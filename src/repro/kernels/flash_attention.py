@@ -1,0 +1,111 @@
+"""Causal flash-attention (forward) Pallas TPU kernel with native GQA.
+
+Used by the serving path (prefill) of the LM architectures that exercise the
+framework substrate; training uses the XLA path (this kernel is forward-only).
+Standard online-softmax tiling:
+
+  grid = (batch, q_heads, q_tiles, kv_tiles)   kv innermost
+  scratch: acc (bq, dh) f32, running max m and sum l (bq, 1) f32
+
+GQA is handled in the BlockSpec index maps — the kv block index maps a query
+head h to kv head h·Hkv//Hq, so K/V are never materialized per-q-head
+(an HBM-bandwidth win over jnp.repeat'ing KV by the group size).
+Fully-masked kv tiles (start beyond the causal frontier) are skipped.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s,
+            *, scale: float, bq: int, bk: int, nk: int, causal: bool,
+            kv_len: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, _NEG)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    run = (ik * bk <= iq * bq + bq - 1) if causal else (ik * bk < kv_len)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, dh)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, dh)
+        v = v_ref[0, 0].astype(jnp.float32)                  # (bk, dh)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (bq, bk)
+        qi = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        ki = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = ki < kv_len  # padded keys never contribute
+        if causal:
+            mask = mask & (qi >= ki)
+        s = jnp.where(mask, s, _NEG)
+        m_new = jnp.maximum(m_s[...], jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)                               # (bq, bk)
+        corr = jnp.exp(m_s[...] - m_new)                     # (bq, 1)
+        l_s[...] = l_s[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc[...] = acc[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_s[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _flush():
+        o_ref[0, 0] = (acc[...] /
+                       jnp.maximum(l_s[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int = 256, bk: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, S, dh); k, v: (B, Hkv, S, dh); Hkv must divide Hq.
+    Returns (B, Hq, S, dh) in q.dtype. S is padded to tile multiples; the
+    causal mask keeps padded keys out of real queries' softmax."""
+    B, Hq, S, dh = q.shape
+    Hkv = k.shape[1]
+    assert Hq % Hkv == 0, "GQA requires Hkv | Hq"
+    bq = min(bq, S)
+    bk = min(bk, S)
+    spad = (-S) % max(bq, bk)
+    if spad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, spad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, spad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, spad), (0, 0)))
+    Sp = S + spad
+    nq, nk = Sp // bq, Sp // bk
+    scale = 1.0 / (dh ** 0.5)
+    group = Hq // Hkv
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, bq=bq, bk=bk, nk=nk,
+                          causal=causal, kv_len=S),
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dh), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sp, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, dh), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :S, :]

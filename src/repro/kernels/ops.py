@@ -1,0 +1,38 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On a TPU backend the kernels run compiled; anywhere else (this CPU
+container, unit tests) they run in interpret mode, which executes the
+kernel body in Python — bit-identical semantics, so the ref-vs-kernel
+allclose tests are meaningful on CPU.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import distance_argmin as _da
+from repro.kernels import flash_attention as _fa
+from repro.kernels import minhash_buckets as _mh
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def distance_argmin_l2(x, centers, center_valid, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _da.distance_argmin_l2(x, centers, center_valid, **kw)
+
+
+def distance_argmin_hamming(codes, centers, center_valid, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _da.distance_argmin_hamming(codes, centers, center_valid, **kw)
+
+
+def minhash_even_buckets(ids, keys, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _mh.minhash_even_buckets(ids, keys, **kw)
+
+
+def flash_attention(q, k, v, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _fa.flash_attention(q, k, v, **kw)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.hashing import hash_u32, mix_u32
+
+
+def distance_argmin_l2_ref(x, centers, center_valid):
+    x = x.astype(jnp.float32)
+    centers = centers.astype(jnp.float32)
+    d2 = (jnp.sum(x * x, -1, keepdims=True) - 2.0 * (x @ centers.T)
+          + jnp.sum(centers * centers, -1)[None, :])
+    d2 = jnp.where(center_valid[None, :], d2, jnp.finfo(jnp.float32).max)
+    return jnp.argmin(d2, -1).astype(jnp.int32), jnp.maximum(jnp.min(d2, -1), 0.0)
+
+
+def distance_argmin_hamming_ref(codes, centers, center_valid):
+    dist = (codes[:, None, :] != centers[None, :, :]).sum(-1).astype(jnp.int32)
+    dist = jnp.where(center_valid[None, :], dist, jnp.iinfo(jnp.int32).max)
+    return jnp.argmin(dist, -1).astype(jnp.int32), jnp.min(dist, -1)
+
+
+def minhash_even_buckets_ref(ids, keys):
+    """ids: (nb, bsz) int32, keys: (K, 2) uint32 -> (nb,) uint32."""
+    sig = jnp.zeros((ids.shape[0],), jnp.uint32)
+    for k in range(keys.shape[0]):
+        h = hash_u32(ids, keys[k, 0], keys[k, 1])
+        sig = mix_u32(sig, jnp.min(h, axis=-1))
+    return sig
+
+
+def attention_ref(q, k, v, *, causal=True):
+    """q: (B,Hq,S,dh); k,v: (B,Hkv,S,dh). GQA by head repetition."""
+    B, Hq, S, dh = q.shape
+    Hkv = k.shape[1]
+    rep = Hq // Hkv
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (dh ** 0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

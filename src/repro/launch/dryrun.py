@@ -1,0 +1,271 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST precede every other import: jax locks the device count on first
+# backend initialization. Set ONLY here — smoke tests and benches see 1 CPU.
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape ×
+mesh) cell against abstract inputs, prove the sharding config is coherent,
+and extract the roofline terms from the compiled artifact.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_0_6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both \
+        --out experiments/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_arch, list_archs
+from repro.launch import hlo_analysis
+from repro.launch.mesh import (make_production_mesh, resolve_spec,
+                               shardings_for, shardings_for_dropped)
+from repro.launch.steps import (SHAPES, abstract_caches, abstract_params,
+                                batch_specs, make_decode_step,
+                                make_prefill_step, make_train_step,
+                                shape_applicable, token_specs)
+from repro.models import cache_specs, count_active_params, count_params
+from repro.models import model as MODEL
+from repro.models import param_specs
+from repro.models.sharding import activation_sharding
+from repro.optim import adafactor, adamw
+
+# -- hardware model (TPU v5e-like) ------------------------------------------
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+HBM_PER_CHIP = 16 * 2 ** 30
+
+
+def choose_optimizer(cfg):
+    """Adafactor above 100B total params (state: ~4 B/param vs AdamW's 12 —
+    what lets kimi-k2 1T fit 512 chips; see EXPERIMENTS.md §Dry-run)."""
+    if count_params(cfg) > 100e9:
+        return adafactor(1e-3), "adafactor"
+    return adamw(3e-4), "adamw"
+
+
+def choose_train_memory_plan(cfg):
+    """(grad_accum, accum_dtype): microbatching + accumulation precision,
+    scaled to total parameter bytes so activations + grads fit 16 GiB."""
+    n = count_params(cfg)
+    if n > 100e9:
+        return 16, jnp.bfloat16
+    if n > 20e9:
+        return 8, jnp.float32
+    return 1, jnp.float32
+
+
+def lower_cell(arch: str, shape: str, *, multi_pod: bool,
+               scan_layers: bool = True, remat: bool = True,
+               extra_cfg: dict | None = None, grad_accum: int | None = None):
+    """Returns (lowered, cfg, mesh, case) or raises."""
+    cfg = get_arch(arch)
+    cfg = dataclasses.replace(cfg, scan_layers=scan_layers, remat=remat,
+                              **(extra_cfg or {}))
+    case = SHAPES[shape]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"skip: {why}")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp_total = (2 * 16) if multi_pod else 16
+    # batch-1 (long-context) cells cannot shard the batch axis
+    drop = ("dp",) if case.batch < dp_total else ()
+
+    aparams = abstract_params(cfg)
+    psh = shardings_for(param_specs(cfg), mesh)
+
+    ctx = activation_sharding(mesh, drop=drop)
+    if case.kind == "train":
+        opt, _ = choose_optimizer(cfg)
+        accum, accum_dtype = choose_train_memory_plan(cfg)
+        if grad_accum is not None:
+            accum = grad_accum
+        accum = max(1, min(accum, case.batch // dp_total))
+        astate = jax.eval_shape(opt.init, aparams)
+        ssh = shardings_for(opt.state_specs(param_specs(cfg), aparams), mesh)
+        abatch, bspecs = batch_specs(cfg, case)
+        bsh = shardings_for(bspecs, mesh)
+        astep = jax.ShapeDtypeStruct((), jnp.int32)
+        stepsh = NamedSharding(mesh, P())
+        fn = make_train_step(cfg, opt, grad_accum=accum,
+                             accum_dtype=accum_dtype)
+        with mesh, ctx:
+            lowered = jax.jit(
+                fn, in_shardings=(psh, ssh, stepsh, bsh),
+                out_shardings=(psh, ssh, stepsh, None),
+                donate_argnums=(0, 1),
+            ).lower(aparams, astate, astep, abatch)
+    elif case.kind == "prefill":
+        abatch, bspecs = batch_specs(cfg, case)
+        fn = make_prefill_step(cfg)
+        csh = shardings_for(cache_specs(cfg), mesh)
+        with mesh, ctx:
+            lowered = jax.jit(
+                fn, in_shardings=(psh, shardings_for(bspecs, mesh)["inputs"]),
+                out_shardings=(NamedSharding(mesh, resolve_spec(P("dp", "tp"),
+                                                                mesh)), csh),
+            ).lower(aparams, abatch["inputs"])
+    elif case.kind == "decode":
+        acaches = abstract_caches(cfg, case.batch, case.seq)
+        csh = shardings_for_dropped(cache_specs(cfg), mesh, drop)
+        atok, tspec = token_specs(cfg, case.batch)
+        alen = jax.ShapeDtypeStruct((), jnp.int32)
+        fn = make_decode_step(cfg)
+        with mesh, ctx:
+            lowered = jax.jit(
+                fn,
+                in_shardings=(psh, csh, NamedSharding(mesh, P()),
+                              NamedSharding(mesh, resolve_spec(tspec, mesh,
+                                                               drop=drop))),
+                out_shardings=(NamedSharding(
+                    mesh, resolve_spec(P("dp", "tp"), mesh, drop=drop)), csh),
+                donate_argnums=(1,),
+            ).lower(aparams, acaches, alen, atok)
+    else:
+        raise ValueError(case.kind)
+    return lowered, cfg, mesh, case
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool,
+             scan_layers: bool = True, remat: bool = True,
+             extra_cfg: dict | None = None, grad_accum: int | None = None,
+             verbose: bool = True) -> dict:
+    t0 = time.time()
+    row = {"arch": arch, "shape": shape,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    try:
+        lowered, cfg, mesh, case = lower_cell(
+            arch, shape, multi_pod=multi_pod, scan_layers=scan_layers,
+            remat=remat, extra_cfg=extra_cfg, grad_accum=grad_accum)
+    except ValueError as e:
+        if str(e).startswith("skip"):
+            row |= {"status": "skipped", "reason": str(e)}
+            if verbose:
+                print(f"[dryrun] {arch} × {shape} × {row['mesh']}: SKIPPED "
+                      f"({str(e)[6:]})", flush=True)
+            return row
+        raise
+    t_lower = time.time() - t0
+
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    chips = 512 if multi_pod else 256
+    ca = compiled.cost_analysis()
+    if not isinstance(ca, dict):
+        ca = ca[0]
+    ma = compiled.memory_analysis()
+    stats = hlo_analysis.analyze(compiled.as_text())
+
+    # roofline terms (seconds, per step)
+    t_compute = stats.flops / PEAK_FLOPS
+    t_memory = stats.hbm_bytes / HBM_BW
+    t_coll = stats.collective_bytes / ICI_BW
+
+    tokens = case.batch * (case.seq if case.kind != "decode" else 1)
+    n_active = count_active_params(cfg)
+    mf = (6 if case.kind == "train" else 2) * n_active * tokens
+    hlo_total_flops = stats.flops * chips
+
+    mem_bytes = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                 + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+
+    row |= {
+        "status": "ok",
+        "chips": chips,
+        "seconds_lower": round(t_lower, 1),
+        "seconds_compile": round(t_compile, 1),
+        "xla_flops_once_per_chip": ca.get("flops", 0.0),
+        "hlo_flops_per_chip": stats.flops,
+        "hbm_bytes_per_chip": stats.hbm_bytes,
+        "collective_bytes_per_chip": stats.collective_bytes,
+        "collective_counts": stats.collective_counts,
+        "memory": {
+            "argument": ma.argument_size_in_bytes,
+            "temp": ma.temp_size_in_bytes,
+            "output": ma.output_size_in_bytes,
+            "alias": ma.alias_size_in_bytes,
+            "live_bytes": mem_bytes,
+            "fits_16g": bool(mem_bytes <= HBM_PER_CHIP),
+        },
+        "roofline": {
+            "t_compute_s": t_compute,
+            "t_memory_s": t_memory,
+            "t_collective_s": t_coll,
+            "bottleneck": max(
+                [("compute", t_compute), ("memory", t_memory),
+                 ("collective", t_coll)], key=lambda kv: kv[1])[0],
+            "model_flops": mf,
+            "useful_flops_ratio": mf / max(hlo_total_flops, 1.0),
+            "step_time_bound_s": max(t_compute, t_memory, t_coll),
+            "mfu_bound": mf / max(hlo_total_flops, 1.0)
+                        * min(1.0, t_compute / max(t_compute, t_memory, t_coll)),
+        },
+    }
+    if verbose:
+        r = row["roofline"]
+        print(f"[dryrun] {arch} × {shape} × {row['mesh']}: OK "
+              f"compile={t_compile:.0f}s mem={mem_bytes/2**30:.1f}GiB "
+              f"compute={r['t_compute_s']*1e3:.1f}ms "
+              f"memory={r['t_memory_s']*1e3:.1f}ms "
+              f"coll={r['t_collective_s']*1e3:.1f}ms "
+              f"bound={r['bottleneck']} useful={r['useful_flops_ratio']:.2f}",
+              flush=True)
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--no-scan", action="store_true",
+                    help="unroll layers (slow compile, exact one-pass HLO)")
+    ap.add_argument("--out", default=None, help="JSON output directory")
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.multi_pod]
+
+    rows = []
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    row = run_cell(arch, shape, multi_pod=mp,
+                                   scan_layers=not args.no_scan)
+                except Exception as e:  # a failure here is a sharding bug
+                    failures += 1
+                    row = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "FAILED", "error": repr(e)[:500]}
+                    print(f"[dryrun] {arch} × {shape}: FAILED {e!r}",
+                          flush=True)
+                rows.append(row)
+                if args.out:
+                    os.makedirs(args.out, exist_ok=True)
+                    tag = f"{row['arch']}_{row['shape']}_{row['mesh']}"
+                    with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                        json.dump(row, f, indent=1)
+    ok = sum(r["status"] == "ok" for r in rows)
+    sk = sum(r["status"] == "skipped" for r in rows)
+    print(f"\n[dryrun] {ok} ok / {sk} skipped / {failures} failed "
+          f"of {len(rows)} cells")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,253 @@
+"""Post-SPMD HLO analysis: collective bytes + loop-corrected FLOPs/bytes.
+
+XLA's `compiled.cost_analysis()` counts a `while` body **once** (verified
+empirically — see tests/test_hlo_analysis.py), and scan-over-layers hides
+L-1 layers behind a while. This module parses `compiled.as_text()`:
+
+  - splits the module into computations,
+  - builds a call graph (while body/condition edges carry the
+    `backend_config known_trip_count`; fusion/call/to_apply edges carry 1),
+  - propagates execution multipliers from ENTRY,
+  - per computation, tallies:
+      * collective wire bytes (all-reduce / all-gather / reduce-scatter /
+        all-to-all / collective-permute), operand-size convention,
+      * dot/convolution FLOPs from shapes (catches remat re-execution),
+      * HBM bytes at fusion boundaries (control computations only).
+
+All shapes in post-SPMD HLO are per-device; totals here are per-chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%(?P<name>[^\s=]+)\s*=\s*(?P<type>\([^()]*\)|\S+)\s+"
+    r"(?P<op>[\w\-]+)\((?P<args>[^)]*)\)")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?(?P<name>[^\s(]+)\s*\((?P<sig>.*)\)\s*->")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLEE_RE = re.compile(
+    r"(body|condition|calls|to_apply|branch_computations)="
+    r"(\{[^}]*\}|%?[\w\.\-]+)")
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    args: list[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list[Op]
+    symbols: dict  # %name -> type string
+    is_entry: bool
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if not stripped or stripped.startswith(("HloModule", "//", "#")):
+            continue
+        # computation header
+        if (line.startswith(("%", "ENTRY")) and "{" in line and "->" in line):
+            m = _COMP_RE.match(line)
+            if m:
+                cur = Computation(m.group("name"), [], {},
+                                  line.startswith("ENTRY"))
+                comps[cur.name] = cur
+                # parameter types from the signature
+                for pm in re.finditer(r"([\w\.\-]+):\s*(\([^()]*\)|[^,()]+)",
+                                      m.group("sig")):
+                    cur.symbols[pm.group(1)] = pm.group(2)
+                continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            args = [a.strip().lstrip("%") for a in m.group("args").split(",")
+                    if a.strip().startswith("%")]
+            op = Op(m.group("name"), m.group("type"), m.group("op"), args,
+                    stripped)
+            cur.ops.append(op)
+            cur.symbols[op.name] = op.type_str
+    return comps
+
+
+def _callees(op: Op) -> list[tuple[str, int]]:
+    """(callee, multiplier) edges for this op."""
+    out = []
+    trip = 1
+    if op.opcode == "while":
+        tm = _TRIP_RE.search(op.line)
+        trip = int(tm.group(1)) if tm else 1
+    for kind, target in _CALLEE_RE.findall(op.line):
+        names = re.findall(r"%?([\w\.\-]+)", target)
+        for nm in names:
+            mult = trip if kind in ("body", "condition") else 1
+            out.append((nm, mult))
+    return out
+
+
+def execution_multipliers(comps: dict[str, Computation]) -> dict[str, float]:
+    """Propagate execution counts from ENTRY through the call graph."""
+    mult = {name: 0.0 for name in comps}
+    entry = next((c.name for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return {name: 1.0 for name in comps}
+    mult[entry] = 1.0
+    # topological-ish propagation; the call graph is a DAG in HLO
+    order = list(comps)
+    for _ in range(len(order)):
+        changed = False
+        new = {name: 0.0 for name in comps}
+        new[entry] = 1.0
+        for cname, comp in comps.items():
+            if mult[cname] == 0.0:
+                continue
+            for op in comp.ops:
+                for callee, m in _callees(op):
+                    if callee in new:
+                        new[callee] += mult[cname] * m
+        for k in new:
+            if new[k] != mult[k]:
+                changed = True
+        mult = new
+        if not changed:
+            break
+    return mult
+
+
+def _dot_flops(op: Op, symbols: dict) -> float:
+    result = _shape_dims(op.type_str)
+    lhs_type = symbols.get(op.args[0], "") if op.args else ""
+    lhs = _shape_dims(lhs_type)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    contract = 1
+    if m and m.group(1):
+        for d in m.group(1).split(","):
+            if int(d) < len(lhs):
+                contract *= lhs[int(d)]
+    n = 1
+    for d in result:
+        n *= d
+    return 2.0 * n * contract
+
+
+def _conv_flops(op: Op, symbols: dict) -> float:
+    result = _shape_dims(op.type_str)
+    rhs_type = symbols.get(op.args[1], "") if len(op.args) > 1 else ""
+    rhs = _shape_dims(rhs_type)
+    n = 1
+    for d in result:
+        n *= d
+    k = 1
+    for d in rhs[:-1]:  # kernel spatial * input-channels-per-group
+        k *= d
+    return 2.0 * n * k
+
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "partition-id", "replica-id", "iota",
+               "while", "conditional", "call", "custom-call"}
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0                 # per-chip, loop-corrected
+    hbm_bytes: float = 0.0             # per-chip fusion-boundary traffic
+    collective_bytes: float = 0.0      # per-chip operand-size convention
+    collective_result_bytes: float = 0.0
+    collective_counts: dict = dataclasses.field(default_factory=dict)
+    xla_flops_once: float = 0.0        # raw cost_analysis (body-once) value
+
+
+def analyze(text: str) -> HloStats:
+    comps = parse_hlo(text)
+    mult = execution_multipliers(comps)
+    # computations reached via fusion 'calls' — bytes live inside registers
+    fused: set[str] = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode in ("fusion", "reduce", "map", "sort", "scatter",
+                             "reduce-window", "select-and-scatter",
+                             "all-reduce", "reduce-scatter"):
+                for callee, _ in _callees(op):
+                    fused.add(callee)
+
+    st = HloStats()
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for op in comp.ops:
+            if op.opcode == "dot":
+                st.flops += m * _dot_flops(op, comp.symbols)
+            elif op.opcode == "convolution":
+                st.flops += m * _conv_flops(op, comp.symbols)
+            base = op.opcode
+            if base.endswith("-start"):
+                base = base[:-6]
+            if base in _COLLECTIVES:
+                operand = sum(shape_bytes(comp.symbols.get(a, ""))
+                              for a in op.args)
+                st.collective_bytes += m * operand
+                st.collective_result_bytes += m * shape_bytes(op.type_str)
+                st.collective_counts[base] = (
+                    st.collective_counts.get(base, 0) + m)
+            if cname not in fused and op.opcode not in _SKIP_BYTES \
+                    and not base.endswith("-done"):
+                if op.opcode == "dynamic-update-slice":
+                    # hardware writes only the slice; the aliased big buffer
+                    # is not re-read (scan carries would be counted L times)
+                    upd = (shape_bytes(comp.symbols.get(op.args[1], ""))
+                           if len(op.args) > 1 else 0)
+                    b = 2 * upd
+                elif op.opcode == "dynamic-slice":
+                    b = 2 * shape_bytes(op.type_str)
+                else:
+                    b = shape_bytes(op.type_str)
+                    b += sum(shape_bytes(comp.symbols.get(a, ""))
+                             for a in op.args)
+                st.hbm_bytes += m * b
+    return st

@@ -1,0 +1,80 @@
+"""Production meshes + logical-axis resolution.
+
+Everything is a function (never module-level device state) so importing
+this module does not initialize jax backends.
+
+Logical axis names used by model/optimizer specs:
+    dp   -> batch            ("pod","data")
+    fsdp -> parameter shards ("pod","data")   (ZeRO-3 via pjit)
+    tp   -> tensor/expert    ("model",)
+    sp   -> sequence (KV)    ("model",)       (flash-decode S-sharding)
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_cluster_mesh(num_devices: int | None = None):
+    """1-D mesh for the GEEK clustering driver (paper's g processes)."""
+    devs = jax.devices() if num_devices is None else jax.devices()[:num_devices]
+    return Mesh(np.array(devs), ("data",))
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    n = int(np.prod(shape))
+    return Mesh(np.array(jax.devices()[:n]).reshape(shape), axes)
+
+
+def _logical_map(mesh) -> dict:
+    names = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    tp = ("model",) if "model" in names else ()
+    return {"dp": dp, "fsdp": dp, "tp": tp, "sp": tp}
+
+
+def resolve_spec(spec: P, mesh, *, drop: tuple[str, ...] = ()) -> P:
+    """Map logical axis names in a PartitionSpec to concrete mesh axes.
+    Logical axes in `drop` (e.g. "dp" for batch-1 decode) become None."""
+    m = dict(_logical_map(mesh))
+    for a in drop:
+        m[a] = ()
+    out = []
+    for entry in tuple(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        parts = entry if isinstance(entry, tuple) else (entry,)
+        concrete: list[str] = []
+        for a in parts:
+            concrete.extend(m.get(a, (a,)))
+        if not concrete:
+            out.append(None)
+        else:
+            out.append(concrete[0] if len(concrete) == 1 else tuple(concrete))
+    return P(*out)
+
+
+def shardings_for_dropped(tree_specs, mesh, drop: tuple[str, ...]):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, resolve_spec(s, mesh, drop=drop)),
+        tree_specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def shardings_for(tree_specs, mesh):
+    """Pytree of logical PartitionSpecs -> pytree of NamedShardings."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, resolve_spec(s, mesh)), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

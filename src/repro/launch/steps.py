@@ -1,0 +1,141 @@
+"""Step factories + abstract input specs for every (arch × shape) cell.
+
+`input_specs(cfg, shape)` returns ShapeDtypeStruct stand-ins (weak-type
+correct, shardable, zero allocation) — the dry-run lowers against these.
+
+Shapes (assignment):
+    train_4k     seq 4,096   global_batch 256   -> train_step
+    prefill_32k  seq 32,768  global_batch 32    -> prefill (serve)
+    decode_32k   seq 32,768  global_batch 128   -> decode_step (serve)
+    long_500k    seq 524,288 global_batch 1     -> decode_step (serve;
+                 sub-quadratic archs only — full attention skips, DESIGN.md)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import model as MODEL
+from repro.models import transformer as T
+from repro.models.config import ArchConfig
+from repro.optim import Optimizer, clip_by_global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCase:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCase("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCase("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCase("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCase("long_500k", "decode", 524288, 1),
+}
+
+
+def shape_applicable(cfg: ArchConfig, shape: str) -> tuple[bool, str]:
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch: 500k decode skipped (DESIGN.md)"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(lambda k: MODEL.init_params(cfg, k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def abstract_caches(cfg: ArchConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        lambda: T.stack_cache_init(cfg, batch, max_len))
+
+
+def batch_specs(cfg: ArchConfig, case: ShapeCase):
+    """ShapeDtypeStructs + logical PartitionSpecs for the data batch."""
+    B, S = case.batch, case.seq
+    if MODEL.has_token_embed(cfg):
+        inputs = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        in_spec = P("dp", None)
+    else:
+        inputs = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+        in_spec = P("dp", None, None)
+    labels = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    return ({"inputs": inputs, "labels": labels},
+            {"inputs": in_spec, "labels": P("dp", None)})
+
+
+def token_specs(cfg: ArchConfig, batch: int):
+    if MODEL.has_token_embed(cfg):
+        return (jax.ShapeDtypeStruct((batch, 1), jnp.int32), P("dp", None))
+    return (jax.ShapeDtypeStruct((batch, 1, cfg.d_model), jnp.bfloat16),
+            P("dp", None, None))
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, optimizer: Optimizer,
+                    max_grad_norm: float = 1.0, grad_accum: int = 1,
+                    accum_dtype=jnp.float32):
+    """grad_accum > 1 scans over microbatches: peak activation memory drops
+    ~grad_accum x (what lets the >100B archs fit a 16 GiB chip — see
+    EXPERIMENTS.md §Dry-run). Gradients accumulate sharded in accum_dtype
+    (bf16 for the 1T-class archs, else f32)."""
+
+    def loss_fn(p, b):
+        loss, parts = MODEL.train_loss(p, cfg, b)
+        return loss, parts
+
+    def train_step(params, opt_state, step, batch):
+        if grad_accum == 1:
+            (loss, parts), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda a: a.reshape((grad_accum, a.shape[0] // grad_accum)
+                                    + a.shape[1:]), batch)
+
+            def body(carry, mb):
+                gsum, lsum = carry
+                (loss, _), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                gsum = jax.tree.map(
+                    lambda s, x: s + x.astype(accum_dtype), gsum, g)
+                return (gsum, lsum + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            (gsum, lsum), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+            loss = lsum / grad_accum
+            parts = {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        new_params, new_state = optimizer.update(grads, opt_state, params, step)
+        metrics = {"loss": loss, "grad_norm": gnorm, **parts}
+        return new_params, new_state, step + 1, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill(params, inputs):
+        return MODEL.prefill_step(params, cfg, inputs)
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig):
+    def decode(params, caches, cache_len, tokens):
+        return MODEL.decode_step(params, cfg, caches, cache_len, tokens)
+    return decode

@@ -1,0 +1,12 @@
+from repro.models.config import ArchConfig  # noqa: F401
+from repro.models.model import (  # noqa: F401
+    cache_specs,
+    count_active_params,
+    count_params,
+    decode_step,
+    forward,
+    init_params,
+    param_specs,
+    prefill_step,
+    train_loss,
+)

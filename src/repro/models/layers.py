@@ -1,0 +1,263 @@
+"""Shared transformer layers: RMSNorm, RoPE, GQA attention (+qk-norm, +bias,
++KV cache), SwiGLU MLP, embeddings, chunked cross-entropy.
+
+Every ``*_init`` has a matching ``*_spec`` returning a structurally identical
+pytree of *logical* PartitionSpecs using axis names:
+    "dp"   -> batch axes  (("pod","data") on the multi-pod mesh)
+    "fsdp" -> parameter sharding over the batch axes (ZeRO-3 via pjit)
+    "tp"   -> tensor-parallel axis ("model")
+    "sp"   -> sequence dimension sharding (long-context KV)
+`repro.launch.mesh.resolve_spec` maps logical names to concrete mesh axes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig
+from repro.models.sharding import constrain, tp_size
+
+
+def dtype_of(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    h = x.astype(jnp.float32)
+    var = jnp.mean(h * h, axis=-1, keepdims=True)
+    return (h * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def norm_init(cfg: ArchConfig, dim: int | None = None):
+    return {"scale": jnp.ones((dim or cfg.d_model,), dtype_of(cfg))}
+
+
+def norm_spec(cfg: ArchConfig):
+    return {"scale": P()}
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq        # (B, S, half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA + optional qk-norm / qkv-bias + KV cache)
+# ---------------------------------------------------------------------------
+
+def attn_init(key: jax.Array, cfg: ArchConfig):
+    hd = cfg.resolved_head_dim
+    d, hq, hkv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    std = d ** -0.5
+    dt = dtype_of(cfg)
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, hq * hd)) * std).astype(dt),
+        "wk": (jax.random.normal(ks[1], (d, hkv * hd)) * std).astype(dt),
+        "wv": (jax.random.normal(ks[2], (d, hkv * hd)) * std).astype(dt),
+        "wo": (jax.random.normal(ks[3], (hq * hd, d)) * std).astype(dt),
+    }
+    if cfg.qkv_bias:
+        p |= {"bq": jnp.zeros((hq * hd,), dt), "bk": jnp.zeros((hkv * hd,), dt),
+              "bv": jnp.zeros((hkv * hd,), dt)}
+    if cfg.qk_norm:
+        p |= {"q_norm": jnp.ones((hd,), dt), "k_norm": jnp.ones((hd,), dt)}
+    return p
+
+
+def attn_spec(cfg: ArchConfig):
+    s = {"wq": P("fsdp", "tp"), "wk": P("fsdp", "tp"), "wv": P("fsdp", "tp"),
+         "wo": P("tp", "fsdp")}
+    if cfg.qkv_bias:
+        s |= {"bq": P("tp"), "bk": P("tp"), "bv": P("tp")}
+    if cfg.qk_norm:
+        s |= {"q_norm": P(), "k_norm": P()}
+    return s
+
+
+def attn_cache_spec(cfg: ArchConfig):
+    """KV cache sharded over batch + sequence (long-context memory scaling —
+    see DESIGN.md: S-dim sharding makes XLA emit the flash-decode pattern)."""
+    return {"k": P("dp", "sp", None, None), "v": P("dp", "sp", None, None)}
+
+
+def attn_apply(p, x: jax.Array, cfg: ArchConfig, *, positions: jax.Array,
+               cache: dict | None = None, cache_len: jax.Array | None = None,
+               return_kv: bool = False):
+    """x: (B, S, d). Train/prefill: cache=None -> causal full attention
+    (return_kv=True hands back the fresh K/V so prefill can seed a cache).
+    Decode: S==1, cache holds (B, Smax, Hkv, hd); cache_len = #valid tokens.
+    Returns (y, new_cache)."""
+    B, S, d = x.shape
+    hd = cfg.resolved_head_dim
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    g = hq // hkv
+
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, hq, hd)
+    k = k.reshape(B, S, hkv, hd)
+    v = v.reshape(B, S, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    scale = hd ** -0.5
+    if cache is None:
+        # score-sharding mode: prefer a head dim divisible by tp, else
+        # shard the key sequence (context parallel — always divisible).
+        tp = tp_size()
+        if hkv % tp == 0:
+            mode = ("dp", None, "tp", None, None)       # shard kv heads
+            smode = ("dp", "tp", None, None, None)
+            kmode = ("dp", None, "tp", None)
+        elif g % tp == 0:
+            mode = ("dp", None, None, "tp", None)       # shard q groups
+            smode = ("dp", None, "tp", None, None)
+            kmode = ("dp", None, None, None)
+        else:
+            mode = ("dp", None, None, None, None)       # shard key sequence
+            smode = ("dp", None, None, None, "tp")
+            kmode = ("dp", "tp", None, None)
+        qg = constrain(q.reshape(B, S, hkv, g, hd), *mode)
+        k = constrain(k, *kmode)
+        v = constrain(v, *kmode)
+        # bf16 operands + f32 MXU accumulation: halves the activation
+        # bytes any repartitioning all-gathers move (EXPERIMENTS.md §Perf)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                       preferred_element_type=jnp.float32) * scale
+        s = constrain(s, *smode)
+        causal = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(causal[None, None, None], s, -1e30)
+        w = jax.nn.softmax(s, axis=-1)          # f32 statistics
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(x.dtype), v,
+                       preferred_element_type=jnp.float32)
+        o = constrain(o.reshape(B, S, hq * hd).astype(x.dtype),
+                      "dp", None, None)
+        new_cache = {"k": k, "v": v} if return_kv else None
+    else:
+        # append to cache at position cache_len (S==1: decode; S>1: prefill)
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache_len, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache_len, 1)
+        Smax = kc.shape[1]
+        qg = q.reshape(B, S, hkv, g, hd)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                       kc.astype(jnp.float32)) * scale
+        s = constrain(s, "dp", None, None, None, "sp")  # cache is S-sharded
+        # causal against absolute positions (covers decode AND prefill)
+        keymask = (jnp.arange(Smax)[None, None, :]
+                   <= positions[:, :, None])                 # (B, S, Smax)
+        s = jnp.where(keymask[:, None, None, :, :], s, -1e30)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", w, vc.astype(jnp.float32))
+        o = o.reshape(B, S, hq * hd).astype(x.dtype)
+        new_cache = {"k": kc, "v": vc}
+    return o @ p["wo"], new_cache
+
+
+def attn_cache_init(cfg: ArchConfig, batch: int, max_len: int):
+    hd = cfg.resolved_head_dim
+    shape = (batch, max_len, cfg.num_kv_heads, hd)
+    dt = dtype_of(cfg)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key: jax.Array, cfg: ArchConfig):
+    d = cfg.d_model
+    f = cfg.d_ff_dense or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = dtype_of(cfg)
+    p = {
+        "up": (jax.random.normal(ks[1], (d, f)) * d ** -0.5).astype(dt),
+        "down": (jax.random.normal(ks[2], (f, d)) * f ** -0.5).astype(dt),
+    }
+    if cfg.mlp_variant == "swiglu":
+        p["gate"] = (jax.random.normal(ks[0], (d, f)) * d ** -0.5).astype(dt)
+    return p
+
+
+def mlp_spec(cfg: ArchConfig):
+    s = {"up": P("fsdp", "tp"), "down": P("tp", "fsdp")}
+    if cfg.mlp_variant == "swiglu":
+        s["gate"] = P("fsdp", "tp")
+    return s
+
+
+def mlp_apply(p, x: jax.Array) -> jax.Array:
+    if "gate" in p:
+        h = constrain(jax.nn.silu(x @ p["gate"]) * (x @ p["up"]),
+                      "dp", None, "tp")
+        return constrain(h @ p["down"], "dp", None, None)
+    h = constrain(jax.nn.gelu(x @ p["up"]), "dp", None, "tp")
+    return constrain(h @ p["down"], "dp", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Embedding + LM head + loss
+# ---------------------------------------------------------------------------
+
+def embed_init(key: jax.Array, cfg: ArchConfig):
+    dt = dtype_of(cfg)
+    return {"w": (jax.random.normal(key, (cfg.padded_vocab, cfg.d_model))
+                  * cfg.d_model ** -0.5).astype(dt)}
+
+
+def embed_spec(cfg: ArchConfig):
+    return {"w": P("tp", "fsdp")}
+
+
+def head_init(key: jax.Array, cfg: ArchConfig):
+    dt = dtype_of(cfg)
+    return {"w": (jax.random.normal(key, (cfg.d_model, cfg.padded_vocab))
+                  * cfg.d_model ** -0.5).astype(dt)}
+
+
+def head_spec(cfg: ArchConfig):
+    return {"w": P("fsdp", "tp")}
+
+
+def chunked_cross_entropy(x: jax.Array, w_head: jax.Array, labels: jax.Array,
+                          *, chunk: int = 512) -> jax.Array:
+    """Mean token CE without materializing full (B, S, V) logits: the
+    sequence is processed in chunks (vocab stays tp-sharded throughout)."""
+    B, S, d = x.shape
+    nchunk = max(S // chunk, 1)
+    chunk = S // nchunk
+
+    def one(args):
+        xc, lc = args
+        logits = constrain((xc @ w_head).astype(jnp.float32),
+                           "dp", None, "tp")                 # (B, c, V)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return logz - gold                                   # (B, c)
+
+    xs = x.reshape(B, nchunk, chunk, d).swapaxes(0, 1)
+    ls = labels.reshape(B, nchunk, chunk).swapaxes(0, 1)
+    losses = jax.lax.map(one, (xs, ls))                      # (nchunk, B, c)
+    return losses.mean()

@@ -1,0 +1,118 @@
+"""Top-level model API: init / specs / train loss / prefill / decode.
+
+All functions are pure and jit-able; `init_params` is also safe under
+`jax.eval_shape` (the dry-run instantiates parameter *specs* only, never
+allocating the full-size architectures).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.config import ArchConfig
+
+
+def has_token_embed(cfg: ArchConfig) -> bool:
+    """Stub frontends (vlm/audio) feed precomputed embeddings directly."""
+    return cfg.frontend is None
+
+
+def init_params(cfg: ArchConfig, key: jax.Array):
+    ke, ks, kh = jax.random.split(key, 3)
+    p = {"layers": T.stack_init(ks, cfg),
+         "final_norm": L.norm_init(cfg),
+         "head": L.head_init(kh, cfg)}
+    if has_token_embed(cfg):
+        p["embed"] = L.embed_init(ke, cfg)
+    return p
+
+
+def param_specs(cfg: ArchConfig):
+    s = {"layers": T.stack_spec(cfg),
+         "final_norm": L.norm_spec(cfg),
+         "head": L.head_spec(cfg)}
+    if has_token_embed(cfg):
+        s["embed"] = L.embed_spec(cfg)
+    return s
+
+
+def forward(params, cfg: ArchConfig, inputs, *, positions=None,
+            caches=None, cache_len=None):
+    """inputs: (B, S) int32 tokens, or (B, S, d) embeddings for stub
+    frontends. Returns (hidden (B, S, d), new_caches, aux)."""
+    from repro.models.sharding import constrain
+    if inputs.ndim == 2:
+        x = constrain(params["embed"]["w"][inputs], "dp", None, None)
+    else:
+        x = constrain(inputs.astype(L.dtype_of(cfg)), "dp", None, None)
+    B, S = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x, new_caches, aux = T.stack_apply(params["layers"], x, cfg,
+                                       positions=positions, caches=caches,
+                                       cache_len=cache_len)
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return x, new_caches, aux
+
+
+def train_loss(params, cfg: ArchConfig, batch, *, aux_weight: float = 0.01):
+    """batch: {"inputs": tokens or embeds, "labels": (B, S) int32}."""
+    x, _, aux = forward(params, cfg, batch["inputs"])
+    ce = L.chunked_cross_entropy(x, params["head"]["w"], batch["labels"])
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+def prefill_step(params, cfg: ArchConfig, inputs):
+    """Process a full prompt; return last-token logits + caches seeded with
+    the prompt state (KV caches sized to the prompt length)."""
+    B = inputs.shape[0]
+    S = inputs.shape[1]
+    caches = T.stack_cache_init(cfg, B, S)
+    x, new_caches, _ = forward(params, cfg, inputs, caches=caches,
+                               cache_len=jnp.zeros((), jnp.int32))
+    logits = (x[:, -1] @ params["head"]["w"]).astype(jnp.float32)
+    return logits, new_caches
+
+
+def decode_step(params, cfg: ArchConfig, caches, cache_len, tokens):
+    """One decode step. tokens: (B, 1) ids or (B, 1, d) stub embeddings;
+    cache_len: () int32 — tokens already in the cache. Returns
+    (logits (B, V), new_caches)."""
+    B = tokens.shape[0]
+    positions = jnp.full((B, 1), cache_len, jnp.int32)
+    x, new_caches, _ = forward(params, cfg, tokens, positions=positions,
+                               caches=caches, cache_len=cache_len)
+    logits = (x[:, -1] @ params["head"]["w"]).astype(jnp.float32)
+    return logits, new_caches
+
+
+def cache_specs(cfg: ArchConfig):
+    return T.stack_cache_spec(cfg)
+
+
+def count_params(cfg: ArchConfig) -> int:
+    """Total parameter count (from abstract shapes; no allocation)."""
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    import math
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(shapes))
+
+
+def count_active_params(cfg: ArchConfig) -> int:
+    """Active-per-token parameters (MoE: top_k of num_experts experts)."""
+    total = count_params(cfg)
+    if cfg.moe_num_experts == 0:
+        return total
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    import math
+    expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        keys = [getattr(k, "key", None) for k in path]
+        if "moe" in keys and any(k in ("gate", "up", "down") for k in keys):
+            expert += math.prod(leaf.shape)
+    active = total - expert + int(expert * cfg.moe_top_k / cfg.moe_num_experts)
+    return active

@@ -1,0 +1,156 @@
+"""Mixture-of-Experts with group-local sort-based dispatch.
+
+Dispatch is gather/scatter over an argsort by expert id — O(T·k·d) data
+movement, **no** dense one-hot (T, E, C) einsum — so compiled FLOPs stay
+within capacity_factor of the 6·N_active·D model FLOPs even at E=384.
+
+Distribution: tokens are reshaped to (G, T/G, d) where G = the mesh's
+batch-axis size, and the whole dispatch (top-k, sort, scatter) is vmapped
+over G. Each data shard therefore permutes **its own** tokens with zero
+communication, and only the (G, E, C_local, d) expert buffer crosses the
+machine — the all-to-all the paper's bucket synchronization also uses
+(table-granular balance: every expert buffer slice has identical capacity).
+A global (unsharded-T) scatter instead makes XLA all-gather the full token
+array per MoE layer — the 2000s-collective blow-up recorded in
+EXPERIMENTS.md §Perf.
+
+Tokens over capacity are dropped (standard capacity MoE); the Switch-style
+auxiliary loss pushes the router toward uniform load.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig
+from repro.models.layers import dtype_of
+from repro.models.sharding import constrain, dp_size
+
+
+def moe_init(key: jax.Array, cfg: ArchConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe_num_experts
+    ks = jax.random.split(key, 7)
+    dt = dtype_of(cfg)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e)) * d ** -0.5).astype(jnp.float32),
+        "gate": (jax.random.normal(ks[1], (e, d, f)) * d ** -0.5).astype(dt),
+        "up": (jax.random.normal(ks[2], (e, d, f)) * d ** -0.5).astype(dt),
+        "down": (jax.random.normal(ks[3], (e, f, d)) * f ** -0.5).astype(dt),
+    }
+    if cfg.moe_shared_experts:
+        fs = f * cfg.moe_shared_experts
+        p |= {
+            "sh_gate": (jax.random.normal(ks[4], (d, fs)) * d ** -0.5).astype(dt),
+            "sh_up": (jax.random.normal(ks[5], (d, fs)) * d ** -0.5).astype(dt),
+            "sh_down": (jax.random.normal(ks[6], (fs, d)) * fs ** -0.5).astype(dt),
+        }
+    return p
+
+
+def moe_spec(cfg: ArchConfig):
+    s = {"router": P("fsdp", None),
+         "gate": P("tp", "fsdp", None), "up": P("tp", "fsdp", None),
+         "down": P("tp", None, "fsdp")}
+    if cfg.moe_shared_experts:
+        s |= {"sh_gate": P("fsdp", "tp"), "sh_up": P("fsdp", "tp"),
+              "sh_down": P("tp", "fsdp")}
+    return s
+
+
+def _dispatch_local(xg, probs, k: int, e: int, cap: int):
+    """Per-group dispatch. xg: (Tl, d); probs: (Tl, E).
+    Returns (buf (E, cap, d), st, sg, keep, slot)."""
+    tl, d = xg.shape
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)          # (Tl, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    fe = expert_idx.reshape(-1)                              # (Tl*k,)
+    ft = jnp.repeat(jnp.arange(tl, dtype=jnp.int32), k)
+    fg = gate_vals.reshape(-1)
+    order = jnp.argsort(fe)
+    se, st, sg = fe[order], ft[order], fg[order]
+    first = jnp.full((e,), tl * k, jnp.int32).at[se].min(
+        jnp.arange(tl * k, dtype=jnp.int32))
+    pos = jnp.arange(tl * k, dtype=jnp.int32) - first[se]
+    keep = pos < cap
+    slot = jnp.where(keep, se * cap + pos, e * cap)
+    buf = jnp.zeros((e * cap + 1, d), xg.dtype).at[slot].set(xg[st])
+    return buf[:-1].reshape(e, cap, d), st, sg, keep, slot
+
+
+def _expert_weights(p, cfg: ArchConfig):
+    """Optionally cast expert weights to fp8 *before* use: the cast is
+    shard-local, so the pjit-inserted FSDP all-gather moves fp8 on the wire
+    (2x fewer collective bytes; bf16 master weights keep optimizer
+    numerics). See EXPERIMENTS.md §Perf, kimi hillclimb."""
+    if not cfg.moe_weight_dtype:
+        return p["gate"], p["up"], p["down"]
+    dt = jnp.dtype(cfg.moe_weight_dtype)
+    # pin the cast output to the *sharded* layout — otherwise the SPMD
+    # partitioner all-gathers bf16 first and casts after (no wire win)
+    wg = constrain(p["gate"].astype(dt), "tp", "fsdp", None)
+    wu = constrain(p["up"].astype(dt), "tp", "fsdp", None)
+    wd = constrain(p["down"].astype(dt), "tp", None, "fsdp")
+    return wg, wu, wd
+
+
+def _combine_local(y, st, sg, keep, slot, tl: int, cap: int, e: int):
+    """y: (E, cap, d) -> (Tl, d)."""
+    d = y.shape[-1]
+    yflat = y.reshape(e * cap, d)
+    contrib = jnp.where(keep[:, None], yflat[jnp.minimum(slot, e * cap - 1)], 0.0)
+    contrib = contrib * sg[:, None].astype(y.dtype)
+    return jnp.zeros((tl, d), y.dtype).at[st].add(contrib)
+
+
+def moe_apply(p, x: jax.Array, cfg: ArchConfig):
+    """x: (B, S, d) -> (y (B, S, d), aux_loss scalar)."""
+    B, S, d = x.shape
+    T = B * S
+    e, k = cfg.moe_num_experts, cfg.moe_top_k
+    g = math.gcd(T, dp_size())
+    tl = T // g
+    cap = int(cfg.moe_capacity_factor * tl * k / e)
+    cap = max(8, -(-cap // 8) * 8)
+
+    xf = constrain(x.reshape(g, tl, d), "dp", None, None)
+    logits = (xf.astype(jnp.float32) @ p["router"])          # (g, Tl, E) f32
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # Switch-style aux loss over the global batch
+    me = probs.mean((0, 1))
+    top1 = jnp.argmax(probs, axis=-1).reshape(-1)
+    ce = jnp.zeros((e,), jnp.float32).at[top1].add(1.0) / T
+    aux = e * jnp.sum(me * ce)
+
+    buf, st, sg, keep, slot = jax.vmap(
+        lambda xg, pr: _dispatch_local(xg, pr, k, e, cap))(xf, probs)
+    buf = constrain(buf, "dp", "tp", None, None)             # (g, E, cap, d)
+
+    wg, wu, wd = _expert_weights(p, cfg)
+    acc = dtype_of(cfg)
+    h = constrain(jnp.einsum("gecd,edf->gecf", buf.astype(wg.dtype), wg,
+                             preferred_element_type=acc),
+                  "dp", "tp", None, None)
+    u = constrain(jnp.einsum("gecd,edf->gecf", buf.astype(wu.dtype), wu,
+                             preferred_element_type=acc),
+                  "dp", "tp", None, None)
+    y = constrain(jnp.einsum("gecf,efd->gecd",
+                             (jax.nn.silu(h) * u).astype(wd.dtype), wd,
+                             preferred_element_type=acc),
+                  "dp", "tp", None, None)
+
+    out = jax.vmap(
+        lambda yg, stg, sgg, kg, sl: _combine_local(yg, stg, sgg, kg, sl,
+                                                    tl, cap, e))(
+        y, st, sg, keep, slot)
+    out = constrain(out, "dp", None, None).reshape(B, S, d)
+    if "sh_gate" in p:  # shared expert(s): applied to every token
+        xflat = x.reshape(T, d)
+        sh = constrain(jax.nn.silu(xflat @ p["sh_gate"]) * (xflat @ p["sh_up"]),
+                       "dp", "tp")
+        out = out + constrain(sh @ p["sh_down"], "dp", None).reshape(B, S, d)
+    return out, aux

@@ -1,0 +1,206 @@
+"""RWKV6 "Finch" block: attention-free time mixing with data-dependent
+per-channel decay (arXiv:2404.05892), plus the squared-ReLU channel mix.
+
+Recurrence per head (state S: (hd, hd), decay w_t in (0,1)^hd data-dependent):
+    y_t = r_t · (S_{t-1} + diag(u) k_t v_tᵀ)
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+Train lowers to a `lax.scan` over time carrying S (O(1) state — this is why
+rwkv6 runs the long_500k shape). Decode is a single recurrence step.
+
+Simplification vs. the released checkpoints (noted in DESIGN.md): token-shift
+mixing coefficients are static per-channel (the ddlerp LoRA is kept only for
+the decay w, the part that defines Finch).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig
+from repro.models.layers import dtype_of
+from repro.models.sharding import constrain
+
+
+def rwkv_init(key: jax.Array, cfg: ArchConfig):
+    d = cfg.d_model
+    H, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    lora = cfg.rwkv_decay_lora
+    f = cfg.d_ff
+    ks = jax.random.split(key, 8)
+    dt = dtype_of(cfg)
+    std = d ** -0.5
+
+    def mat(k, shape, scale=std):
+        return (jax.random.normal(k, shape) * scale).astype(dt)
+
+    return {
+        # time mix
+        "mu": jnp.full((5, d), 0.5, dt),                 # r,k,v,w,g shift mixes
+        "w0": jnp.full((d,), -2.0, jnp.float32),
+        "w_lora_a": mat(ks[0], (d, lora)),
+        "w_lora_b": mat(ks[1], (lora, d), lora ** -0.5),
+        "u": (jax.random.normal(ks[2], (H, hd)) * 0.1).astype(jnp.float32),
+        "wr": mat(ks[3], (d, d)), "wk": mat(ks[4], (d, d)),
+        "wv": mat(ks[5], (d, d)), "wg": mat(ks[6], (d, d)),
+        "wo": mat(ks[7], (d, d)),
+        "ln_x": jnp.ones((d,), dt),
+        # channel mix
+        "mu_c": jnp.full((2, d), 0.5, dt),
+        "ck": mat(ks[0], (d, f)), "cv": mat(ks[1], (f, d), f ** -0.5),
+        "cr": mat(ks[2], (d, d)),
+    }
+
+
+def rwkv_spec(cfg: ArchConfig):
+    return {"mu": P(None, None), "w0": P(), "w_lora_a": P("fsdp", None),
+            "w_lora_b": P(None, "fsdp"), "u": P("tp", None),
+            "wr": P("fsdp", "tp"), "wk": P("fsdp", "tp"),
+            "wv": P("fsdp", "tp"), "wg": P("fsdp", "tp"),
+            "wo": P("tp", "fsdp"), "ln_x": P(),
+            "mu_c": P(None, None), "ck": P("fsdp", "tp"),
+            "cv": P("tp", "fsdp"), "cr": P("fsdp", "tp")}
+
+
+def rwkv_cache_spec(cfg: ArchConfig):
+    return {"s": P("dp", "tp", None, None), "x_tm": P("dp", None),
+            "x_cm": P("dp", None)}
+
+
+def rwkv_cache_init(cfg: ArchConfig, batch: int):
+    d, H, hd = cfg.d_model, cfg.rwkv_heads, cfg.rwkv_head_dim
+    dt = dtype_of(cfg)
+    return {"s": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "x_tm": jnp.zeros((batch, d), dt),
+            "x_cm": jnp.zeros((batch, d), dt)}
+
+
+_WKV_CHUNK = 128
+
+
+def _wkv_chunked(r, k, v, w, u, s0):
+    """Chunk-parallel WKV (EXPERIMENTS.md §Perf, rwkv6 hillclimb).
+
+    The naive recurrence runs S sequential (B, H, hd, hd) state updates —
+    S×state HBM round-trips (the 2500 s memory-roofline term at train_4k).
+    Within a chunk of C tokens the recurrence has a closed form
+    (flash-linear-attention style, per key channel d):
+
+        y_t = (r_t ⊙ P_{t-1})ᵀ S_0 + [(r⊙P_{t-1})(k/P)ᵀ ∘ strict-tril] V
+              + (r_t·u·k_t) v_t
+        S_C = diag(P_C) (S_0 + (k/P)ᵀ V)
+
+    with P_t = ∏_{τ≤t} w_τ. Everything inside a chunk is an MXU matmul;
+    the sequential dimension shrinks S -> S/C. Cumulative log-decays are
+    clamped at -25 so the 1/P factors stay finite (channels decayed below
+    e^-25 contribute nothing either way).
+    """
+    B, S, H, hd = r.shape
+    C = _WKV_CHUNK
+    n = S // C
+    mask = jnp.tril(jnp.ones((C, C), bool), k=-1)
+
+    def resh(a):                                    # -> (n, B, H, C, hd)
+        return a.reshape(B, n, C, H, hd).transpose(1, 0, 3, 2, 4)
+
+    rs, ks, vs = resh(r), resh(k), resh(v)
+    lws = resh(jnp.log(jnp.maximum(w, 1e-38)))
+
+    def chunk(s, inp):
+        rc, kc, vc, lw = inp                        # (B, H, C, hd)
+        L = jnp.cumsum(lw, axis=2)
+        qt = rc * jnp.exp(jnp.maximum(L - lw, -25.0))     # r ⊙ P_{t-1}
+        kt = kc * jnp.exp(-jnp.maximum(L, -25.0))         # k / P_t
+        A = jnp.einsum("bhtd,bhsd->bhts", qt, kt)
+        A = jnp.where(mask, A, 0.0)
+        y = jnp.einsum("bhts,bhsd->bhtd", A, vc)
+        y = y + jnp.einsum("bhtd,bhde->bhte", qt, s)
+        diag = jnp.sum(rc * u[None, :, None, :] * kc, axis=-1, keepdims=True)
+        y = y + diag * vc
+        pC = jnp.exp(jnp.maximum(L[:, :, -1], -25.0))     # (B, H, hd)
+        s_new = pC[..., None] * (s + jnp.einsum("bhsd,bhse->bhde", kt, vc))
+        return s_new, y
+
+    s_last, ys = jax.lax.scan(chunk, s0, (rs, ks, vs, lws))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, S, H * hd)
+    return s_last, y
+
+
+def _shift(x: jax.Array, prev: jax.Array | None):
+    """Token shift: x_{t-1} along sequence (prev seeds position 0)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    else:
+        prev = prev[:, None]
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _group_norm(y: jax.Array, scale: jax.Array, H: int, eps: float):
+    B, S, d = y.shape
+    yh = y.reshape(B, S, H, d // H).astype(jnp.float32)
+    mean = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mean) * jax.lax.rsqrt(var + eps)
+    return yh.reshape(B, S, d).astype(y.dtype) * scale
+
+
+def rwkv_time_mix(p, x: jax.Array, cfg: ArchConfig,
+                  cache: dict | None = None):
+    B, S, d = x.shape
+    H, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    xprev = _shift(x, cache["x_tm"] if cache is not None else None)
+
+    def lerp(mu):
+        return x + (xprev - x) * mu
+
+    def heads(t):
+        return constrain(t.reshape(B, S, H, hd).astype(jnp.float32),
+                         "dp", None, "tp", None)
+
+    r = heads(lerp(p["mu"][0]) @ p["wr"])
+    k = heads(lerp(p["mu"][1]) @ p["wk"])
+    v = heads(lerp(p["mu"][2]) @ p["wv"])
+    g = jax.nn.silu(lerp(p["mu"][4]) @ p["wg"])
+    # data-dependent decay (the Finch contribution)
+    wlog = p["w0"] + jnp.tanh(lerp(p["mu"][3]).astype(jnp.float32)
+                              @ p["w_lora_a"].astype(jnp.float32)) \
+        @ p["w_lora_b"].astype(jnp.float32)
+    w = constrain(jnp.exp(-jnp.exp(wlog)).reshape(B, S, H, hd),
+                  "dp", None, "tp", None)                     # (0,1)
+
+    s0 = cache["s"] if cache is not None else jnp.zeros((B, H, hd, hd),
+                                                        jnp.float32)
+    s0 = constrain(s0, "dp", "tp", None, None)
+
+    if S > 1 and S % _WKV_CHUNK == 0:
+        s_last, y = _wkv_chunked(r, k, v, w, p["u"], s0)
+        y = y.reshape(B, S, d).astype(x.dtype)
+    else:
+        def step(s, inp):
+            rt, kt, vt, wt = inp                             # (B, H, hd)
+            kv = kt[..., None] * vt[..., None, :]            # (B, H, hd, hd)
+            yt = jnp.einsum("bhi,bhij->bhj", rt,
+                            s + p["u"][None, :, :, None] * kv)
+            s = wt[..., None] * s + kv
+            return s, yt
+
+        rs, ks_, vs, ws = (a.swapaxes(0, 1) for a in (r, k, v, w))
+        s_last, ys = jax.lax.scan(step, s0, (rs, ks_, vs, ws))
+        y = ys.swapaxes(0, 1).reshape(B, S, d).astype(x.dtype)
+    y = _group_norm(y, p["ln_x"], H, cfg.norm_eps) * g
+    out = y @ p["wo"]
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(cache, s=s_last, x_tm=x[:, -1])
+    return out, new_cache
+
+
+def rwkv_channel_mix(p, x: jax.Array, cache: dict | None = None):
+    xprev = _shift(x, cache["x_cm"] if cache is not None else None)
+    xk = x + (xprev - x) * p["mu_c"][0]
+    xr = x + (xprev - x) * p["mu_c"][1]
+    r = jax.nn.sigmoid(xr @ p["cr"])
+    k = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    out = r * (k @ p["cv"])
+    new_cache = dict(cache, x_cm=x[:, -1]) if cache is not None else None
+    return out, new_cache

@@ -1,0 +1,62 @@
+"""Activation sharding constraints with logical axis names.
+
+XLA's SPMD propagation can *drop* shardings mid-graph (observed: attention
+score einsums running with the full global batch per chip when the head dim
+is not divisible by the tp axis — a 512x per-chip FLOP blow-up, see
+EXPERIMENTS.md §Perf iteration 0). Explicit `with_sharding_constraint`
+anchors at block boundaries prevent that, MaxText-style.
+
+The model code stays mesh-agnostic: `constrain(x, "dp", None, "tp")` uses
+logical names, resolved against the mesh installed by
+`activation_sharding(mesh)` (the launch layer does this). With no active
+mesh (unit tests, single-device smoke) it is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_ACTIVE: list = []
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, drop: tuple[str, ...] = ()):
+    """drop: logical axes to silently un-shard (e.g. ("dp",) for batch-1
+    long-context decode, where the batch axis cannot be partitioned)."""
+    _ACTIVE.append((mesh, drop))
+    try:
+        yield
+    finally:
+        _ACTIVE.pop()
+
+
+def constrain(x, *axes):
+    """axes: one logical entry per dim ('dp' | 'tp' | 'sp' | None)."""
+    if not _ACTIVE:
+        return x
+    mesh, drop = _ACTIVE[-1]
+    from repro.launch.mesh import resolve_spec
+    spec = resolve_spec(P(*axes), mesh, drop=drop)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def tp_size() -> int:
+    """Size of the tensor-parallel axis of the active mesh (1 if none) —
+    lets the model pick a divisible sharding dim (e.g. kv-heads vs q-groups
+    vs key-sequence for attention scores)."""
+    if not _ACTIVE:
+        return 1
+    return _ACTIVE[-1][0].shape.get("model", 1)
+
+
+def dp_size() -> int:
+    """Total size of the batch axes of the active mesh (1 if none)."""
+    if not _ACTIVE:
+        return 1
+    mesh, drop = _ACTIVE[-1]
+    if "dp" in drop:
+        return 1
+    return mesh.shape.get("pod", 1) * mesh.shape.get("data", 1)

@@ -1,0 +1,135 @@
+"""Mamba (selective SSM) block — the sub-quadratic mixer in jamba's 1:7
+hybrid interleave.
+
+TPU adaptation (DESIGN.md §2): the CUDA selective-scan kernel becomes a
+*chunked associative scan* — sequential `lax.scan` over sequence chunks
+carrying the (B, d_inner, d_state) state, `lax.associative_scan` inside a
+chunk. Chunking bounds the materialized (B, chunk, d_inner, d_state)
+discretized tensors (the TPU analogue of fusing the scan in SRAM); d_inner
+is tp-sharded so the per-device buffer is ~chunk·d_inner/16·d_state floats.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig
+from repro.models.layers import dtype_of
+from repro.models.sharding import constrain
+
+_CHUNK = 256
+
+
+def mamba_init(key: jax.Array, cfg: ArchConfig):
+    d, di = cfg.d_model, cfg.mamba_d_inner
+    ds, dtr, ck = cfg.mamba_d_state, cfg.resolved_dt_rank, cfg.mamba_conv
+    ks = jax.random.split(key, 6)
+    dt = dtype_of(cfg)
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * di)) * d ** -0.5).astype(dt),
+        "conv_w": (jax.random.normal(ks[1], (ck, di)) * ck ** -0.5).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": (jax.random.normal(ks[2], (di, dtr + 2 * ds)) * di ** -0.5).astype(dt),
+        "dt_w": (jax.random.normal(ks[3], (dtr, di)) * dtr ** -0.5).astype(dt),
+        "dt_b": jnp.full((di,), -4.6, dt),   # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds)).copy()),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[5], (di, d)) * di ** -0.5).astype(dt),
+    }
+
+
+def mamba_spec(cfg: ArchConfig):
+    return {"in_proj": P("fsdp", "tp"), "conv_w": P(None, "tp"),
+            "conv_b": P("tp"), "x_proj": P("tp", None), "dt_w": P(None, "tp"),
+            "dt_b": P("tp"), "A_log": P("tp", None), "D": P("tp"),
+            "out_proj": P("tp", "fsdp")}
+
+
+def mamba_cache_spec(cfg: ArchConfig):
+    return {"h": P("dp", "tp", None), "conv": P("dp", None, "tp")}
+
+
+def mamba_cache_init(cfg: ArchConfig, batch: int):
+    di, ds, ck = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_conv
+    return {"h": jnp.zeros((batch, di, ds), jnp.float32),
+            "conv": jnp.zeros((batch, ck - 1, di), dtype_of(cfg))}
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 history: jax.Array | None = None):
+    """Depthwise causal conv over sequence. x: (B, S, di); w: (ck, di)."""
+    ck = w.shape[0]
+    pad = history if history is not None else jnp.zeros(
+        (x.shape[0], ck - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :], window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[2])
+    return out + b, xp[:, -(ck - 1):, :]
+
+
+def _ssm_scan(dt: jax.Array, Bm: jax.Array, Cm: jax.Array, xin: jax.Array,
+              A: jax.Array, h0: jax.Array):
+    """Chunked selective scan. Discretization (abar, bx — the (…, di, ds)
+    tensors) is materialized one chunk at a time inside the scan body, so
+    peak temp is O(B·chunk·di·ds) instead of O(B·S·di·ds) (34 GiB/chip at
+    prefill_32k for jamba). Returns (h_last, y (B, S, di) f32)."""
+    B, S, di = dt.shape
+    ds = A.shape[-1]
+    cs = min(_CHUNK, S)
+    nchunk = S // cs
+    assert S % cs == 0, "sequence length must be a multiple of the scan chunk"
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    def step(h, inputs):
+        dtc, bc, cc, xc = inputs            # (B,cs,di) (B,cs,ds) (B,cs,ds) (B,cs,di)
+        abar = jnp.exp(dtc[..., None] * A)               # (B, cs, di, ds)
+        bx = (dtc * xc)[..., None] * bc[:, :, None, :]
+        aa, bb = jax.lax.associative_scan(combine, (abar, bx), axis=1)
+        h_all = aa * h[:, None] + bb
+        y = jnp.einsum("bcns,bcs->bcn", h_all, cc)       # (B, cs, di)
+        return h_all[:, -1], y
+
+    chunked = lambda x: x.reshape(B, nchunk, cs, *x.shape[2:]).swapaxes(0, 1)
+    h_last, ys = jax.lax.scan(
+        step, h0, (chunked(dt), chunked(Bm), chunked(Cm), chunked(xin)))
+    return h_last, ys.swapaxes(0, 1).reshape(B, S, di)
+
+
+def mamba_apply(p, x: jax.Array, cfg: ArchConfig, cache: dict | None = None):
+    """x: (B, S, d) -> (y, new_cache). Train: cache None. Decode: S == 1."""
+    B, S, d = x.shape
+    di, ds = cfg.mamba_d_inner, cfg.mamba_d_state
+    dtr = cfg.resolved_dt_rank
+
+    xz = constrain(x @ p["in_proj"], "dp", None, "tp")
+    xin, z = xz[..., :di], xz[..., di:]
+    hist = cache["conv"] if cache is not None else None
+    xin, new_hist = _causal_conv(xin, p["conv_w"], p["conv_b"], hist)
+    xin = constrain(jax.nn.silu(xin), "dp", None, "tp")
+
+    xdbl = xin @ p["x_proj"]
+    dt = jax.nn.softplus(xdbl[..., :dtr] @ p["dt_w"]
+                         + p["dt_b"]).astype(jnp.float32)    # (B, S, di)
+    Bm = xdbl[..., dtr:dtr + ds].astype(jnp.float32)         # (B, S, ds)
+    Cm = xdbl[..., dtr + ds:].astype(jnp.float32)            # (B, S, ds)
+    A = -jnp.exp(p["A_log"])                                 # (di, ds) f32
+
+    h0 = cache["h"] if cache is not None else jnp.zeros((B, di, ds), jnp.float32)
+    h_last, y = _ssm_scan(dt, Bm, Cm, xin.astype(jnp.float32), A, h0)
+    y = y + p["D"] * xin.astype(jnp.float32)
+    y = constrain(y, "dp", None, "tp")
+    y = constrain((y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"],
+                  "dp", None, None)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": h_last, "conv": new_hist}
+    return y, new_cache

@@ -1,0 +1,212 @@
+"""Block assembly + scan-over-layers stacks for all assigned architectures.
+
+A *block* = (norm -> mix) + (norm -> ffn) with residuals, where
+  mix in {attn, mamba, rwkv-time-mix}   ffn in {mlp, moe, rwkv-channel-mix}.
+
+Layers repeat with period `cfg.period()` (1 for uniform stacks, 8 for
+jamba's 1:7 interleave); parameters are stacked over periods and the stack
+is a `lax.scan` (keeps HLO size O(period), critical for 61-88 layer archs
+under 512-way SPMD partitioning). `cfg.remat` wraps the scanned body in
+`jax.checkpoint` (activation recomputation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rwkv6 as R
+from repro.models import ssm as S
+from repro.models.config import ArchConfig
+
+# ---------------------------------------------------------------------------
+# Single block
+# ---------------------------------------------------------------------------
+
+
+def block_init(key, cfg: ArchConfig, mix: str, ffn: str):
+    k1, k2 = jax.random.split(key)
+    p = {"norm1": L.norm_init(cfg)}
+    if mix == "attn":
+        p["attn"] = L.attn_init(k1, cfg)
+    elif mix == "mamba":
+        p["mamba"] = S.mamba_init(k1, cfg)
+    elif mix == "rwkv":
+        p["rwkv"] = R.rwkv_init(k1, cfg)
+    else:
+        raise ValueError(mix)
+    p["norm2"] = L.norm_init(cfg)
+    if ffn == "mlp":
+        p["mlp"] = L.mlp_init(k2, cfg)
+    elif ffn == "moe":
+        p["moe"] = M.moe_init(k2, cfg)
+    elif ffn == "rwkv_ffn":
+        pass  # channel-mix params live inside the rwkv dict
+    else:
+        raise ValueError(ffn)
+    return p
+
+
+def block_spec(cfg: ArchConfig, mix: str, ffn: str):
+    s = {"norm1": L.norm_spec(cfg), "norm2": L.norm_spec(cfg)}
+    if mix == "attn":
+        s["attn"] = L.attn_spec(cfg)
+    elif mix == "mamba":
+        s["mamba"] = S.mamba_spec(cfg)
+    elif mix == "rwkv":
+        s["rwkv"] = R.rwkv_spec(cfg)
+    if ffn == "mlp":
+        s["mlp"] = L.mlp_spec(cfg)
+    elif ffn == "moe":
+        s["moe"] = M.moe_spec(cfg)
+    return s
+
+
+def block_cache_init(cfg: ArchConfig, mix: str, batch: int, max_len: int):
+    if mix == "attn":
+        return L.attn_cache_init(cfg, batch, max_len)
+    if mix == "mamba":
+        return S.mamba_cache_init(cfg, batch)
+    if mix == "rwkv":
+        return R.rwkv_cache_init(cfg, batch)
+    raise ValueError(mix)
+
+
+def block_cache_spec(cfg: ArchConfig, mix: str):
+    if mix == "attn":
+        return L.attn_cache_spec(cfg)
+    if mix == "mamba":
+        return S.mamba_cache_spec(cfg)
+    if mix == "rwkv":
+        return R.rwkv_cache_spec(cfg)
+    raise ValueError(mix)
+
+
+def block_apply(p, x, cfg: ArchConfig, mix: str, ffn: str, *, positions,
+                cache=None, cache_len=None):
+    """Returns (x, new_cache, aux_loss)."""
+    from repro.models.sharding import constrain
+    x = constrain(x, "dp", None, None)
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rms_norm(x, p["norm1"]["scale"], cfg.norm_eps)
+    if mix == "attn":
+        y, new_cache = L.attn_apply(p["attn"], h, cfg, positions=positions,
+                                    cache=cache, cache_len=cache_len)
+    elif mix == "mamba":
+        y, new_cache = S.mamba_apply(p["mamba"], h, cfg, cache=cache)
+    elif mix == "rwkv":
+        y, new_cache = R.rwkv_time_mix(p["rwkv"], h, cfg, cache=cache)
+    x = x + y
+
+    h = L.rms_norm(x, p["norm2"]["scale"], cfg.norm_eps)
+    if ffn == "mlp":
+        y = L.mlp_apply(p["mlp"], h)
+    elif ffn == "moe":
+        y, aux = M.moe_apply(p["moe"], h, cfg)
+    elif ffn == "rwkv_ffn":
+        y, new_cache = R.rwkv_channel_mix(p["rwkv"], h, cache=new_cache)
+    x = x + y
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Stack (scan over periods)
+# ---------------------------------------------------------------------------
+
+def stack_init(key, cfg: ArchConfig):
+    plan = cfg.layer_plan()
+    period = cfg.period()
+    nper = cfg.num_layers // period
+    out = []
+    for pos in range(period):
+        mix, ffn = plan[pos]
+        keys = jax.random.split(jax.random.fold_in(key, pos), nper)
+        out.append(jax.vmap(lambda k: block_init(k, cfg, mix, ffn))(keys))
+    return out
+
+
+def stack_spec(cfg: ArchConfig):
+    plan = cfg.layer_plan()
+    period = cfg.period()
+    out = []
+    for pos in range(period):
+        mix, ffn = plan[pos]
+        spec = block_spec(cfg, mix, ffn)
+        out.append(jax.tree.map(lambda s: P(None, *s), spec,
+                                is_leaf=lambda s: isinstance(s, P)))
+    return out
+
+
+def stack_cache_init(cfg: ArchConfig, batch: int, max_len: int):
+    plan = cfg.layer_plan()
+    period = cfg.period()
+    nper = cfg.num_layers // period
+    out = []
+    for pos in range(period):
+        mix, _ = plan[pos]
+        one = block_cache_init(cfg, mix, batch, max_len)
+        out.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (nper,) + a.shape).copy(), one))
+    return out
+
+
+def stack_cache_spec(cfg: ArchConfig):
+    plan = cfg.layer_plan()
+    period = cfg.period()
+    out = []
+    for pos in range(period):
+        mix, _ = plan[pos]
+        spec = block_cache_spec(cfg, mix)
+        out.append(jax.tree.map(lambda s: P(None, *s), spec,
+                                is_leaf=lambda s: isinstance(s, P)))
+    return out
+
+
+def stack_apply(params_stack, x, cfg: ArchConfig, *, positions,
+                caches=None, cache_len=None):
+    """params_stack: list (period) of period-stacked block params.
+    caches: matching list or None. Returns (x, new_caches, aux_total)."""
+    plan = cfg.layer_plan()
+    period = cfg.period()
+    nper = cfg.num_layers // period
+    has_cache = caches is not None
+
+    def body_fn(carry, xs):
+        (x, aux) = carry
+        pslices = xs[0]
+        cslices = xs[1] if has_cache else None
+        new_cs = []
+        a_tot = aux
+        for pos in range(period):
+            mix, ffn = plan[pos]
+            x, nc, a = block_apply(
+                pslices[pos], x, cfg, mix, ffn, positions=positions,
+                cache=cslices[pos] if has_cache else None,
+                cache_len=cache_len)
+            a_tot = a_tot + a
+            new_cs.append(nc if has_cache else {})
+        return (x, a_tot), new_cs
+
+    fn = jax.checkpoint(body_fn) if cfg.remat else body_fn
+
+    if cfg.scan_layers and nper > 1:
+        xs = (params_stack, caches) if has_cache else (params_stack,)
+        (x, aux), new_caches = jax.lax.scan(fn, (x, jnp.zeros((), jnp.float32)),
+                                            xs)
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        new_caches = [jax.tree.map(lambda a: jnp.zeros_like(a), c)
+                      for c in caches] if has_cache else None
+        for li in range(nper):
+            pslice = jax.tree.map(lambda a: a[li], params_stack)
+            cslice = jax.tree.map(lambda a: a[li], caches) if has_cache else None
+            xs = (pslice, cslice) if has_cache else (pslice,)
+            (x, aux), ncs = fn((x, aux), xs)
+            if has_cache:
+                new_caches = jax.tree.map(
+                    lambda full, new: full.at[li].set(new), new_caches, ncs)
+    return x, (new_caches if has_cache else None), aux

@@ -1,0 +1,68 @@
+"""32-bit universal hashing primitives used by MinHash / SILK / DOPH.
+
+Everything here is deliberately 32-bit so the library runs with JAX's
+default x64-disabled config (enabling x64 globally would silently change
+model dtypes elsewhere). Where the algorithms need a joint sort over
+(key_a, key_b) pairs we use two-level stable sorts instead of packed
+64-bit keys.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+UMAX32 = jnp.uint32(0xFFFFFFFF)
+IMAX32 = jnp.int32(0x7FFFFFFF)
+
+
+def derive_hash_keys(key: jax.Array, shape: tuple[int, ...]) -> jax.Array:
+    """Derive (…, 2) uint32 (a, b) multiply-add keys; ``a`` is forced odd."""
+    bits = jax.random.bits(key, shape + (2,), dtype=jnp.uint32)
+    a = bits[..., 0] | jnp.uint32(1)
+    b = bits[..., 1]
+    return jnp.stack([a, b], axis=-1)
+
+
+def hash_u32(x: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """Multiply-add + murmur3-style finalizer: a dispersive uint32 hash.
+
+    Approximates the random permutation pi(.) of MinHash (paper Eq. 2);
+    collisions are negligible for the universe sizes we use (< 2^31).
+    """
+    h = x.astype(jnp.uint32) * a + b
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x7FEB352D)
+    h = h ^ (h >> 15)
+    h = h * jnp.uint32(0x846CA68B)
+    h = h ^ (h >> 16)
+    return h
+
+
+def mix_u32(acc: jax.Array, v: jax.Array) -> jax.Array:
+    """Fold ``v`` into running signature ``acc`` (boost-style hash combine)."""
+    acc = acc.astype(jnp.uint32)
+    v = v.astype(jnp.uint32)
+    return (acc * jnp.uint32(0x01000193)) ^ (v + jnp.uint32(0x9E3779B9) +
+                                             (acc << 6) + (acc >> 2))
+
+
+def combine2_u32(x: jax.Array, y: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """Hash a pair (x, y) into uint32 — used for (dim, code) set items."""
+    return hash_u32(hash_u32(x, a, b) ^ y.astype(jnp.uint32), a ^ jnp.uint32(0x5851F42D), b)
+
+
+def run_starts(*sorted_keys: jax.Array, valid: jax.Array | None = None) -> jax.Array:
+    """Boolean start-of-run markers over jointly sorted key arrays.
+
+    A run is a maximal block of equal (key_0, …, key_m) tuples. Invalid
+    entries (sorted to the end by the caller) never start a run.
+    """
+    neq = None
+    for k in sorted_keys:
+        prev = jnp.concatenate([k[:1] ^ jnp.ones_like(k[:1]), k[:-1]])  # force first different
+        d = k != prev
+        neq = d if neq is None else (neq | d)
+    if valid is not None:
+        prev_valid = jnp.concatenate([jnp.zeros_like(valid[:1]), valid[:-1]])
+        neq = (neq | ~prev_valid) & valid
+    return neq

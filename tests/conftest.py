@@ -1,0 +1,10 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — unit tests run on 1 CPU
+device by design; multi-device tests spawn subprocesses with their own
+--xla_force_host_platform_device_count (see test_distributed.py)."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,70 @@
+"""Central vectors + one-pass assignment (paper §3.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import assign as A
+from repro.core.silk import Seeds
+
+
+def _seeds(groups, ids, k_max):
+    g = jnp.asarray(groups, jnp.int32)
+    i = jnp.asarray(ids, jnp.int32)
+    v = jnp.ones_like(g, dtype=bool)
+    return Seeds(g, i, v, jnp.int32(int(max(groups)) + 1), k_max)
+
+
+def test_centroid_centers_mean():
+    x = jnp.asarray([[0., 0.], [2., 0.], [0., 4.], [10., 10.]])
+    seeds = _seeds([0, 0, 0, 1], [0, 1, 2, 3], k_max=4)
+    c, valid = A.centroid_centers(x, seeds)
+    np.testing.assert_allclose(np.array(c[0]), [2 / 3, 4 / 3], rtol=1e-6)
+    np.testing.assert_allclose(np.array(c[1]), [10, 10], rtol=1e-6)
+    assert valid.tolist() == [True, True, False, False]
+
+
+def test_mode_centers_majority_and_tiebreak():
+    codes = jnp.asarray([[1, 7], [1, 8], [2, 8], [5, 5]], jnp.int32)
+    seeds = _seeds([0, 0, 0, 1], [0, 1, 2, 3], k_max=2)
+    c, valid = A.mode_centers(codes, seeds)
+    assert c[0].tolist() == [1, 8]
+    assert c[1].tolist() == [5, 5]
+
+
+def test_mode_centers_tie_smallest_value():
+    codes = jnp.asarray([[3], [9]], jnp.int32)
+    seeds = _seeds([0, 0], [0, 1], k_max=1)
+    c, _ = A.mode_centers(codes, seeds)
+    assert c[0, 0] == 3                 # tie -> smallest value
+
+
+@given(st.integers(1, 5), st.integers(4, 40))
+@settings(max_examples=20, deadline=None)
+def test_assign_l2_optimality(k, n):
+    key = jax.random.PRNGKey(n * 7 + k)
+    x = jax.random.normal(key, (n, 8))
+    c = jax.random.normal(jax.random.fold_in(key, 1), (k, 8))
+    valid = jnp.ones((k,), bool)
+    labels, d2 = A.assign_l2(x, c, valid, block=16)
+    full = ((x[:, None, :] - c[None]) ** 2).sum(-1)
+    np.testing.assert_array_equal(np.array(labels), np.array(full.argmin(1)))
+    np.testing.assert_allclose(np.array(d2), np.array(full.min(1)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_assign_respects_center_validity():
+    x = jnp.zeros((4, 2))
+    c = jnp.asarray([[0., 0.], [100., 100.]])
+    valid = jnp.asarray([False, True])
+    labels, _ = A.assign_hamming(x.astype(jnp.int32), c.astype(jnp.int32),
+                                 valid)
+    assert (np.array(labels) == 1).all()
+
+
+def test_cluster_radius_max_and_empty():
+    d = jnp.asarray([1., 5., 2.])
+    lab = jnp.asarray([0, 0, 1])
+    r = A.cluster_radius(d, lab, 3)
+    assert r.tolist() == [5., 2., 0.]   # empty cluster -> 0

@@ -1,0 +1,163 @@
+"""Bucket construction + SILK invariants (paper §3.1-3.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.buckets import partition_by_signature, partition_even
+from repro.core.silk import select_top_groups, silk_round, silk_seeding
+from repro.utils.hashing import derive_hash_keys
+
+
+# -- Algorithm 1: even partition ---------------------------------------------
+
+@given(st.integers(2, 6), st.integers(10, 120))
+@settings(max_examples=30, deadline=None)
+def test_partition_even_sizes(t, n):
+    h = jnp.linspace(0, 1, n)[:, None] * jnp.ones((1, 3))
+    b = partition_even(h, t)
+    for row in np.array(b.segments):
+        sizes = np.bincount(row, minlength=t)
+        assert sizes.max() - sizes.min() <= 1      # even granularity
+    # ids are a permutation per table
+    for row in np.array(b.ids):
+        assert sorted(row.tolist()) == list(range(n))
+
+
+def test_partition_even_keeps_proximity(rng):
+    """Bucket index is monotone in hash rank (proximity preserved)."""
+    h = jax.random.normal(rng, (64,))[:, None]
+    b = partition_even(h, 4)
+    seg = np.array(b.segments[0])
+    ids = np.array(b.ids[0])
+    assert (np.diff(seg) >= 0).all()               # segments ascend
+    # the sorted-by-hash order of ids matches ascending hash values
+    hv = np.array(h[:, 0])[ids]
+    assert (np.diff(hv) >= 0).all()
+
+
+def test_partition_by_signature_groups_equal_sigs():
+    sigs = jnp.asarray([[3, 1, 3, 2, 1, 3]], dtype=jnp.uint32)
+    b = partition_by_signature(sigs)
+    ids = np.array(b.ids[0])
+    seg = np.array(b.segments[0])
+    assert int(b.num_buckets[0]) == 3
+    groups = {}
+    for i, s in zip(ids, seg):
+        groups.setdefault(int(s), set()).add(int(i))
+    assert set(map(frozenset, groups.values())) == {
+        frozenset({1, 4}), frozenset({3}), frozenset({0, 2, 5})}
+
+
+# -- SILK ---------------------------------------------------------------------
+
+def _flat_buckets(buckets: list[list[int]]):
+    ids = jnp.asarray([i for b in buckets for i in b], dtype=jnp.int32)
+    seg = jnp.asarray([j for j, b in enumerate(buckets) for _ in b],
+                      dtype=jnp.int32)
+    return ids, seg
+
+
+def test_silk_majority_voting_paper_example(rng):
+    """Figure 1 / Example 2 structure: four near-identical buckets with a
+    shared core {1,2,4} + noise must majority-vote to exactly the core."""
+    buckets = [[1, 2, 4, 7], [1, 2, 4, 8], [1, 2, 4], [1, 2, 4, 9]]
+    ids, seg = _flat_buckets(buckets)
+    keys = derive_hash_keys(rng, (1,))  # K=1: all buckets share min id 1
+    pairs = silk_round(ids, seg, jnp.ones_like(ids, bool), 4, keys,
+                       delta=1, min_bin_size=2, pair_cap=64)
+    got = {int(i) for i, v in zip(pairs.id, pairs.valid) if v}
+    assert got == {1, 2, 4}            # 7, 8, 9 appear once -> filtered
+    assert int(pairs.num_groups) == 1
+
+
+def test_silk_delta_filters_small_cores(rng):
+    buckets = [[1, 2], [1, 2], [5, 6, 7, 8, 9], [5, 6, 7, 8, 9]]
+    ids, seg = _flat_buckets(buckets)
+    keys = derive_hash_keys(rng, (2,))
+    pairs = silk_round(ids, seg, jnp.ones_like(ids, bool), 4, keys,
+                       delta=3, min_bin_size=2, pair_cap=64)
+    got = {int(i) for i, v in zip(pairs.id, pairs.valid) if v}
+    assert got <= {5, 6, 7, 8, 9}      # the size-2 core fails delta=3
+
+
+def test_silk_singleton_bins_ignored(rng):
+    """|Bin| <= 1 is skipped in seeding mode (paper Algorithm 4 line 9)."""
+    buckets = [[1, 2, 3], [7, 8, 9]]   # disjoint -> different signatures
+    ids, seg = _flat_buckets(buckets)
+    keys = derive_hash_keys(rng, (3,))
+    pairs = silk_round(ids, seg, jnp.ones_like(ids, bool), 2, keys,
+                       delta=1, min_bin_size=2, pair_cap=64)
+    assert int(pairs.valid.sum()) == 0
+
+
+def test_silk_dedup_keeps_singletons_and_merges_dups(rng):
+    """Dedup mode (min_bin_size=1): unique cores survive; identical cores
+    merge (paper: 'remove the near duplications of C')."""
+    cores = [[1, 2, 4], [1, 2, 4], [6]]
+    ids, seg = _flat_buckets(cores)
+    keys = derive_hash_keys(rng, (3,))
+    pairs = silk_round(ids, seg, jnp.ones_like(ids, bool), 3, keys,
+                       delta=1, min_bin_size=1, pair_cap=64)
+    groups = {}
+    for gr, i, v in zip(pairs.group, pairs.id, pairs.valid):
+        if v:
+            groups.setdefault(int(gr), set()).add(int(i))
+    assert sorted(map(frozenset, groups.values()), key=len) == [
+        frozenset({6}), frozenset({1, 2, 4})]
+
+
+def test_silk_dedup_idempotent(rng):
+    """Running dedup twice changes nothing (fixed point)."""
+    cores = [[1, 2, 3], [9, 10, 11], [20]]
+    ids, seg = _flat_buckets(cores)
+    keys = derive_hash_keys(rng, (3,))
+    p1 = silk_round(ids, seg, jnp.ones_like(ids, bool), 3, keys,
+                    delta=1, min_bin_size=1, pair_cap=64)
+    seg2 = jnp.where(p1.valid, p1.group, 63)
+    p2 = silk_round(p1.id, seg2, p1.valid, 64, keys,
+                    delta=1, min_bin_size=1, pair_cap=64)
+    as_sets = lambda p: sorted(
+        ({int(i) for g2, i, v in zip(p.group, p.id, p.valid)
+          if v and int(g2) == int(g)} for g in set(
+              int(x) for x, v in zip(p.group, p.valid) if v)), key=sorted)
+    assert as_sets(p1) == as_sets(p2)
+
+
+def test_select_top_groups_budget(rng):
+    from repro.core.silk import SeedPairs
+    group = jnp.asarray([0, 0, 0, 1, 1, 2], jnp.int32)
+    ids = jnp.arange(6, dtype=jnp.int32)
+    valid = jnp.ones(6, bool)
+    pairs = SeedPairs(group, ids, valid, jnp.int32(3), jnp.int32(0))
+    seeds = select_top_groups(pairs, 8, k_max=2)
+    assert int(seeds.k_star) == 2
+    kept = {int(g) for g, v in zip(seeds.group, seeds.valid) if v}
+    assert kept == {0, 1}              # two largest groups kept
+
+
+def test_silk_seeding_end_to_end_discovers_clusters(rng):
+    """Full SILK over QALSH buckets of separable blobs: k* >= true k and
+    every discovered core is label-pure."""
+    from repro.core import lsh
+    from repro.data.synthetic import dense_blobs
+    data = dense_blobs(rng, n=512, d=16, k=8, spread=0.02)
+    a = lsh.qalsh_projections(jax.random.PRNGKey(7), 16, 12)
+    buckets = partition_even(lsh.qalsh_hash(data.x, a), 8)
+    seeds, overflow = silk_seeding(buckets, jax.random.PRNGKey(8),
+                                   silk_k=2, silk_l=4, delta=4,
+                                   pair_cap=4096, k_max=64)
+    assert int(seeds.k_star) >= 8
+    true = np.array(data.true_labels)
+    dominance = []
+    for g in range(int(seeds.k_star)):
+        members = np.array(seeds.id)[(np.array(seeds.group) == g)
+                                     & np.array(seeds.valid)]
+        if len(members):
+            counts = np.bincount(true[members])
+            dominance.append(counts.max() / len(members))
+    # cores are dominated by one true cluster each; occasional bridge cores
+    # are expected — the one-pass assignment corrects them (paper §3.3)
+    dominance = np.array(dominance)
+    assert (dominance > 0.9).mean() > 0.75, dominance

@@ -1,0 +1,166 @@
+"""Multi-device tests. Each runs in a subprocess with fake host devices so
+the main pytest process keeps its single-device backend."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_with_devices(code: str, n: int = 8, timeout: int = 420) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         env=env, capture_output=True, text=True,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_compressed_psum_approximates_mean():
+    print(run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.distributed.compression import compressed_psum
+        mesh = Mesh(np.array(jax.devices()), ("d",))
+        x = jax.random.normal(jax.random.PRNGKey(0), (8, 500))
+        f = jax.shard_map(lambda xs: compressed_psum(xs[0], "d")[0][None],
+                          mesh=mesh, in_specs=(P("d", None),),
+                          out_specs=P("d", None), check_vma=False)
+        m = jax.jit(f)(x)
+        err = float(jnp.abs(m[0] - x.mean(0)).max() / jnp.abs(x.mean(0)).max())
+        assert err < 0.05, err
+        # every device holds the identical reduced tensor
+        assert bool(jnp.allclose(m[0], m[7]))
+        print("ok", err)
+    """))
+
+
+def test_error_feedback_removes_bias():
+    print(run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.distributed.compression import compressed_psum
+        mesh = Mesh(np.array(jax.devices()), ("d",))
+        # same tiny gradient every step: with error feedback the running sum
+        # of compressed means must track the true accumulation
+        g = jax.random.normal(jax.random.PRNGKey(1), (8, 64)) * 1e-3
+
+        def step(resid, _):
+            m, r = compressed_psum(g_local + resid, "d")
+            return r, m
+
+        def run(gl):
+            global g_local
+            g_local = gl[0]
+            resid = jnp.zeros((64,), jnp.float32)
+            resid, ms = jax.lax.scan(step, resid, None, length=50)
+            return ms.sum(0)[None]
+
+        f = jax.shard_map(run, mesh=mesh, in_specs=(P("d", None),),
+                          out_specs=P("d", None), check_vma=False)
+        total = jax.jit(f)(g)[0]
+        true = g.mean(0) * 50
+        rel = float(jnp.abs(total - true).max() / jnp.abs(true).max())
+        assert rel < 0.05, rel
+        print("ok", rel)
+    """))
+
+
+def test_distributed_geek_matches_quality():
+    print(run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np, collections
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.core.distributed import make_fit_dense
+        from repro.core.geek import GeekConfig
+        from repro.data.synthetic import sift_like
+        mesh = Mesh(np.array(jax.devices()), ("data",))
+        data = sift_like(jax.random.PRNGKey(0), n=4096, k=24)
+        cfg = GeekConfig(m=40, t=32, silk_l=6, delta=5, k_max=64,
+                         pair_cap=8192)
+        fit = make_fit_dense(mesh, cfg)
+        x = jax.device_put(data.x, NamedSharding(mesh, P("data", None)))
+        lab, c, cv, ks, rad, ovf = fit(x, jax.random.PRNGKey(1))
+        lab = np.array(lab); true = np.array(data.true_labels)
+        pur = sum(collections.Counter(true[lab==cc]).most_common(1)[0][1]
+                  for cc in set(lab.tolist()))/len(lab)
+        assert pur > 0.95, pur
+        assert int(ks) >= 24
+        print("ok purity", pur)
+    """, timeout=600))
+
+
+def test_pjit_train_step_runs_on_mesh():
+    print(run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_arch
+        from repro.launch.mesh import make_test_mesh, shardings_for
+        from repro.launch.steps import make_train_step
+        from repro.models import init_params, param_specs
+        from repro.models.sharding import activation_sharding
+        from repro.optim import adamw
+        cfg = get_arch("qwen3_0_6b", smoke=True)
+        mesh = make_test_mesh((2, 2))
+        opt = adamw(1e-3)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        psh = shardings_for(param_specs(cfg), mesh)
+        params = jax.device_put(params, psh)
+        state = jax.device_put(opt.init(params),
+                               shardings_for(opt.state_specs(
+                                   param_specs(cfg), params), mesh))
+        key = jax.random.PRNGKey(1)
+        batch = {"inputs": jax.random.randint(key, (4, 32), 0, cfg.vocab_size),
+                 "labels": jax.random.randint(key, (4, 32), 0, cfg.vocab_size)}
+        batch = jax.device_put(batch, NamedSharding(mesh, P("data")))
+        fn = make_train_step(cfg, opt)
+        with mesh, activation_sharding(mesh):
+            step = jax.jit(fn, donate_argnums=(0, 1))
+            losses = []
+            for i in range(8):
+                params, state, _, metrics = step(params, state,
+                                                 jnp.int32(i), batch)
+                losses.append(float(metrics["loss"]))
+        assert losses[-1] < losses[0], losses
+        print("ok", losses[0], "->", losses[-1])
+    """, timeout=600))
+
+
+def test_ddp_compress_matches_pjit_direction():
+    print(run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.configs import get_arch
+        from repro.distributed.compression import compressed_psum_tree
+        from repro.models import init_params, train_loss
+        cfg = get_arch("smollm_360m", smoke=True)
+        mesh = Mesh(np.array(jax.devices()), ("data",))
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        key = jax.random.PRNGKey(1)
+        batch = {"inputs": jax.random.randint(key, (8, 32), 0, cfg.vocab_size),
+                 "labels": jax.random.randint(key, (8, 32), 0, cfg.vocab_size)}
+
+        def ddp(params, batch):
+            loss, g = jax.value_and_grad(
+                lambda p: train_loss(p, cfg, batch)[0])(params)
+            gm, _ = compressed_psum_tree(g, "data")
+            return jax.lax.pmean(loss, "data"), gm
+
+        f = jax.shard_map(ddp, mesh=mesh, in_specs=(P(), P("data")),
+                          out_specs=(P(), P()), check_vma=False)
+        loss, g_comp = jax.jit(f)(params, batch)
+        # exact global gradient for comparison
+        loss2, g_true = jax.value_and_grad(
+            lambda p: train_loss(p, cfg, batch)[0])(params)
+        flat_c = jnp.concatenate([x.reshape(-1) for x in jax.tree.leaves(g_comp)])
+        flat_t = jnp.concatenate([x.reshape(-1).astype(jnp.float32)
+                                  for x in jax.tree.leaves(g_true)])
+        cos = jnp.dot(flat_c, flat_t) / (jnp.linalg.norm(flat_c)
+                                         * jnp.linalg.norm(flat_t))
+        assert float(cos) > 0.99, float(cos)
+        print("ok cosine", float(cos))
+    """, timeout=600))

@@ -1,0 +1,53 @@
+"""Property tests for the 32-bit hashing substrate."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.utils.hashing import derive_hash_keys, hash_u32, mix_u32, run_starts
+
+
+def test_hash_deterministic_and_dispersive(rng):
+    keys = derive_hash_keys(rng, (4,))
+    x = jnp.arange(10000, dtype=jnp.int32)
+    h1 = hash_u32(x, keys[0, 0], keys[0, 1])
+    h2 = hash_u32(x, keys[0, 0], keys[0, 1])
+    assert bool((h1 == h2).all())
+    # dispersion: few collisions among 10k values
+    assert len(np.unique(np.array(h1))) > 9990
+    # different keys -> different hashes
+    h3 = hash_u32(x, keys[1, 0], keys[1, 1])
+    assert not bool((h1 == h3).all())
+
+
+def test_derive_keys_a_odd(rng):
+    keys = derive_hash_keys(rng, (64,))
+    assert bool((keys[:, 0] % 2 == 1).all())
+
+
+@given(st.lists(st.integers(0, 5), min_size=1, max_size=40))
+@settings(max_examples=50, deadline=None)
+def test_run_starts_counts_unique_runs(vals):
+    arr = jnp.sort(jnp.asarray(vals, dtype=jnp.int32))
+    starts = run_starts(arr)
+    n_unique = len(set(vals))
+    assert int(starts.sum()) == n_unique
+    assert bool(starts[0])
+
+
+@given(st.lists(st.integers(0, 3), min_size=2, max_size=30),
+       st.integers(1, 29))
+@settings(max_examples=50, deadline=None)
+def test_run_starts_validity_mask(vals, nvalid):
+    nvalid = min(nvalid, len(vals))
+    arr = jnp.sort(jnp.asarray(vals, dtype=jnp.int32))
+    valid = jnp.arange(len(vals)) < nvalid
+    starts = run_starts(arr, valid=valid)
+    assert not bool(starts[nvalid:].any())
+
+
+def test_mix_order_sensitive():
+    a = mix_u32(mix_u32(jnp.uint32(0), jnp.uint32(1)), jnp.uint32(2))
+    b = mix_u32(mix_u32(jnp.uint32(0), jnp.uint32(2)), jnp.uint32(1))
+    assert int(a) != int(b)

@@ -1,0 +1,87 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.utils.hashing import derive_hash_keys
+
+
+@pytest.mark.parametrize("n,k,d", [(64, 8, 16), (130, 33, 70), (257, 128, 128),
+                                   (100, 5, 960)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_distance_argmin_l2_sweep(n, k, d, dtype):
+    key = jax.random.PRNGKey(n + k + d)
+    x = jax.random.normal(key, (n, d), dtype)
+    c = jax.random.normal(jax.random.fold_in(key, 1), (k, d), dtype)
+    valid = jnp.arange(k) % 7 != 3
+    lk, dk = ops.distance_argmin_l2(x, c, valid, bn=64, bk=32)
+    lr, dr = ref.distance_argmin_l2_ref(x, c, valid)
+    # ties under low precision can flip the argmin; compare distances instead
+    np.testing.assert_allclose(np.array(dk), np.array(dr),
+                               rtol=2e-2, atol=2e-2)
+    agree = float((lk == lr).mean())
+    assert agree > 0.99
+
+
+@pytest.mark.parametrize("n,k,d,card", [(50, 4, 9, 5), (129, 17, 45, 20),
+                                        (64, 8, 400, 1 << 15)])
+def test_distance_argmin_hamming_sweep(n, k, d, card):
+    key = jax.random.PRNGKey(n * k)
+    codes = jax.random.randint(key, (n, d), 0, card)
+    c = jax.random.randint(jax.random.fold_in(key, 1), (k, d), 0, card)
+    valid = jnp.ones((k,), bool)
+    lk, dk = ops.distance_argmin_hamming(codes, c, valid, bn=32, bk=8, chunk=16)
+    lr, dr = ref.distance_argmin_hamming_ref(codes, c, valid)
+    np.testing.assert_array_equal(np.array(dk), np.array(dr))
+    np.testing.assert_array_equal(np.array(lk), np.array(lr))
+
+
+@pytest.mark.parametrize("nb,bsz,K", [(10, 8, 1), (100, 64, 3), (33, 17, 5)])
+def test_minhash_even_buckets_sweep(nb, bsz, K, rng):
+    ids = jax.random.randint(rng, (nb, bsz), 0, 1 << 20)
+    keys = derive_hash_keys(jax.random.fold_in(rng, K), (K,))
+    sk = ops.minhash_even_buckets(ids, keys, bb=16)
+    sr = ref.minhash_even_buckets_ref(ids, keys)
+    np.testing.assert_array_equal(np.array(sk), np.array(sr))
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,dh", [(1, 4, 4, 128, 32),
+                                           (2, 8, 2, 100, 64),
+                                           (1, 6, 1, 65, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(B, Hq, Hkv, S, dh, causal, rng):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    q = jax.random.normal(k1, (B, Hq, S, dh), jnp.float32)
+    k = jax.random.normal(k2, (B, Hkv, S, dh), jnp.float32)
+    v = jax.random.normal(k3, (B, Hkv, S, dh), jnp.float32)
+    o1 = ops.flash_attention(q, k, v, causal=causal, bq=32, bk=32)
+    o2 = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.array(o1), np.array(o2),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16(rng):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    q = jax.random.normal(k1, (1, 2, 64, 32), jnp.bfloat16)
+    k = jax.random.normal(k2, (1, 2, 64, 32), jnp.bfloat16)
+    v = jax.random.normal(k3, (1, 2, 64, 32), jnp.bfloat16)
+    o1 = ops.flash_attention(q, k, v, bq=32, bk=32)
+    o2 = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.array(o1, np.float32),
+                               np.array(o2, np.float32), rtol=5e-2, atol=5e-2)
+
+
+def test_geek_pipeline_with_pallas_assignment(rng):
+    """use_pallas=True path produces the same clusters as the jnp path."""
+    from repro.core.geek import GeekConfig, fit_dense
+    from repro.data.synthetic import dense_blobs
+    import dataclasses
+    data = dense_blobs(rng, n=512, d=24, k=8)
+    base = GeekConfig(m=8, t=16, silk_l=3, delta=3, k_max=32, pair_cap=2048)
+    r1 = fit_dense(data.x, jax.random.PRNGKey(1), base)
+    r2 = fit_dense(data.x, jax.random.PRNGKey(1),
+                   dataclasses.replace(base, use_pallas=True))
+    assert int(r1.k_star) == int(r2.k_star)
+    assert float((r1.labels == r2.labels).mean()) > 0.999

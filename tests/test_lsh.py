@@ -1,0 +1,72 @@
+"""LSH family statistical properties (paper §2.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lsh
+from repro.utils.hashing import derive_hash_keys
+
+
+def _jaccard(a: set, b: set) -> float:
+    return len(a & b) / len(a | b)
+
+
+def test_minhash_collision_prob_tracks_jaccard(rng):
+    """Pr[minhash(A) == minhash(B)] ≈ J(A, B) over many hash draws."""
+    a = list(range(0, 60))
+    b = list(range(30, 90))          # J = 30/90 = 1/3
+    items = jnp.asarray([a, b], dtype=jnp.int32)
+    mask = jnp.ones_like(items, dtype=bool)
+    keys = derive_hash_keys(rng, (400, 1))
+    sigs = lsh.minhash_signatures(items, mask, keys)  # (400, 2), K=1
+    rate = float((sigs[:, 0] == sigs[:, 1]).mean())
+    assert abs(rate - 1 / 3) < 0.08
+
+
+def test_minhash_over_segments_matches_set_minhash(rng):
+    """Segment formulation == per-set formulation on the same buckets."""
+    keys = derive_hash_keys(rng, (3,))
+    ids = jnp.arange(64, dtype=jnp.int32)
+    seg = ids // 16                                   # 4 buckets of 16
+    sig_seg = lsh.minhash_over_segments(ids, seg, 4, keys)
+    items = ids.reshape(4, 16)
+    sig_set = lsh.minhash_signatures(items, jnp.ones_like(items, bool),
+                                     keys[None])[0]
+    assert bool((sig_seg == sig_set).all())
+
+
+def test_doph_preserves_jaccard(rng):
+    """codes agree per-dim with probability ≈ J (DOPH's guarantee)."""
+    k1, k2 = jax.random.split(rng)
+    universe = 1 << 20
+    core = np.random.RandomState(0).randint(0, universe, 200)
+    a = core[:150]
+    b = core[50:]                                     # J = 100/200 = 0.5
+    s = max(len(a), len(b))
+    sets = jnp.asarray(np.stack([a[:s], b[:s]]), dtype=jnp.int32)
+    mask = jnp.ones_like(sets, dtype=bool)
+    codes = lsh.doph_codes(sets, mask, k1, 256)
+    rate = float((codes[0] == codes[1]).mean())
+    true_j = _jaccard(set(a.tolist()), set(b.tolist()))
+    assert abs(rate - true_j) < 0.12
+
+
+def test_doph_densifies_empty_bins(rng):
+    """Tiny sets (most bins empty) still produce fully-populated codes."""
+    sets = jnp.asarray([[5, 9, 123]], dtype=jnp.int32)
+    mask = jnp.ones_like(sets, dtype=bool)
+    codes = lsh.doph_codes(sets, mask, rng, 64)
+    assert codes.shape == (1, 64)
+    assert int((codes == jnp.uint32(0xFFFFFFFF)).sum()) == 0
+
+
+def test_qalsh_projection_preserves_distance_order(rng):
+    """Closer pairs collide in projection more often than far pairs."""
+    k1, k2 = jax.random.split(rng)
+    x = jax.random.normal(k1, (3, 32))
+    near = x[0] + 0.01 * jax.random.normal(k2, (32,))
+    a = lsh.qalsh_projections(rng, 32, 64)
+    h = lsh.qalsh_hash(jnp.stack([x[0], near, x[1]]), a)
+    d_near = jnp.abs(h[0] - h[1]).mean()
+    d_far = jnp.abs(h[0] - h[2]).mean()
+    assert float(d_near) < float(d_far)
