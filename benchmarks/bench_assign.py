@@ -1,0 +1,106 @@
+"""Assignment hot-path benchmark: packed/one-hot vs equality Hamming + L2.
+
+Tracks the perf trajectory of GEEK's dominant O(n·d·k) term from PR 1
+onward. Emits the usual CSV rows *and* writes ``BENCH_assign.json`` so
+the numbers are diffable across PRs.
+
+  PYTHONPATH=src python -m benchmarks.bench_assign [--quick] [--out PATH]
+
+Headline shape (paper-scale assignment): n=65536, d=64, k=1024,
+card=16 (t_cat discretization bins -> 4-bit packed codes, 8 codes/word).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core import assign as A
+from repro.kernels import pack
+
+HEADLINE = dict(n=65536, d=64, k=1024, card=16)
+QUICK = dict(n=8192, d=64, k=128, card=16)
+
+
+def _data(n, d, k, card):
+    key = jax.random.PRNGKey(0)
+    codes = jax.random.randint(key, (n, d), 0, card, jnp.int32)
+    cents = jax.random.randint(jax.random.fold_in(key, 1), (k, d), 0, card,
+                               jnp.int32)
+    x = jax.random.normal(jax.random.fold_in(key, 2), (n, d))
+    cx = jax.random.normal(jax.random.fold_in(key, 3), (k, d))
+    valid = jnp.ones((k,), bool)
+    return codes, cents, x, cx, valid
+
+
+def run(quick: bool = False, out: str | None = None,
+        block: int = 2048, write_json: bool = True) -> dict:
+    shape = QUICK if quick else HEADLINE
+    n, d, k, card = shape["n"], shape["d"], shape["k"], shape["card"]
+    bits = pack.bits_for_cardinality(card)
+    codes, cents, x, cx, valid = _data(n, d, k, card)
+    xp = jax.block_until_ready(pack.pack_codes(codes, bits))
+    cp = jax.block_until_ready(pack.pack_codes(cents, bits))
+
+    results: dict[str, float] = {}
+
+    def bench(name, fn, *args, **kw):
+        jfn = jax.jit(lambda *a: fn(*a, **kw))
+        t = timeit(jfn, *args)
+        results[name] = t * 1e6
+        emit(f"assign/{name}", t, f"n={n} k={k} d={d}")
+
+    bench("hamming_equality", A.assign_hamming, codes, cents, valid,
+          block=block)
+    bench("hamming_packed", A.assign_hamming_packed, xp, cp, valid,
+          bits=bits, d=d, block=block)
+    bench("hamming_onehot", A.assign_hamming_onehot, codes, cents, valid,
+          card=card, block=block)
+    bench("l2", A.assign_l2, x, cx, valid, block=block)
+
+    eq = results["hamming_equality"]
+    fastest = min(results["hamming_packed"], results["hamming_onehot"])
+    speedup = eq / fastest
+    emit("assign/packed_speedup", 0.0, f"{speedup:.2f}x")
+
+    report = {
+        "host": {
+            "backend": jax.default_backend(),
+            "device": str(jax.devices()[0]),
+            "platform": platform.platform(),
+            "jax": jax.__version__,
+        },
+        "shape": {**shape, "bits": bits, "block": block},
+        "us_per_call": {k_: round(v, 1) for k_, v in results.items()},
+        "speedup_vs_equality": {
+            "hamming_packed": round(eq / results["hamming_packed"], 2),
+            "hamming_onehot": round(eq / results["hamming_onehot"], 2),
+            "best": round(speedup, 2),
+        },
+    }
+    if write_json:
+        out = out or os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_assign.json")
+        with open(out, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    report = run(quick=args.quick, out=args.out)
+    print(json.dumps(report, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.silk import Seeds
+from repro.kernels.pack import field_mismatch_count, onehot_codes
 from repro.utils.hashing import run_starts
 
 
@@ -96,6 +97,18 @@ def assign_l2(x: jax.Array, centers: jax.Array, center_valid: jax.Array,
     return _blocked(chunk, x, block)
 
 
+def assign_l2_with_partials(x: jax.Array, centers: jax.Array,
+                            center_valid: jax.Array, *, block: int = 4096):
+    """assign_l2 plus per-cluster partial sums/counts — the jnp
+    (second-pass) counterpart of the fused ``accumulate=True`` kernel."""
+    lab, d2 = assign_l2(x, centers, center_valid, block=block)
+    k = centers.shape[0]
+    sums = jax.ops.segment_sum(x.astype(jnp.float32), lab, num_segments=k)
+    cnt = jax.ops.segment_sum(jnp.ones_like(lab, jnp.float32), lab,
+                              num_segments=k)
+    return lab, d2, sums, cnt
+
+
 def assign_hamming(codes: jax.Array, centers: jax.Array, center_valid: jax.Array,
                    *, block: int = 4096) -> tuple[jax.Array, jax.Array]:
     """Nearest center under attribute-mismatch count (≈ 1-Jaccard on
@@ -106,6 +119,59 @@ def assign_hamming(codes: jax.Array, centers: jax.Array, center_valid: jax.Array
     def chunk(xb):
         eq = (xb[:, None, :] == centers[None, :, :]).sum(axis=-1)
         dist = d - eq
+        dist = jnp.where(center_valid[None, :], dist, big)
+        lab = jnp.argmin(dist, axis=-1)
+        return lab.astype(jnp.int32), jnp.min(dist, axis=-1).astype(jnp.float32)
+
+    return _blocked(chunk, codes, block)
+
+
+def assign_hamming_packed(packed: jax.Array, packed_centers: jax.Array,
+                          center_valid: jax.Array, *, bits: int,
+                          d: int | None = None,
+                          block: int = 4096) -> tuple[jax.Array, jax.Array]:
+    """assign_hamming on bit-packed codes (see `repro.kernels.pack`).
+
+    XOR + field-collapse + popcount over d·bits/32 uint32 words — no
+    (block, k, d) equality broadcast, 32/bits× less memory traffic.
+    Mismatch counts (and therefore labels) are bit-identical to the
+    unpacked path: a b-bit field differs iff the original codes differ.
+    Pass the unpacked width ``d`` to reproduce assign_hamming's ``d + 1``
+    invalid-center sentinel exactly (otherwise int32 max is used).
+    """
+    kpc = packed_centers
+    big = jnp.int32(jnp.iinfo(jnp.int32).max if d is None else d + 1)
+
+    def chunk(xb):
+        z = xb[:, None, :] ^ kpc[None, :, :]
+        dist = jnp.sum(field_mismatch_count(z, bits), axis=-1)
+        dist = jnp.where(center_valid[None, :], dist, big)
+        lab = jnp.argmin(dist, axis=-1)
+        return lab.astype(jnp.int32), jnp.min(dist, axis=-1).astype(jnp.float32)
+
+    return _blocked(chunk, packed, block)
+
+
+def assign_hamming_onehot(codes: jax.Array, centers: jax.Array,
+                          center_valid: jax.Array, *, card: int,
+                          block: int = 4096) -> tuple[jax.Array, jax.Array]:
+    """assign_hamming for low-cardinality codes via one-hot bf16 matmul.
+
+    matches = x1h @ c1h.T rides the MXU exactly like the L2 path (f32
+    accumulation keeps integer counts exact for d < 2**24, so labels stay
+    bit-identical to the equality path). One-hot width is d·card — only
+    worthwhile for small card (t_cat discretization bins).
+    """
+    d = codes.shape[1]
+    big = jnp.int32(d + 1)
+    c1h = onehot_codes(centers, card)                        # (k, d*card)
+
+    def chunk(xb):
+        x1h = onehot_codes(xb, card)
+        matches = jax.lax.dot_general(
+            x1h, c1h, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        dist = d - matches.astype(jnp.int32)
         dist = jnp.where(center_valid[None, :], dist, big)
         lab = jnp.argmin(dist, axis=-1)
         return lab.astype(jnp.int32), jnp.min(dist, axis=-1).astype(jnp.float32)

@@ -34,7 +34,31 @@ from repro.core import lsh
 from repro.core.buckets import BucketTables
 from repro.core.geek import GeekConfig
 from repro.core.silk import Seeds, select_top_groups, silk_round
+from repro.utils.compat import axis_size, shard_map
 from repro.utils.hashing import derive_hash_keys
+
+
+def _assign_l2(x_local, centers, center_valid, cfg: GeekConfig):
+    """Local one-pass assignment: fused Pallas kernel when cfg.use_pallas."""
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        return kops.distance_argmin_l2(x_local, centers, center_valid)
+    return assign_mod.assign_l2(x_local, centers, center_valid,
+                                block=cfg.assign_block)
+
+
+def _assign_l2_accumulate(x_local, centers, center_valid, cfg: GeekConfig):
+    """Assignment + per-cluster partial sums/counts for one Lloyd sweep.
+
+    On the Pallas path the accumulation is fused into the assignment
+    kernel (one-hot(labels)ᵀ @ x while the point tile is still in VMEM) —
+    the sweep makes no second pass over the data."""
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        return kops.distance_argmin_l2(x_local, centers, center_valid,
+                                       accumulate=True)
+    return assign_mod.assign_l2_with_partials(x_local, centers, center_valid,
+                                              block=cfg.assign_block)
 
 
 def _quantile_boundaries(h_local: jax.Array, t: int, samples: int,
@@ -56,7 +80,7 @@ def fit_dense_sharded(x_local: jax.Array, key: jax.Array, cfg: GeekConfig,
     """The per-device body. Call via shard_map (see make_fit_dense below).
     x_local: this device's (n/g, d) shard. Returns (labels_local, centers,
     center_valid, k_star, radius, overflow)."""
-    g = jax.lax.axis_size(axis)
+    g = axis_size(axis)
     idx = jax.lax.axis_index(axis)
     nl, d = x_local.shape
     n = nl * g
@@ -123,8 +147,18 @@ def fit_dense_sharded(x_local: jax.Array, key: jax.Array, cfg: GeekConfig,
     centers = sums / jnp.maximum(cnt, 1.0)[:, None]
     center_valid = cnt > 0
 
-    labels, d2 = assign_mod.assign_l2(x_local, centers, center_valid,
-                                      block=cfg.assign_block)
+    # optional Lloyd refinement: each sweep is one fused assign+accumulate
+    # pass (no second pass over the data) + a psum of the (k, d) partials
+    for _ in range(cfg.refine_sweeps):
+        _, _, psums, pcnt = _assign_l2_accumulate(x_local, centers,
+                                                  center_valid, cfg)
+        rsums = jax.lax.psum(psums, axis)
+        rcnt = jax.lax.psum(pcnt, axis)
+        centers = jnp.where((rcnt > 0)[:, None],
+                            rsums / jnp.maximum(rcnt, 1.0)[:, None], centers)
+        center_valid = center_valid & (rcnt > 0)
+
+    labels, d2 = _assign_l2(x_local, centers, center_valid, cfg)
     dists = jnp.sqrt(d2)
     radius = jax.lax.pmax(
         assign_mod.cluster_radius(dists, labels, cfg.k_max), axis)
@@ -140,7 +174,7 @@ def make_fit_dense(mesh, cfg: GeekConfig, *, axis: str = "data"):
         lab, c, cv, ks, rad, ovf = fn(xl, key)
         return lab, c, cv, ks, rad, ovf
 
-    mapped = jax.shard_map(
+    mapped = shard_map(
         body, mesh=mesh,
         in_specs=(P(axis, None), P()),
         out_specs=(P(axis), P(), P(), P(), P(), P()),

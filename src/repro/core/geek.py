@@ -22,6 +22,7 @@ from repro.core import assign as assign_mod
 from repro.core import lsh
 from repro.core.buckets import BucketTables, partition_by_signature, partition_even
 from repro.core.silk import Seeds, silk_seeding
+from repro.kernels.pack import bits_for_cardinality, pack_codes
 from repro.utils.hashing import combine2_u32, derive_hash_keys
 
 
@@ -44,6 +45,15 @@ class GeekConfig:
     # -- assignment --
     assign_block: int = 4096
     use_pallas: bool = False  # fused Pallas distance+argmin (TPU); jnp otherwise
+    # Hamming hot-path implementation (DESIGN.md §6):
+    #   "equality" — (n, k, d) equality broadcast (the seed path / oracle)
+    #   "packed"   — bit-packed codes, XOR + popcount, needs code_bits
+    #   "onehot"   — bf16 one-hot matmul on the MXU, needs code_bits <= 8
+    #   "auto"     — packed when a static code width is known, else equality
+    hamming_impl: str = "auto"
+    code_bits: int = 0     # static bound: hetero codes fit in this many bits
+                           # (0 = unknown; sparse DOPH codes are always 16)
+    refine_sweeps: int = 0  # Lloyd sweeps after seeding (distributed path)
 
 
 class GeekResult(NamedTuple):
@@ -70,9 +80,41 @@ def _finish_dense(x, seeds: Seeds, cfg: GeekConfig, overflow):
                       seeds, overflow)
 
 
-def _finish_codes(codes, seeds: Seeds, cfg: GeekConfig, overflow):
+def _finish_codes(codes, seeds: Seeds, cfg: GeekConfig, overflow, *,
+                  bits: int = 0):
+    """Mode centers + one-pass Hamming assignment.
+
+    ``bits`` is a static bound on the code width (0 = unknown). The
+    packed and one-hot paths produce mismatch counts bit-identical to the
+    equality path, so the choice is purely a throughput knob.
+    """
     centers, cvalid = assign_mod.mode_centers(codes, seeds)
-    if cfg.use_pallas:
+    impl = cfg.hamming_impl
+    if impl == "auto":
+        impl = "packed" if 0 < bits < 32 else "equality"
+    if impl in ("packed", "onehot") and not 0 < bits <= 32:
+        raise ValueError(f"hamming_impl={impl!r} needs a static code width; "
+                         "set GeekConfig.code_bits")
+    if impl == "onehot" and bits > 8:
+        raise ValueError("one-hot Hamming needs code_bits <= 8 "
+                         f"(got {bits}: one-hot width d * 2**bits)")
+
+    if impl == "packed":
+        bits = bits_for_cardinality(1 << bits)  # round up to packable width
+        xp = pack_codes(codes, bits)
+        cp = pack_codes(centers, bits)
+        if cfg.use_pallas:
+            from repro.kernels import ops as kops
+            labels, dists = kops.distance_argmin_hamming_packed(
+                xp, cp, cvalid, bits=bits)
+        else:
+            labels, dists = assign_mod.assign_hamming_packed(
+                xp, cp, cvalid, bits=bits, d=codes.shape[1],
+                block=cfg.assign_block)
+    elif impl == "onehot":
+        labels, dists = assign_mod.assign_hamming_onehot(
+            codes, centers, cvalid, card=1 << bits, block=cfg.assign_block)
+    elif cfg.use_pallas:
         from repro.kernels import ops as kops
         labels, dists = kops.distance_argmin_hamming(codes, centers, cvalid)
     else:
@@ -140,7 +182,11 @@ def fit_hetero(x_num: jax.Array, x_cat: jax.Array, key: jax.Array,
     seeds, overflow = silk_seeding(buckets, k_silk, silk_k=cfg.silk_k,
                                    silk_l=cfg.silk_l, delta=cfg.delta,
                                    pair_cap=cfg.pair_cap, k_max=cfg.k_max)
-    return _finish_codes(codes, seeds, cfg, overflow)
+    # numeric-only data: codes are t_cat discretization bins, width known
+    bits = cfg.code_bits
+    if bits == 0 and (x_cat is None or x_cat.shape[1] == 0):
+        bits = bits_for_cardinality(cfg.t_cat)
+    return _finish_codes(codes, seeds, cfg, overflow, bits=bits)
 
 
 # ---------------------------------------------------------------------------
@@ -160,4 +206,7 @@ def fit_sparse(sets: jax.Array, mask: jax.Array, key: jax.Array,
     seeds, overflow = silk_seeding(buckets, k_silk, silk_k=cfg.silk_k,
                                    silk_l=cfg.silk_l, delta=cfg.delta,
                                    pair_cap=cfg.pair_cap, k_max=cfg.k_max)
-    return _finish_codes(codes, seeds, cfg, overflow)
+    # doph_codes are truncated to 16 bits above — always packable 2:1.
+    # cfg.code_bits describes *hetero* codes, so it is ignored here: a
+    # narrower width would silently mask DOPH codes during packing.
+    return _finish_codes(codes, seeds, cfg, overflow, bits=16)

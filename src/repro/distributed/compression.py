@@ -22,6 +22,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.utils.compat import axis_size
+
 
 def quantize_int8(x: jax.Array):
     """Per-tensor symmetric int8. Returns (q, scale, residual)."""
@@ -36,7 +38,7 @@ def compressed_psum(x: jax.Array, axis_name: str):
     """Mean over `axis_name` with int8 wire format. Call inside shard_map.
     x: any-shape f32/bf16. Returns (mean, residual) — feed residual back
     into the next step's gradient (error feedback)."""
-    g = jax.lax.axis_size(axis_name)
+    g = axis_size(axis_name)
     shape = x.shape
     n = x.size
     pad = (-n) % g

@@ -1,0 +1,119 @@
+"""Shape-keyed tile selection for the assignment kernels (DESIGN.md §7).
+
+The seed kernels shipped hard-coded (bn, bk) = (256, 128) / (128, 128)
+blocks — fine at one benchmark shape, wasteful or VMEM-overflowing at
+others. This module picks (bn, bk, chunk) from (kind, n, k, d, itemsize)
+under an explicit VMEM budget, favouring the largest tiles that fit
+(bigger tiles = more MXU/VPU work per HBM byte). Results are lru_cached
+per shape key, so repeated `pallas_call` tracing reuses the decision,
+and every choice is deterministic — no on-device timing, which keeps the
+selector usable at trace time inside jit.
+
+Budget model: Pallas double-buffers grid inputs, so input tiles count
+twice; the elementwise distance temp ((bn, bk) for L2, (bn, bk, chunk)
+for the Hamming paths) counts once. We target half of VMEM
+(8 MiB of ~16) to leave headroom for the compiler's own scratch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+from jax.experimental import pallas as pl
+
+VMEM_BYTES = 16 * 1024 * 1024
+DEFAULT_BUDGET = VMEM_BYTES // 2
+
+_TILE_CANDIDATES = (1024, 512, 256, 128, 64, 32, 16, 8)
+_CHUNK_CANDIDATES = (512, 256, 128, 64, 32, 16, 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    bn: int      # point-tile rows
+    bk: int      # center-tile rows
+    chunk: int   # d-chunk (equality) / word-chunk (packed); 0 for l2
+
+
+def _pad_to(x: int, m: int) -> int:
+    return x + (-x) % m
+
+
+def _vmem_bytes(kind: str, bn: int, bk: int, chunk: int, d: int,
+                itemsize: int) -> int:
+    if kind == "l2":
+        dp = _pad_to(d, 128)
+        inputs = (bn * dp + bk * dp) * itemsize + 2 * bk * 4
+        temp = bn * bk * 4
+    elif kind == "hamming":
+        dp = _pad_to(d, chunk)
+        inputs = (bn * dp + bk * dp) * 4 + bk * 4
+        temp = bn * bk * chunk * 4 + bn * bk * 4
+    elif kind == "hamming_packed":
+        wp = _pad_to(d, chunk)          # here d is already the word count
+        inputs = (bn * wp + bk * wp) * 4 + bk * 4
+        temp = bn * bk * chunk * 4 + bn * bk * 4
+    else:
+        raise ValueError(f"unknown kernel kind {kind!r}")
+    scratch = bn * 8 + 2 * bn * 4
+    return 2 * inputs + temp + scratch
+
+
+@functools.lru_cache(maxsize=512)
+def select_tiles(kind: str, n: int, k: int, d: int, itemsize: int = 4,
+                 budget: int = DEFAULT_BUDGET) -> TileConfig:
+    """Largest (bn, bk, chunk) fitting the VMEM budget for this shape.
+
+    ``d`` is the attribute count for "l2"/"hamming" and the packed word
+    count for "hamming_packed". Ties prefer taller point tiles (bn) —
+    the n grid axis is the parallel one.
+    """
+    cap = max(n, k, 8) * 2
+    bns = [t for t in _TILE_CANDIDATES if t <= max(_pad_to(n, 8), 8) * 2 and t <= cap]
+    bks = [t for t in _TILE_CANDIDATES if t <= max(_pad_to(k, 8), 8) * 2 and t <= cap]
+    chunks = ([c for c in _CHUNK_CANDIDATES if c <= max(_pad_to(d, 8), 8)]
+              if kind != "l2" else [0])
+    if not chunks:
+        chunks = [8]
+    best = None
+    best_score = (-1, -1, -1)
+    for bn in bns or [8]:
+        for bk in bks or [8]:
+            for chunk in chunks:
+                if _vmem_bytes(kind, bn, bk, max(chunk, 1), d, itemsize) > budget:
+                    continue
+                score = (bn * bk, chunk, bn)
+                if best is None or score > best_score:
+                    best, best_score = TileConfig(bn, bk, chunk), score
+    if best is None:  # pathological d: take the smallest tile regardless
+        best = TileConfig(8, 8, 0 if kind == "l2" else 8)
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Cost estimates — let the XLA scheduler overlap the kernel correctly.
+# ---------------------------------------------------------------------------
+
+def cost_l2(n: int, k: int, d: int, itemsize: int = 4) -> pl.CostEstimate:
+    return pl.CostEstimate(
+        flops=2 * n * k * d + 5 * n * k,
+        bytes_accessed=n * d * itemsize + k * d * itemsize + n * 8,
+        transcendentals=0,
+    )
+
+
+def cost_hamming(n: int, k: int, d: int) -> pl.CostEstimate:
+    return pl.CostEstimate(
+        flops=2 * n * k * d,
+        bytes_accessed=n * d * 4 + k * d * 4 + n * 8,
+        transcendentals=0,
+    )
+
+
+def cost_hamming_packed(n: int, k: int, w: int) -> pl.CostEstimate:
+    # ~12 VPU ops per word: xor + log2(b) fold + 5-step SWAR popcount + add
+    return pl.CostEstimate(
+        flops=12 * n * k * w,
+        bytes_accessed=n * w * 4 + k * w * 4 + n * 8,
+        transcendentals=0,
+    )

@@ -1,18 +1,31 @@
-"""Fused pairwise-distance + argmin Pallas TPU kernel.
+"""Fused pairwise-distance + argmin Pallas TPU kernel family.
 
 GEEK's one-pass assignment (paper §3.3) is O(n·d·k) — the dominant compute
 term (Table 1). The naive XLA path materializes the (n, k) distance matrix
-in HBM; this kernel streams (bn, d) point tiles and (bk, d) center tiles
-through VMEM, computes X·Cᵀ on the MXU, and keeps only the running
-(min, argmin) per point — HBM traffic drops from O(n·k) to O(n·d + k·d + n).
+in HBM; these kernels stream (bn, d) point tiles and (bk, d) center tiles
+through VMEM and keep only the running (min, argmin) per point — HBM
+traffic drops from O(n·k) to O(n·d + k·d + n).
 
 Grid: (n/bn, k/bk), k innermost; scratch (running min/argmin) persists
-across the k sweep and is flushed on the last k tile.
+across the k sweep and is flushed on the last k tile. The n axis is
+embarrassingly parallel; the k axis carries the scratch, so the grid is
+annotated ``dimension_semantics=("parallel", "arbitrary")``.
 
-Two metrics:
-  - L2       : ||x||² − 2·x·c + ||c||²  (MXU matmul)
-  - Hamming  : #mismatching attributes  (VPU equality counts, chunked over d)
-    ≈ (1 − Jaccard)·d on minwise codes, the paper's hetero/sparse metric.
+Tile sizes default to the shape-keyed autotuner (`repro.kernels.autotune`)
+instead of hard-coded blocks; explicit bn/bk/chunk overrides remain for
+tests and benchmarking.
+
+Three metrics:
+  - L2             : ‖x‖² − 2·x·c + ‖c‖²  (MXU matmul). Optionally also
+                     accumulates per-cluster partial sums + counts in the
+                     same pass (``accumulate=True``) so a Lloyd refinement
+                     sweep needs no second pass over the data.
+  - Hamming        : #mismatching attributes (VPU equality counts,
+                     chunked over d) ≈ (1 − Jaccard)·d on minwise codes.
+  - Hamming packed : same counts on bit-packed uint32 codes — XOR +
+                     field-collapse + SWAR popcount over d·b/32 words,
+                     32/b× less HBM traffic and no (bn, bk, d) equality
+                     broadcast (DESIGN.md §6).
 """
 from __future__ import annotations
 
@@ -22,6 +35,22 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import autotune
+from repro.kernels.pack import field_mismatch_count
+
+_PARAMS = pltpu.TPUCompilerParams(
+    dimension_semantics=("parallel", "arbitrary"))
+# the accumulating variant writes one shared (k, d) output block from every
+# n-tile, so neither grid axis is safe to parallelize
+_PARAMS_ACC = pltpu.TPUCompilerParams(
+    dimension_semantics=("arbitrary", "arbitrary"))
+
+
+def _resolve_tiles(kind: str, n: int, k: int, d: int, itemsize: int,
+                   bn, bk, chunk):
+    tc = autotune.select_tiles(kind, n, k, d, itemsize)
+    return (bn or tc.bn, bk or tc.bk, chunk or tc.chunk)
 
 
 # ---------------------------------------------------------------------------
@@ -58,51 +87,137 @@ def _l2_kernel(x_ref, c_ref, csq_ref, valid_ref, lab_ref, dist_ref,
         dist_ref[...] = jnp.maximum(minv[...], 0.0)
 
 
-@functools.partial(jax.jit, static_argnames=("bn", "bk", "interpret"))
+def _l2_acc_kernel(x_ref, c_ref, csq_ref, valid_ref,
+                   lab_ref, dist_ref, sum_ref, cnt_ref,
+                   minv, argv, *, bk: int, nk: int, bn: int, n: int,
+                   kpad: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        minv[...] = jnp.full_like(minv, jnp.float32(jnp.finfo(jnp.float32).max))
+        argv[...] = jnp.zeros_like(argv)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init_acc():
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    dot = jax.lax.dot_general(x, c, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    xsq = jnp.sum(x * x, axis=-1, keepdims=True)
+    d2 = xsq - 2.0 * dot + csq_ref[...]
+    d2 = jnp.where(valid_ref[...] != 0, d2,
+                   jnp.float32(jnp.finfo(jnp.float32).max))
+
+    local_arg = jnp.argmin(d2, axis=-1).astype(jnp.int32)
+    local_min = jnp.min(d2, axis=-1)
+    better = local_min[:, None] < minv[...]
+    argv[...] = jnp.where(better, local_arg[:, None] + j * bk, argv[...])
+    minv[...] = jnp.where(better, local_min[:, None], minv[...])
+
+    @pl.when(j == nk - 1)
+    def _flush():
+        lab_ref[...] = argv[...]
+        dist_ref[...] = jnp.maximum(minv[...], 0.0)
+        # fused per-cluster accumulation: one-hot(labels)ᵀ @ x on the MXU —
+        # the refinement sweep reuses the x tile already resident in VMEM
+        row = i * bn + jax.lax.broadcasted_iota(jnp.int32, (bn, 1), 0)
+        onehot = ((argv[...] == jax.lax.broadcasted_iota(
+            jnp.int32, (bn, kpad), 1)) & (row < n)).astype(jnp.float32)
+        sum_ref[...] += jax.lax.dot_general(
+            onehot, x, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)              # (kpad, d)
+        cnt_ref[...] += jnp.sum(onehot, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bk", "accumulate",
+                                             "interpret"))
 def distance_argmin_l2(x: jax.Array, centers: jax.Array, center_valid: jax.Array,
-                       *, bn: int = 256, bk: int = 128,
-                       interpret: bool = False) -> tuple[jax.Array, jax.Array]:
-    """Returns (labels (n,), squared distance (n,)). Shapes are padded to
-    tile multiples here; d is zero-padded (zeros do not change L2)."""
+                       *, bn: int | None = None, bk: int | None = None,
+                       accumulate: bool = False, interpret: bool = False):
+    """Returns (labels (n,), squared distance (n,)); with ``accumulate=True``
+    additionally (per-cluster partial sums (k, d) f32, counts (k,) f32).
+    Shapes are padded to tile multiples here; d is zero-padded (zeros do
+    not change L2). ``accumulate`` pins the (k_pad, d_pad) accumulator in
+    VMEM for the whole grid — it needs k·d ≲ 2M f32 on current TPUs; use
+    the jnp second pass (`assign_l2_with_partials`) beyond that."""
     n, d = x.shape
     k = centers.shape[0]
+    if accumulate and (bn is None or bk is None):
+        # the (k_pad, d_pad) accumulator block stays VMEM-resident for the
+        # whole grid — carve it out of the tile budget (k_pad <= pad(k, 1024)
+        # since every bk candidate divides 1024)
+        acc_bytes = (-(-k // 1024) * 1024) * ((d + (-d) % 128) + 1) * 4
+        budget = max(autotune.DEFAULT_BUDGET - acc_bytes,
+                     autotune.DEFAULT_BUDGET // 8)
+        tc = autotune.select_tiles("l2", n, k, d, 4, budget)
+        bn, bk = bn or tc.bn, bk or tc.bk
+    else:
+        bn, bk, _ = _resolve_tiles("l2", n, k, d, 4, bn, bk, None)
     npad, kpad = (-n) % bn, (-k) % bk
     dpad = (-d) % 128  # MXU lane alignment
     xp = jnp.pad(x.astype(jnp.float32), ((0, npad), (0, dpad)))
     cp = jnp.pad(centers.astype(jnp.float32), ((0, kpad), (0, dpad)))
     vp = jnp.pad(center_valid.astype(jnp.int32), (0, kpad))
     csq = jnp.sum(cp * cp, axis=-1)[None, :]                 # (1, k+pad)
-    np_, kp_ = n + npad, k + kpad
+    np_, kp_, dp_ = n + npad, k + kpad, d + dpad
     nk = kp_ // bk
 
-    lab, dist = pl.pallas_call(
-        functools.partial(_l2_kernel, bk=bk, nk=nk),
+    in_specs = [
+        pl.BlockSpec((bn, dp_), lambda i, j: (i, 0)),
+        pl.BlockSpec((bk, dp_), lambda i, j: (j, 0)),
+        pl.BlockSpec((1, bk), lambda i, j: (0, j)),
+        pl.BlockSpec((1, bk), lambda i, j: (0, j)),
+    ]
+    out_specs = [
+        pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+        pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((np_, 1), jnp.int32),
+        jax.ShapeDtypeStruct((np_, 1), jnp.float32),
+    ]
+    scratch = [pltpu.VMEM((bn, 1), jnp.float32),
+               pltpu.VMEM((bn, 1), jnp.int32)]
+
+    if not accumulate:
+        lab, dist = pl.pallas_call(
+            functools.partial(_l2_kernel, bk=bk, nk=nk),
+            grid=(np_ // bn, nk),
+            in_specs=in_specs, out_specs=out_specs, out_shape=out_shape,
+            scratch_shapes=scratch,
+            compiler_params=_PARAMS,
+            cost_estimate=autotune.cost_l2(np_, kp_, dp_),
+            interpret=interpret,
+        )(xp, cp, csq, vp[None, :])
+        return lab[:n, 0], dist[:n, 0]
+
+    out_specs += [
+        pl.BlockSpec((kp_, dp_), lambda i, j: (0, 0)),
+        pl.BlockSpec((1, kp_), lambda i, j: (0, 0)),
+    ]
+    out_shape += [
+        jax.ShapeDtypeStruct((kp_, dp_), jnp.float32),
+        jax.ShapeDtypeStruct((1, kp_), jnp.float32),
+    ]
+    lab, dist, sums, cnt = pl.pallas_call(
+        functools.partial(_l2_acc_kernel, bk=bk, nk=nk, bn=bn, n=n, kpad=kp_),
         grid=(np_ // bn, nk),
-        in_specs=[
-            pl.BlockSpec((bn, d + dpad), lambda i, j: (i, 0)),
-            pl.BlockSpec((bk, d + dpad), lambda i, j: (j, 0)),
-            pl.BlockSpec((1, bk), lambda i, j: (0, j)),
-            pl.BlockSpec((1, bk), lambda i, j: (0, j)),
-        ],
-        out_specs=[
-            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
-            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((np_, 1), jnp.int32),
-            jax.ShapeDtypeStruct((np_, 1), jnp.float32),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((bn, 1), jnp.float32),
-            pltpu.VMEM((bn, 1), jnp.int32),
-        ],
+        in_specs=in_specs, out_specs=out_specs, out_shape=out_shape,
+        scratch_shapes=scratch,
+        compiler_params=_PARAMS_ACC,
+        cost_estimate=autotune.cost_l2(np_, 2 * kp_, dp_),
         interpret=interpret,
     )(xp, cp, csq, vp[None, :])
-    return lab[:n, 0], dist[:n, 0]
+    return lab[:n, 0], dist[:n, 0], sums[:k, :d], cnt[0, :k]
 
 
 # ---------------------------------------------------------------------------
-# Hamming kernel (categorical codes)
+# Hamming kernel (unpacked categorical codes)
 # ---------------------------------------------------------------------------
 
 def _ham_kernel(x_ref, c_ref, valid_ref, lab_ref, dist_ref, minv, argv,
@@ -143,13 +258,14 @@ def _ham_kernel(x_ref, c_ref, valid_ref, lab_ref, dist_ref, minv, argv,
 
 @functools.partial(jax.jit, static_argnames=("bn", "bk", "chunk", "interpret"))
 def distance_argmin_hamming(codes: jax.Array, centers: jax.Array,
-                            center_valid: jax.Array, *, bn: int = 128,
-                            bk: int = 128, chunk: int = 64,
+                            center_valid: jax.Array, *, bn: int | None = None,
+                            bk: int | None = None, chunk: int | None = None,
                             interpret: bool = False) -> tuple[jax.Array, jax.Array]:
     """Returns (labels (n,), mismatch count (n,) int32). Padding uses
     distinct sentinels so padded attributes never match."""
     n, d = codes.shape
     k = centers.shape[0]
+    bn, bk, chunk = _resolve_tiles("hamming", n, k, d, 4, bn, bk, chunk)
     npad, kpad, dpad = (-n) % bn, (-k) % bk, (-d) % chunk
     xp = jnp.pad(codes.astype(jnp.int32), ((0, npad), (0, dpad)),
                  constant_values=-1)
@@ -179,7 +295,101 @@ def distance_argmin_hamming(codes: jax.Array, centers: jax.Array,
             pltpu.VMEM((bn, 1), jnp.int32),
             pltpu.VMEM((bn, 1), jnp.int32),
         ],
+        compiler_params=_PARAMS,
+        cost_estimate=autotune.cost_hamming(np_, kp_, dp_),
         interpret=interpret,
     )(xp, cp, vp[None, :])
     # padded attributes never match either sentinel -> subtract them back out
     return lab[:n, 0], dist[:n, 0] - dpad
+
+
+# ---------------------------------------------------------------------------
+# Packed Hamming kernel (bit-packed codes, XOR + popcount — DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+def _ham_packed_kernel(x_ref, c_ref, valid_ref, lab_ref, dist_ref, minv, argv,
+                       *, bk: int, nk: int, w: int, chunk: int, bits: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        minv[...] = jnp.full_like(minv, jnp.int32(jnp.iinfo(jnp.int32).max))
+        argv[...] = jnp.zeros_like(argv)
+
+    x = x_ref[...]                                           # (bn, w) uint32
+    c = c_ref[...]                                           # (bk, w) uint32
+    nchunks = w // chunk
+
+    def body(ci, acc):
+        xs = jax.lax.dynamic_slice_in_dim(x, ci * chunk, chunk, 1)
+        cs = jax.lax.dynamic_slice_in_dim(c, ci * chunk, chunk, 1)
+        z = xs[:, None, :] ^ cs[None, :, :]                  # (bn, bk, chunk)
+        return acc + jnp.sum(field_mismatch_count(z, bits), axis=-1)
+
+    dist = jax.lax.fori_loop(0, nchunks, body,
+                             jnp.zeros((x.shape[0], c.shape[0]), jnp.int32))
+    dist = jnp.where(valid_ref[...] != 0, dist, jnp.int32(jnp.iinfo(jnp.int32).max))
+
+    local_arg = jnp.argmin(dist, axis=-1).astype(jnp.int32)
+    local_min = jnp.min(dist, axis=-1)
+    better = local_min[:, None] < minv[...]
+    argv[...] = jnp.where(better, local_arg[:, None] + j * bk, argv[...])
+    minv[...] = jnp.where(better, local_min[:, None], minv[...])
+
+    @pl.when(j == nk - 1)
+    def _flush():
+        lab_ref[...] = argv[...]
+        dist_ref[...] = minv[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bn", "bk", "chunk",
+                                             "interpret"))
+def distance_argmin_hamming_packed(packed: jax.Array, packed_centers: jax.Array,
+                                   center_valid: jax.Array, *, bits: int,
+                                   bn: int | None = None, bk: int | None = None,
+                                   chunk: int | None = None,
+                                   interpret: bool = False
+                                   ) -> tuple[jax.Array, jax.Array]:
+    """Fused argmin over bit-packed codes (see `repro.kernels.pack`).
+
+    packed: (n, w) uint32, packed_centers: (k, w) uint32, both from
+    `pack_codes(..., bits)`. Returns (labels (n,), mismatch count (n,)).
+    Word padding is zero on both sides, so padded fields never mismatch —
+    counts are exact with no sentinel correction.
+    """
+    n, w = packed.shape
+    k = packed_centers.shape[0]
+    bn, bk, chunk = _resolve_tiles("hamming_packed", n, k, w, 4, bn, bk, chunk)
+    npad, kpad, wpad = (-n) % bn, (-k) % bk, (-w) % chunk
+    xp = jnp.pad(packed.astype(jnp.uint32), ((0, npad), (0, wpad)))
+    cp = jnp.pad(packed_centers.astype(jnp.uint32), ((0, kpad), (0, wpad)))
+    vp = jnp.pad(center_valid.astype(jnp.int32), (0, kpad))
+    np_, kp_, wp_ = n + npad, k + kpad, w + wpad
+    nk = kp_ // bk
+
+    lab, dist = pl.pallas_call(
+        functools.partial(_ham_packed_kernel, bk=bk, nk=nk, w=wp_,
+                          chunk=chunk, bits=bits),
+        grid=(np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bn, wp_), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, wp_), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, bk), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_, 1), jnp.int32),
+            jax.ShapeDtypeStruct((np_, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bn, 1), jnp.int32),
+            pltpu.VMEM((bn, 1), jnp.int32),
+        ],
+        compiler_params=_PARAMS,
+        cost_estimate=autotune.cost_hamming_packed(np_, kp_, wp_),
+        interpret=interpret,
+    )(xp, cp, vp[None, :])
+    return lab[:n, 0], dist[:n, 0]

@@ -1,0 +1,129 @@
+"""Bit-packed categorical code layout (DESIGN.md §6).
+
+The unpacked Hamming path moves one int32 per categorical attribute and
+materializes a (bn, bk, d) equality tensor on the VPU. Codes produced by
+the GEEK pipeline are narrow — t_cat discretization bins (4-5 bits),
+16-bit truncated DOPH codes — so we pack ``32 // bits`` codes per uint32
+lane. Distance then becomes XOR + field-collapse + popcount over
+``d * bits / 32`` words: HBM traffic and the broadcast tensor both shrink
+by ``32 / bits``×, and mismatch counts stay bit-identical to the
+equality path (every b-bit field either matches exactly or differs).
+
+Zero-padding is self-consistent: unused fields in the last word are
+zero-filled on *both* points and centers, so padded fields never add
+mismatches — no sentinel subtraction needed.
+
+Also here: the one-hot encoding used by the MXU Hamming path (matches
+become a bf16 matmul, so categorical assignment rides the systolic array
+exactly like L2 does).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+SUPPORTED_BITS = (1, 2, 4, 8, 16, 32)
+
+# uint32 with the lowest bit of every b-bit field set, per supported width.
+_FIELD_LSB = {
+    1: 0xFFFFFFFF,
+    2: 0x55555555,
+    4: 0x11111111,
+    8: 0x01010101,
+    16: 0x00010001,
+    32: 0x00000001,
+}
+
+
+def bits_for_cardinality(card: int) -> int:
+    """Smallest supported field width holding codes in [0, card)."""
+    if card < 1:
+        raise ValueError(f"cardinality must be positive, got {card}")
+    for b in SUPPORTED_BITS:
+        if b == 32 or (1 << b) >= card:
+            return b
+    return 32
+
+
+def codes_per_word(bits: int) -> int:
+    if bits not in SUPPORTED_BITS:
+        raise ValueError(f"bits must be one of {SUPPORTED_BITS}, got {bits}")
+    return 32 // bits
+
+
+def packed_width(d: int, bits: int) -> int:
+    """Number of uint32 words per row for d codes of the given width."""
+    cpw = codes_per_word(bits)
+    return -(-d // cpw)
+
+
+def pack_codes(codes: jax.Array, bits: int) -> jax.Array:
+    """(n, d) int codes in [0, 2**bits) -> (n, packed_width(d, bits)) uint32.
+
+    Codes are masked to ``bits`` (the caller guarantees they fit — DOPH
+    codes are pre-truncated, t_cat bins are small by construction).
+    Unused fields in the last word are zero.
+    """
+    n, d = codes.shape
+    cpw = codes_per_word(bits)
+    w = packed_width(d, bits)
+    mask = jnp.uint32((1 << bits) - 1) if bits < 32 else jnp.uint32(0xFFFFFFFF)
+    c = codes.astype(jnp.uint32) & mask
+    c = jnp.pad(c, ((0, 0), (0, w * cpw - d)))
+    c = c.reshape(n, w, cpw)
+    shifts = (jnp.arange(cpw, dtype=jnp.uint32) * jnp.uint32(bits))[None, None, :]
+    return jnp.sum(c << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_codes(packed: jax.Array, bits: int, d: int) -> jax.Array:
+    """Inverse of pack_codes: (n, w) uint32 -> (n, d) int32."""
+    n, w = packed.shape
+    cpw = codes_per_word(bits)
+    mask = jnp.uint32((1 << bits) - 1) if bits < 32 else jnp.uint32(0xFFFFFFFF)
+    shifts = (jnp.arange(cpw, dtype=jnp.uint32) * jnp.uint32(bits))[None, None, :]
+    fields = (packed[:, :, None] >> shifts) & mask
+    return fields.reshape(n, w * cpw)[:, :d].astype(jnp.int32)
+
+
+def popcount32(x: jax.Array) -> jax.Array:
+    """Branch-free SWAR popcount on uint32 — pure shifts/masks/adds, so it
+    vectorizes on the TPU VPU inside Pallas kernels (where
+    lax.population_count may not lower)."""
+    x = x.astype(jnp.uint32)
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def field_mismatch_count(xor_words: jax.Array, bits: int) -> jax.Array:
+    """#mismatching b-bit fields per uint32 word of ``x ^ c``.
+
+    OR-folds each field onto its lowest bit (log2(bits) shift/or steps),
+    masks to one bit per field, then popcounts — a field contributes 1 iff
+    any of its bits differ.
+    """
+    z = xor_words.astype(jnp.uint32)
+    s = bits >> 1
+    while s:
+        z = z | (z >> s)
+        s >>= 1
+    return popcount32(z & jnp.uint32(_FIELD_LSB[bits]))
+
+
+def packed_hamming(xp: jax.Array, cp: jax.Array, bits: int) -> jax.Array:
+    """(n, w) x (k, w) packed codes -> (n, k) int32 mismatch counts."""
+    z = xp[:, None, :] ^ cp[None, :, :]
+    return jnp.sum(field_mismatch_count(z, bits), axis=-1)
+
+
+def onehot_codes(codes: jax.Array, card: int,
+                 dtype=jnp.bfloat16) -> jax.Array:
+    """(n, d) codes in [0, card) -> (n, d*card) one-hot for the MXU path.
+
+    Match counts become ``x1h @ c1h.T`` accumulated in f32 — exact for
+    d < 2**24, so Hamming labels stay bit-identical to the equality path.
+    """
+    n, d = codes.shape
+    oh = jax.nn.one_hot(codes, card, dtype=dtype)
+    return oh.reshape(n, d * card)

@@ -22,6 +22,15 @@ def distance_argmin_hamming_ref(codes, centers, center_valid):
     return jnp.argmin(dist, -1).astype(jnp.int32), jnp.min(dist, -1)
 
 
+def distance_argmin_hamming_packed_ref(packed, packed_centers, center_valid,
+                                       *, bits):
+    """Packed-domain oracle: XOR + per-field collapse + popcount."""
+    from repro.kernels.pack import packed_hamming
+    dist = packed_hamming(packed, packed_centers, bits)
+    dist = jnp.where(center_valid[None, :], dist, jnp.iinfo(jnp.int32).max)
+    return jnp.argmin(dist, -1).astype(jnp.int32), jnp.min(dist, -1)
+
+
 def minhash_even_buckets_ref(ids, keys):
     """ids: (nb, bsz) int32, keys: (K, 2) uint32 -> (nb,) uint32."""
     sig = jnp.zeros((ids.shape[0],), jnp.uint32)

@@ -35,6 +35,7 @@ from repro.models import init_params, param_specs, train_loss
 from repro.models import model as MODEL
 from repro.models.sharding import activation_sharding
 from repro.optim import adamw, clip_by_global_norm, warmup_cosine
+from repro.utils.compat import shard_map
 
 
 def build_mesh(spec: str | None):
@@ -114,7 +115,7 @@ def main() -> None:
             return new_params, new_state, new_resid, loss, gnorm
 
         resid = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-        mapped = jax.shard_map(
+        mapped = shard_map(
             ddp_step, mesh=mesh,
             in_specs=(P(), P(), P(), P(), P("data")),
             out_specs=(P(), P(), P(), P(), P()),

@@ -1,0 +1,29 @@
+"""Version compatibility shims.
+
+`jax.shard_map` (with `check_vma`) only exists on newer JAX; older
+releases ship `jax.experimental.shard_map.shard_map` (with `check_rep`).
+Same story for `jax.lax.axis_size`. Everything in this repo goes
+through these wrappers so both work.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a mapped mesh axis (usable for shapes/asserts)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    frame = jax.core.axis_frame(axis_name)
+    return frame if isinstance(frame, int) else frame.size
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)

@@ -26,11 +26,12 @@ def test_compressed_psum_approximates_mean():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import Mesh, PartitionSpec as P
         from repro.distributed.compression import compressed_psum
+        from repro.utils.compat import shard_map
         mesh = Mesh(np.array(jax.devices()), ("d",))
         x = jax.random.normal(jax.random.PRNGKey(0), (8, 500))
-        f = jax.shard_map(lambda xs: compressed_psum(xs[0], "d")[0][None],
-                          mesh=mesh, in_specs=(P("d", None),),
-                          out_specs=P("d", None), check_vma=False)
+        f = shard_map(lambda xs: compressed_psum(xs[0], "d")[0][None],
+                      mesh=mesh, in_specs=(P("d", None),),
+                      out_specs=P("d", None), check_vma=False)
         m = jax.jit(f)(x)
         err = float(jnp.abs(m[0] - x.mean(0)).max() / jnp.abs(x.mean(0)).max())
         assert err < 0.05, err
@@ -45,6 +46,7 @@ def test_error_feedback_removes_bias():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import Mesh, PartitionSpec as P
         from repro.distributed.compression import compressed_psum
+        from repro.utils.compat import shard_map
         mesh = Mesh(np.array(jax.devices()), ("d",))
         # same tiny gradient every step: with error feedback the running sum
         # of compressed means must track the true accumulation
@@ -61,8 +63,8 @@ def test_error_feedback_removes_bias():
             resid, ms = jax.lax.scan(step, resid, None, length=50)
             return ms.sum(0)[None]
 
-        f = jax.shard_map(run, mesh=mesh, in_specs=(P("d", None),),
-                          out_specs=P("d", None), check_vma=False)
+        f = shard_map(run, mesh=mesh, in_specs=(P("d", None),),
+                      out_specs=P("d", None), check_vma=False)
         total = jax.jit(f)(g)[0]
         true = g.mean(0) * 50
         rel = float(jnp.abs(total - true).max() / jnp.abs(true).max())
@@ -137,6 +139,7 @@ def test_ddp_compress_matches_pjit_direction():
         from repro.configs import get_arch
         from repro.distributed.compression import compressed_psum_tree
         from repro.models import init_params, train_loss
+        from repro.utils.compat import shard_map
         cfg = get_arch("smollm_360m", smoke=True)
         mesh = Mesh(np.array(jax.devices()), ("data",))
         params = init_params(cfg, jax.random.PRNGKey(0))
@@ -150,8 +153,8 @@ def test_ddp_compress_matches_pjit_direction():
             gm, _ = compressed_psum_tree(g, "data")
             return jax.lax.pmean(loss, "data"), gm
 
-        f = jax.shard_map(ddp, mesh=mesh, in_specs=(P(), P("data")),
-                          out_specs=(P(), P()), check_vma=False)
+        f = shard_map(ddp, mesh=mesh, in_specs=(P(), P("data")),
+                      out_specs=(P(), P()), check_vma=False)
         loss, g_comp = jax.jit(f)(params, batch)
         # exact global gradient for comparison
         loss2, g_true = jax.value_and_grad(
@@ -163,4 +166,65 @@ def test_ddp_compress_matches_pjit_direction():
                                          * jnp.linalg.norm(flat_t))
         assert float(cos) > 0.99, float(cos)
         print("ok cosine", float(cos))
+    """, timeout=600))
+
+
+def test_sharded_pallas_assign_matches_single_device():
+    """The fused Pallas assign (+ per-cluster accumulation) under shard_map
+    agrees exactly with the single-device kernel call."""
+    print(run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.core.distributed import _assign_l2_accumulate
+        from repro.core.geek import GeekConfig
+        from repro.kernels import ops as kops
+        from repro.utils.compat import shard_map
+        mesh = Mesh(np.array(jax.devices()), ("data",))
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (1024, 32))
+        c = jax.random.normal(jax.random.fold_in(key, 1), (17, 32))
+        valid = jnp.arange(17) % 5 != 2
+        cfg = GeekConfig(use_pallas=True)
+
+        def body(xs):
+            lab, d2, sums, cnt = _assign_l2_accumulate(xs, c, valid, cfg)
+            return lab, jax.lax.psum(sums, "data"), jax.lax.psum(cnt, "data")
+
+        f = jax.jit(shard_map(body, mesh=mesh, in_specs=(P("data", None),),
+                              out_specs=(P("data"), P(), P()),
+                              check_vma=False))
+        xs = jax.device_put(x, NamedSharding(mesh, P("data", None)))
+        lab_s, sums_s, cnt_s = f(xs)
+        lab1, d21, sums1, cnt1 = kops.distance_argmin_l2(x, c, valid,
+                                                         accumulate=True)
+        assert (np.array(lab_s) == np.array(lab1)).all()
+        np.testing.assert_allclose(np.array(sums_s), np.array(sums1),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.array(cnt_s), np.array(cnt1))
+        print("ok fused sharded == single device")
+    """, timeout=600))
+
+
+def test_distributed_geek_pallas_refinement():
+    """use_pallas=True + refine_sweeps reaches the fused kernel inside
+    shard_map and preserves clustering quality."""
+    print(run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np, collections
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.core.distributed import make_fit_dense
+        from repro.core.geek import GeekConfig
+        from repro.data.synthetic import sift_like
+        mesh = Mesh(np.array(jax.devices()), ("data",))
+        data = sift_like(jax.random.PRNGKey(0), n=4096, k=24)
+        cfg = GeekConfig(m=40, t=32, silk_l=6, delta=5, k_max=64,
+                         pair_cap=8192, use_pallas=True, refine_sweeps=1)
+        fit = make_fit_dense(mesh, cfg)
+        x = jax.device_put(data.x, NamedSharding(mesh, P("data", None)))
+        lab, c, cv, ks, rad, ovf = fit(x, jax.random.PRNGKey(1))
+        lab = np.array(lab); true = np.array(data.true_labels)
+        pur = sum(collections.Counter(true[lab==cc]).most_common(1)[0][1]
+                  for cc in set(lab.tolist()))/len(lab)
+        assert pur > 0.95, pur
+        assert int(ks) >= 24
+        print("ok purity", pur)
     """, timeout=600))

@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ops, ref
+from repro.kernels import ops, pack, ref
 from repro.utils.hashing import derive_hash_keys
 
 
@@ -36,6 +36,76 @@ def test_distance_argmin_hamming_sweep(n, k, d, card):
     lr, dr = ref.distance_argmin_hamming_ref(codes, c, valid)
     np.testing.assert_array_equal(np.array(dk), np.array(dr))
     np.testing.assert_array_equal(np.array(lk), np.array(lr))
+
+
+@pytest.mark.parametrize("n,k,d,bits", [(50, 4, 9, 4), (129, 17, 45, 8),
+                                        (64, 8, 400, 16), (33, 70, 7, 2)])
+def test_distance_argmin_hamming_packed_sweep(n, k, d, bits):
+    """Packed kernel vs the *unpacked* equality oracle: labels and counts
+    bit-identical. Shapes include k < bk, ragged d, d not a chunk multiple."""
+    rng = np.random.default_rng(n * k + bits)
+    card = 1 << bits
+    codes = jnp.asarray(rng.integers(0, card, (n, d)), jnp.int32)
+    c = jnp.asarray(rng.integers(0, card, (k, d)), jnp.int32)
+    valid = jnp.arange(k) % 7 != 3
+    xp = pack.pack_codes(codes, bits)
+    cp = pack.pack_codes(c, bits)
+    lk, dk = ops.distance_argmin_hamming_packed(xp, cp, valid, bits=bits,
+                                                bn=32, bk=128, chunk=8)
+    lr, dr = ref.distance_argmin_hamming_ref(codes, c, valid)
+    np.testing.assert_array_equal(np.array(dk), np.array(dr))
+    np.testing.assert_array_equal(np.array(lk), np.array(lr))
+    # packed-domain oracle agrees too
+    lp, dp = ref.distance_argmin_hamming_packed_ref(xp, cp, valid, bits=bits)
+    np.testing.assert_array_equal(np.array(dp), np.array(dr))
+
+
+@pytest.mark.parametrize("kernel", ["l2", "hamming", "packed"])
+def test_distance_argmin_autotuned_tiles(kernel):
+    """No explicit bn/bk/chunk: the shape-keyed autotuner picks the tiles
+    and the kernels still match the oracles on ragged shapes."""
+    key = jax.random.PRNGKey(11)
+    for n, k, d in [(37, 3, 5), (300, 65, 129), (128, 260, 48)]:
+        valid = jnp.arange(k) % 9 != 4
+        if kernel == "l2":
+            x = jax.random.normal(key, (n, d))
+            c = jax.random.normal(jax.random.fold_in(key, 1), (k, d))
+            lk, dk = ops.distance_argmin_l2(x, c, valid)
+            lr, dr = ref.distance_argmin_l2_ref(x, c, valid)
+            np.testing.assert_allclose(np.array(dk), np.array(dr),
+                                       rtol=1e-4, atol=1e-4)
+        else:
+            rng = np.random.default_rng(n)
+            codes = jnp.asarray(rng.integers(0, 16, (n, d)), jnp.int32)
+            c = jnp.asarray(rng.integers(0, 16, (k, d)), jnp.int32)
+            lr, dr = ref.distance_argmin_hamming_ref(codes, c, valid)
+            if kernel == "hamming":
+                lk, dk = ops.distance_argmin_hamming(codes, c, valid)
+            else:
+                lk, dk = ops.distance_argmin_hamming_packed(
+                    pack.pack_codes(codes, 4), pack.pack_codes(c, 4),
+                    valid, bits=4)
+            np.testing.assert_array_equal(np.array(dk), np.array(dr))
+            np.testing.assert_array_equal(np.array(lk), np.array(lr))
+
+
+@pytest.mark.parametrize("n,k,d", [(64, 8, 16), (130, 33, 70), (257, 40, 128)])
+def test_distance_argmin_l2_accumulate(n, k, d):
+    """Fused per-cluster partial sums/counts match a segment_sum second pass."""
+    key = jax.random.PRNGKey(n + k)
+    x = jax.random.normal(key, (n, d))
+    c = jax.random.normal(jax.random.fold_in(key, 1), (k, d))
+    valid = jnp.arange(k) % 7 != 3
+    lab, d2, sums, cnt = ops.distance_argmin_l2(x, c, valid, accumulate=True)
+    lab0, d20 = ops.distance_argmin_l2(x, c, valid)
+    np.testing.assert_array_equal(np.array(lab), np.array(lab0))
+    np.testing.assert_allclose(np.array(d2), np.array(d20), rtol=1e-6)
+    seg_s = jax.ops.segment_sum(x.astype(jnp.float32), lab, num_segments=k)
+    seg_c = jax.ops.segment_sum(jnp.ones((n,), jnp.float32), lab,
+                                num_segments=k)
+    np.testing.assert_allclose(np.array(sums), np.array(seg_s),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.array(cnt), np.array(seg_c))
 
 
 @pytest.mark.parametrize("nb,bsz,K", [(10, 8, 1), (100, 64, 3), (33, 17, 5)])
@@ -71,6 +141,29 @@ def test_flash_attention_bf16(rng):
     o2 = ref.attention_ref(q, k, v)
     np.testing.assert_allclose(np.array(o1, np.float32),
                                np.array(o2, np.float32), rtol=5e-2, atol=5e-2)
+
+
+def test_geek_code_bits_rounding_and_sparse_width(rng):
+    """code_bits=5 rounds up to a packable width instead of crashing, and
+    fit_sparse ignores a too-narrow code_bits (DOPH codes are 16-bit)."""
+    import dataclasses
+    from repro.core.geek import GeekConfig, fit_sparse
+    key = jax.random.PRNGKey(7)
+    templates = jax.random.randint(key, (4, 20), 0, 3000)
+    pick = jax.random.randint(jax.random.fold_in(key, 1), (128,), 0, 4)
+    sets = templates[pick]
+    mask = jnp.ones_like(sets, bool)
+    base = GeekConfig(silk_l=3, delta=3, k_max=16, pair_cap=2048)
+    r16 = fit_sparse(sets, mask, jax.random.PRNGKey(1), base)
+    # a narrow hetero code_bits must not truncate 16-bit DOPH codes
+    r4 = fit_sparse(sets, mask, jax.random.PRNGKey(1),
+                    dataclasses.replace(base, code_bits=4))
+    np.testing.assert_array_equal(np.array(r16.labels), np.array(r4.labels))
+    # unsupported width on the packed path rounds up (5 -> 8), no crash
+    from repro.core.geek import fit_hetero
+    xn = jax.random.normal(key, (96, 8))
+    fit_hetero(xn, None, jax.random.PRNGKey(2),
+               dataclasses.replace(base, hamming_impl="packed", code_bits=5))
 
 
 def test_geek_pipeline_with_pallas_assignment(rng):
