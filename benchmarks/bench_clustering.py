@@ -25,7 +25,7 @@ def run(quick: bool = True, n: int = 8192) -> None:
 
     # -- dense ---------------------------------------------------------------
     data = synthetic.sift_like(key, n=n, k=64)
-    res = fit_dense(data.x, jax.random.PRNGKey(1), CFG)
+    res, _ = fit_dense(data.x, jax.random.PRNGKey(1), CFG)
     k = int(res.k_star)
     sec = timeit(lambda: fit_dense(data.x, jax.random.PRNGKey(1), CFG),
                  iters=iters)
@@ -47,7 +47,7 @@ def run(quick: bool = True, n: int = 8192) -> None:
 
     # -- heterogeneous --------------------------------------------------------
     h = synthetic.geonames_like(key, n=n // 2, k=32)
-    resh = fit_hetero(h.x_num, h.x_cat, jax.random.PRNGKey(1), CFG)
+    resh, _ = fit_hetero(h.x_num, h.x_cat, jax.random.PRNGKey(1), CFG)
     kh = int(resh.k_star)
     sec = timeit(lambda: fit_hetero(h.x_num, h.x_cat, jax.random.PRNGKey(1),
                                     CFG), iters=iters)
@@ -62,7 +62,7 @@ def run(quick: bool = True, n: int = 8192) -> None:
 
     # -- sparse ---------------------------------------------------------------
     s = synthetic.url_like(key, n=n // 2, k=32)
-    ress = fit_sparse(s.sets, s.mask, jax.random.PRNGKey(1), CFG)
+    ress, _ = fit_sparse(s.sets, s.mask, jax.random.PRNGKey(1), CFG)
     sec = timeit(lambda: fit_sparse(s.sets, s.mask, jax.random.PRNGKey(1),
                                     CFG), iters=iters)
     emit("fig5/sparse/geek", sec,

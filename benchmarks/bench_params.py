@@ -35,7 +35,7 @@ def run(quick: bool = True, n: int = 8192) -> None:
             cfg = dataclasses.replace(BASE, **{field: v})
             fn = lambda: fit_dense(data.x, key, cfg)
             sec = timeit(fn, warmup=1, iters=1 if quick else 3)
-            res = fn()
+            res, _ = fn()
             emit(f"fig4/{field}={v}", sec,
                  f"k*={int(res.k_star)};radius="
                  f"{mean_radius(res.radius, res.center_valid):.4f}")

@@ -1,0 +1,113 @@
+"""GeekModel predict (serving) throughput: points/sec vs batch size.
+
+Complements bench_assign (raw kernel latency at one shape) with the
+question serving actually asks: how does the jitted ``predict`` path
+scale with batch size, per metric path — L2 plus all three Hamming
+implementations (equality / packed / one-hot), centers pre-packed at
+model build exactly as in production.
+
+  PYTHONPATH=src python -m benchmarks.bench_predict [--smoke] [--out PATH]
+
+Writes ``BENCH_predict.json`` (diffable across PRs, uploaded by CI).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core.model import build_model, predict
+from repro.kernels import pack
+
+SHAPE = dict(d=64, k=1024, card=16)
+BATCHES = (4096, 16384, 65536)
+SMOKE_SHAPE = dict(d=64, k=128, card=16)
+SMOKE_BATCHES = (512, 2048, 8192)
+
+
+def _models(d: int, k: int, card: int):
+    """One model per metric path, sharing shapes (and centers where the
+    paths are comparable)."""
+    key = jax.random.PRNGKey(0)
+    cents = jax.random.normal(key, (k, d))
+    code_cents = jax.random.randint(jax.random.fold_in(key, 1), (k, d), 0,
+                                    card, jnp.int32)
+    valid = jnp.ones((k,), bool)
+    k_star = jnp.int32(k)
+    radius = jnp.zeros((k,), jnp.float32)
+    bits = pack.bits_for_cardinality(card)
+    mk = lambda c, **kw: build_model(c, valid, k_star, radius, **kw)
+    return {
+        "l2": mk(cents, metric="l2"),
+        "hamming_equality": mk(code_cents, metric="hamming", impl="equality"),
+        "hamming_packed": mk(code_cents, metric="hamming", impl="packed",
+                             code_bits=bits),
+        "hamming_onehot": mk(code_cents, metric="hamming", impl="onehot",
+                             code_bits=bits),
+    }
+
+
+def run(smoke: bool = False, out: str | None = None,
+        write_json: bool = True) -> dict:
+    shape = SMOKE_SHAPE if smoke else SHAPE
+    batches = SMOKE_BATCHES if smoke else BATCHES
+    d, k, card = shape["d"], shape["k"], shape["card"]
+    models = _models(d, k, card)
+    key = jax.random.PRNGKey(7)
+
+    points_per_sec: dict[str, dict[str, float]] = {}
+    for name, model in models.items():
+        per_batch = {}
+        for n in batches:
+            if model.metric == "l2":
+                x = jax.random.normal(key, (n, d))
+            else:
+                x = jax.random.randint(key, (n, d), 0, card, jnp.int32)
+            x = jax.block_until_ready(x)
+            sec = timeit(predict, model, x)
+            pps = n / sec
+            per_batch[str(n)] = round(pps)
+            # no commas in `derived` — the combined run output is CSV
+            emit(f"predict/{name}/batch={n}", sec, f"{pps:.0f} pts/s")
+        points_per_sec[name] = per_batch
+
+    report = {
+        "host": {
+            "backend": jax.default_backend(),
+            "device": str(jax.devices()[0]),
+            "platform": platform.platform(),
+            "jax": jax.__version__,
+        },
+        "shape": {**shape, "bits": pack.bits_for_cardinality(card)},
+        "batch_sizes": list(batches),
+        "points_per_sec": points_per_sec,
+    }
+    if write_json:
+        out = out or os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_predict.json")
+        with open(out, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    # smoke mode must not clobber the committed headline BENCH_predict.json
+    # with small-shape numbers — it only writes where --out points it
+    write_json = args.out is not None or not args.smoke
+    report = run(smoke=args.smoke, out=args.out, write_json=write_json)
+    print(json.dumps(report, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -16,21 +16,25 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="fig4|fig5|fig6|fig7|table1|assign")
+                    help="fig4|fig5|fig6|fig7|table1|assign|predict")
     args = ap.parse_args()
     quick = not args.full
 
     from benchmarks import (bench_assign, bench_clustering, bench_complexity,
-                            bench_params, bench_scaling, bench_seeding)
+                            bench_params, bench_predict, bench_scaling,
+                            bench_seeding)
     suites = {
         "fig4": lambda: bench_params.run(quick=quick),
         "fig5": lambda: bench_clustering.run(quick=quick),
         "fig6": lambda: bench_seeding.run(quick=quick),
         "fig7": lambda: bench_scaling.run(quick=quick),
         "table1": lambda: bench_complexity.run(quick=quick),
-        # only --full refreshes the committed headline BENCH_assign.json;
-        # quick mode must not clobber it with small-shape numbers
+        # only --full refreshes the committed headline BENCH_assign.json /
+        # BENCH_predict.json; quick mode must not clobber them with
+        # small-shape numbers
         "assign": lambda: bench_assign.run(quick=quick, write_json=not quick),
+        "predict": lambda: bench_predict.run(smoke=quick,
+                                             write_json=not quick),
     }
     print("name,us_per_call,derived")
     failed = 0

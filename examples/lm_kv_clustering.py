@@ -45,7 +45,7 @@ def main():
                       pair_cap=8192)
 
     def compress(keys, vals, tag):
-        res = fit_dense(keys, jax.random.PRNGKey(2), gcfg)
+        res, _ = fit_dense(keys, jax.random.PRNGKey(2), gcfg)
         k_star = int(res.k_star)
         labels = np.array(res.labels)
         cent_k = np.array(res.centers)[:k_star]

@@ -11,6 +11,7 @@ import numpy as np
 
 from repro.core import baselines
 from repro.core.geek import GeekConfig, fit_dense, fit_hetero, fit_sparse
+from repro.core.model import predict
 from repro.data import synthetic
 
 
@@ -33,8 +34,9 @@ def main():
     print("== dense (Sift-like, Euclidean) ==")
     d = synthetic.sift_like(key, n=4000, k=32)
     t0 = time.time()
-    res = fit_dense(d.x, jax.random.PRNGKey(1), cfg)
+    res, model = fit_dense(d.x, jax.random.PRNGKey(1), cfg)
     jax.block_until_ready(res.labels)
+    dense_labels = np.array(res.labels)
     print(f"  GEEK: k*={int(res.k_star)} (discovered, not pre-specified) "
           f"purity={purity(res.labels, d.true_labels):.3f} "
           f"mean_radius={mean_radius(res):.4f} time={time.time()-t0:.1f}s")
@@ -46,17 +48,27 @@ def main():
 
     print("== heterogeneous (GeoNames-like, 1-Jaccard) ==")
     h = synthetic.geonames_like(key, n=3000, k=16)
-    res = fit_hetero(h.x_num, h.x_cat, jax.random.PRNGKey(1), cfg)
+    res, _ = fit_hetero(h.x_num, h.x_cat, jax.random.PRNGKey(1), cfg)
     print(f"  GEEK: k*={int(res.k_star)} "
           f"purity={purity(res.labels, h.true_labels):.3f} "
           f"mean_radius={mean_radius(res):.4f}")
 
     print("== sparse (URL-like, Jaccard via DOPH) ==")
     s = synthetic.url_like(key, n=2000, k=16)
-    res = fit_sparse(s.sets, s.mask, jax.random.PRNGKey(1), cfg)
+    res, _ = fit_sparse(s.sets, s.mask, jax.random.PRNGKey(1), cfg)
     print(f"  GEEK: k*={int(res.k_star)} "
           f"purity={purity(res.labels, s.true_labels):.3f} "
           f"mean_radius={mean_radius(res):.4f}")
+
+    print("== fitted model: save -> restore -> predict (no SILK re-run) ==")
+    import tempfile
+    from repro.checkpoint.manager import restore_model, save_model
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        save_model(ckpt_dir, model)              # the dense model from above
+        served = restore_model(ckpt_dir)         # e.g. in a serving process
+        labels, _ = predict(served, d.x[:256])   # one-pass assignment only
+        agree = float((np.array(labels) == dense_labels[:256]).mean())
+        print(f"  restored-model labels match fit labels: {agree:.3f}")
 
 
 if __name__ == "__main__":

@@ -34,15 +34,23 @@ def _flatten(tree):
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, *, keep: int = 3):
+    def __init__(self, directory: str, *, keep: int = 3,
+                 create: bool = True):
+        """``create=False`` for read-only use (restore): probing a path
+        must not mkdir it as a side effect."""
         self.dir = directory
         self.keep = keep
-        os.makedirs(directory, exist_ok=True)
+        if create:
+            os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
 
     # -- save ---------------------------------------------------------------
 
-    def save(self, step: int, tree, *, wait: bool = True) -> None:
+    def save(self, step: int, tree, *, wait: bool = True,
+             extra: dict | None = None) -> None:
+        """``extra`` is an optional JSON-serializable blob stored in the
+        manifest — static (non-array) state such as GeekModel dispatch
+        metadata rides along with the leaves."""
         self.wait_for_save()
         leaves, treedef = _flatten(tree)
         host = [np.asarray(l) for l in leaves]      # snapshot (device -> host)
@@ -55,6 +63,7 @@ class CheckpointManager:
                 shutil.rmtree(tmp)
             os.makedirs(tmp)
             manifest = {"step": step, "treedef": treedef_str,
+                        "extra": extra,
                         "leaves": [{"file": f"leaf_{i:05d}.npy",
                                     "shape": list(a.shape),
                                     "dtype": str(a.dtype)}
@@ -88,6 +97,8 @@ class CheckpointManager:
     # -- restore ------------------------------------------------------------
 
     def all_steps(self) -> list[int]:
+        if not os.path.isdir(self.dir):
+            raise FileNotFoundError(f"no checkpoint directory {self.dir}")
         out = []
         for name in os.listdir(self.dir):
             if name.startswith("step_"):
@@ -97,6 +108,15 @@ class CheckpointManager:
     def latest_step(self) -> int | None:
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    def load_manifest(self, *, step: int | None = None) -> dict:
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            return json.load(f)
 
     def restore(self, target_tree, *, step: int | None = None,
                 shardings=None):
@@ -119,3 +139,54 @@ class CheckpointManager:
         else:
             leaves = host
         return jax.tree_util.tree_unflatten(treedef, leaves), step
+
+
+# ---------------------------------------------------------------------------
+# GeekModel save/restore (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+# Only the canonical arrays (model.ARRAY_FIELDS) are written; the static
+# dispatch metadata goes into the manifest's `extra` blob and the packed
+# center caches are re-derived on restore via build_model — deterministic,
+# so the restored fast path is bit-identical to the fitted one. Like every
+# checkpoint here, the files are topology-free: restore onto any mesh by
+# passing `shardings`.
+
+def save_model(directory: str, model, *, step: int = 0,
+               wait: bool = True) -> None:
+    """Persist a fitted GeekModel (atomic, async-capable like save())."""
+    from repro.core import model as model_mod
+    mgr = CheckpointManager(directory)
+    arrays = {f: getattr(model, f) for f in model_mod.ARRAY_FIELDS}
+    mgr.save(step, arrays, wait=wait,
+             extra={"kind": "geek_model", "meta": model.static_meta()})
+
+
+def restore_model(directory: str, *, step: int | None = None,
+                  sharding=None):
+    """Rebuild a GeekModel (packed caches included) from save_model files.
+
+    sharding: optional jax.sharding.Sharding applied to every leaf —
+    the model is small (k_max·d), replication is the common choice.
+    """
+    from repro.core import model as model_mod
+    mgr = CheckpointManager(directory, create=False)
+    manifest = mgr.load_manifest(step=step)
+    extra = manifest.get("extra") or {}
+    if extra.get("kind") != "geek_model":
+        raise ValueError(f"{directory} does not hold a GeekModel checkpoint")
+    target = {f: 0 for f in model_mod.ARRAY_FIELDS}  # values unused
+    shardings = ({f: sharding for f in model_mod.ARRAY_FIELDS}
+                 if sharding is not None else None)
+    # pin the step from the manifest we just read — a concurrent save_model
+    # publishing a newer step must not split meta and arrays across steps
+    arrays, _ = mgr.restore(target, step=manifest["step"],
+                            shardings=shardings)
+    meta = dict(extra["meta"])
+    return model_mod.build_model(
+        jax.numpy.asarray(arrays["centers"]),
+        jax.numpy.asarray(arrays["center_valid"]),
+        jax.numpy.asarray(arrays["k_star"]),
+        jax.numpy.asarray(arrays["radius"]),
+        metric=meta["metric"], impl=meta["impl"],
+        code_bits=meta["code_bits"], assign_block=meta["assign_block"],
+        use_pallas=meta["use_pallas"])

@@ -5,5 +5,9 @@ from repro.core.geek import (  # noqa: F401
     fit_dense,
     fit_hetero,
     fit_sparse,
+    hetero_codes,
+    sparse_codes,
 )
+from repro.core.model import GeekModel, build_model, predict  # noqa: F401
 from repro.core.silk import SeedPairs, Seeds, silk_seeding  # noqa: F401
+from repro.core.streaming import fit_dense_streaming  # noqa: F401

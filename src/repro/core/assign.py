@@ -154,17 +154,23 @@ def assign_hamming_packed(packed: jax.Array, packed_centers: jax.Array,
 
 def assign_hamming_onehot(codes: jax.Array, centers: jax.Array,
                           center_valid: jax.Array, *, card: int,
-                          block: int = 4096) -> tuple[jax.Array, jax.Array]:
+                          block: int = 4096,
+                          centers_onehot: jax.Array | None = None
+                          ) -> tuple[jax.Array, jax.Array]:
     """assign_hamming for low-cardinality codes via one-hot bf16 matmul.
 
     matches = x1h @ c1h.T rides the MXU exactly like the L2 path (f32
     accumulation keeps integer counts exact for d < 2**24, so labels stay
     bit-identical to the equality path). One-hot width is d·card — only
     worthwhile for small card (t_cat discretization bins).
+
+    ``centers_onehot`` lets a serving path (GeekModel) pass centers that
+    were one-hot encoded once at model build instead of per call.
     """
     d = codes.shape[1]
     big = jnp.int32(d + 1)
-    c1h = onehot_codes(centers, card)                        # (k, d*card)
+    c1h = (onehot_codes(centers, card) if centers_onehot is None
+           else centers_onehot)                              # (k, d*card)
 
     def chunk(xb):
         x1h = onehot_codes(xb, card)

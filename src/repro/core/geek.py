@@ -8,6 +8,11 @@ Three entry points, one per data type (paper Algorithms 1-3):
   - fit_dense(x)              Euclidean, QALSH rank-partition buckets
   - fit_hetero(x_num, x_cat)  1-Jaccard on attribute-value sets, MinHash buckets
   - fit_sparse(sets, mask)    Jaccard on sets, DOPH -> MinHash buckets
+
+Each returns ``(GeekResult, GeekModel)``: the per-run result (labels,
+dists, diagnostics) plus the persistent fitted model that
+``repro.core.model.predict`` reuses to assign new points without
+re-running SILK (DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -21,8 +26,10 @@ import jax.numpy as jnp
 from repro.core import assign as assign_mod
 from repro.core import lsh
 from repro.core.buckets import BucketTables, partition_by_signature, partition_even
+from repro.core.model import (GeekModel, build_model, predict_hamming,
+                              predict_l2)
 from repro.core.silk import Seeds, silk_seeding
-from repro.kernels.pack import bits_for_cardinality, pack_codes
+from repro.kernels.pack import bits_for_cardinality
 from repro.utils.hashing import combine2_u32, derive_hash_keys
 
 
@@ -67,17 +74,43 @@ class GeekResult(NamedTuple):
     overflow: jax.Array      # () int32 — static-budget truncation diagnostic
 
 
-def _finish_dense(x, seeds: Seeds, cfg: GeekConfig, overflow):
+def resolve_hamming_impl(cfg: GeekConfig, bits: int) -> tuple[str, int]:
+    """Resolve cfg.hamming_impl="auto" + a static code-width bound into the
+    concrete (impl, bits) dispatch pair shared by fit-time assignment and
+    the GeekModel serving path."""
+    impl = cfg.hamming_impl
+    if impl == "auto":
+        impl = "packed" if 0 < bits < 32 else "equality"
+    if impl in ("packed", "onehot") and not 0 < bits <= 32:
+        raise ValueError(f"hamming_impl={impl!r} needs a static code width; "
+                         "set GeekConfig.code_bits")
+    if impl == "onehot" and bits > 8:
+        raise ValueError("one-hot Hamming needs code_bits <= 8 "
+                         f"(got {bits}: one-hot width d * 2**bits)")
+    if impl == "packed":
+        bits = bits_for_cardinality(1 << bits)  # round up to packable width
+    return impl, bits
+
+
+def _seed_dense(x, seeds: Seeds, cfg: GeekConfig):
+    """Centers + model for a dense fit — everything but the n-sized pass."""
     centers, cvalid = assign_mod.centroid_centers(x, seeds)
-    if cfg.use_pallas:
-        from repro.kernels import ops as kops
-        labels, d2 = kops.distance_argmin_l2(x, centers, cvalid)
-    else:
-        labels, d2 = assign_mod.assign_l2(x, centers, cvalid, block=cfg.assign_block)
-    dists = jnp.sqrt(d2)
+    model = build_model(centers, cvalid, seeds.k_star,
+                        jnp.zeros((cfg.k_max,), jnp.float32), metric="l2",
+                        assign_block=cfg.assign_block,
+                        use_pallas=cfg.use_pallas)
+    return centers, cvalid, model
+
+
+def _finish_dense(x, seeds: Seeds, cfg: GeekConfig, overflow):
+    centers, cvalid, model = _seed_dense(x, seeds, cfg)
+    # the fit-time pass IS the serving dispatch — predict on the fit data
+    # is bit-identical by construction, not by parallel maintenance
+    labels, dists = predict_l2(model, x)
     radius = assign_mod.cluster_radius(dists, labels, cfg.k_max)
-    return GeekResult(labels, dists, centers, cvalid, seeds.k_star, radius,
-                      seeds, overflow)
+    result = GeekResult(labels, dists, centers, cvalid, seeds.k_star, radius,
+                        seeds, overflow)
+    return result, dataclasses.replace(model, radius=radius)
 
 
 def _finish_codes(codes, seeds: Seeds, cfg: GeekConfig, overflow, *,
@@ -89,55 +122,43 @@ def _finish_codes(codes, seeds: Seeds, cfg: GeekConfig, overflow, *,
     equality path, so the choice is purely a throughput knob.
     """
     centers, cvalid = assign_mod.mode_centers(codes, seeds)
-    impl = cfg.hamming_impl
-    if impl == "auto":
-        impl = "packed" if 0 < bits < 32 else "equality"
-    if impl in ("packed", "onehot") and not 0 < bits <= 32:
-        raise ValueError(f"hamming_impl={impl!r} needs a static code width; "
-                         "set GeekConfig.code_bits")
-    if impl == "onehot" and bits > 8:
-        raise ValueError("one-hot Hamming needs code_bits <= 8 "
-                         f"(got {bits}: one-hot width d * 2**bits)")
-
-    if impl == "packed":
-        bits = bits_for_cardinality(1 << bits)  # round up to packable width
-        xp = pack_codes(codes, bits)
-        cp = pack_codes(centers, bits)
-        if cfg.use_pallas:
-            from repro.kernels import ops as kops
-            labels, dists = kops.distance_argmin_hamming_packed(
-                xp, cp, cvalid, bits=bits)
-        else:
-            labels, dists = assign_mod.assign_hamming_packed(
-                xp, cp, cvalid, bits=bits, d=codes.shape[1],
-                block=cfg.assign_block)
-    elif impl == "onehot":
-        labels, dists = assign_mod.assign_hamming_onehot(
-            codes, centers, cvalid, card=1 << bits, block=cfg.assign_block)
-    elif cfg.use_pallas:
-        from repro.kernels import ops as kops
-        labels, dists = kops.distance_argmin_hamming(codes, centers, cvalid)
-    else:
-        labels, dists = assign_mod.assign_hamming(codes, centers, cvalid,
-                                                  block=cfg.assign_block)
-    dists = dists / codes.shape[1]  # normalize to ≈ (1 - Jaccard)
+    impl, bits = resolve_hamming_impl(cfg, bits)
+    model = build_model(centers, cvalid, seeds.k_star,
+                        jnp.zeros((cfg.k_max,), jnp.float32),
+                        metric="hamming", impl=impl, code_bits=bits,
+                        assign_block=cfg.assign_block,
+                        use_pallas=cfg.use_pallas)
+    # shared serving dispatch (equality/packed/one-hot, jnp or Pallas);
+    # dists come back normalized to ≈ (1 - Jaccard)
+    labels, dists = predict_hamming(model, codes)
     radius = assign_mod.cluster_radius(dists, labels, cfg.k_max)
-    return GeekResult(labels, dists, centers, cvalid, seeds.k_star, radius,
-                      seeds, overflow)
+    result = GeekResult(labels, dists, centers, cvalid, seeds.k_star, radius,
+                        seeds, overflow)
+    return result, dataclasses.replace(model, radius=radius)
 
 
 # ---------------------------------------------------------------------------
 # Homogeneous dense (Algorithm 1)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def fit_dense(x: jax.Array, key: jax.Array, cfg: GeekConfig) -> GeekResult:
+def discover_dense(x: jax.Array, key: jax.Array, cfg: GeekConfig):
+    """Dense discovery phase: QALSH hash -> even-partition buckets -> SILK.
+
+    Shared by ``fit_dense`` and the streaming reservoir path — one copy is
+    what keeps ``fit_dense_streaming``'s bit-identity contract structural.
+    """
     k_proj, k_silk = jax.random.split(key)
     a = lsh.qalsh_projections(k_proj, x.shape[1], cfg.m, dtype=x.dtype)
     buckets = partition_even(lsh.qalsh_hash(x, a), cfg.t)
-    seeds, overflow = silk_seeding(buckets, k_silk, silk_k=cfg.silk_k,
-                                   silk_l=cfg.silk_l, delta=cfg.delta,
-                                   pair_cap=cfg.pair_cap, k_max=cfg.k_max)
+    return silk_seeding(buckets, k_silk, silk_k=cfg.silk_k,
+                        silk_l=cfg.silk_l, delta=cfg.delta,
+                        pair_cap=cfg.pair_cap, k_max=cfg.k_max)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def fit_dense(x: jax.Array, key: jax.Array,
+              cfg: GeekConfig) -> tuple[GeekResult, GeekModel]:
+    seeds, overflow = discover_dense(x, key, cfg)
     return _finish_dense(x, seeds, cfg, overflow)
 
 
@@ -172,7 +193,7 @@ def _code_items(codes: jax.Array, key: jax.Array) -> jax.Array:
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def fit_hetero(x_num: jax.Array, x_cat: jax.Array, key: jax.Array,
-               cfg: GeekConfig) -> GeekResult:
+               cfg: GeekConfig) -> tuple[GeekResult, GeekModel]:
     k_item, k_sig, k_silk = jax.random.split(key, 3)
     codes = hetero_codes(x_num, x_cat, cfg.t_cat)
     items = _code_items(codes, k_item)
@@ -193,12 +214,24 @@ def fit_hetero(x_num: jax.Array, x_cat: jax.Array, key: jax.Array,
 # Sparse (Algorithm 3)
 # ---------------------------------------------------------------------------
 
+def sparse_codes(sets: jax.Array, mask: jax.Array, key: jax.Array,
+                 cfg: GeekConfig) -> jax.Array:
+    """16-bit DOPH codes exactly as fit_sparse derives them from ``key``.
+
+    The serving path needs this: new sparse points must be coded with the
+    *fit-time* DOPH hash before ``predict(model, codes)`` — the model's
+    mode centers live in this code space.
+    """
+    k_doph = jax.random.split(key, 4)[0]
+    codes = lsh.doph_codes(sets, mask, k_doph, cfg.doph_m)     # (n, doph_m)
+    return (codes >> jnp.uint32(16)).astype(jnp.int32)         # 16-bit codes
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def fit_sparse(sets: jax.Array, mask: jax.Array, key: jax.Array,
-               cfg: GeekConfig) -> GeekResult:
-    k_doph, k_item, k_sig, k_silk = jax.random.split(key, 4)
-    codes = lsh.doph_codes(sets, mask, k_doph, cfg.doph_m)     # (n, doph_m)
-    codes = (codes >> jnp.uint32(16)).astype(jnp.int32)        # 16-bit codes
+               cfg: GeekConfig) -> tuple[GeekResult, GeekModel]:
+    _, k_item, k_sig, k_silk = jax.random.split(key, 4)
+    codes = sparse_codes(sets, mask, key, cfg)
     items = _code_items(codes, k_item)
     sig_keys = derive_hash_keys(k_sig, (cfg.bucket_l, cfg.bucket_k))
     sigs = lsh.minhash_signatures(items, jnp.ones_like(items, bool), sig_keys)

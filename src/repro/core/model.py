@@ -1,0 +1,164 @@
+"""GeekModel — the persistent fitted state of a GEEK run (DESIGN.md §9).
+
+Every ``fit_*`` entry point pays the expensive discovery phase (LSH
+transformation + SILK seeding) once and returns, alongside the per-run
+``GeekResult``, a small reusable model: the central vectors plus the
+metric/packing metadata needed to assign *new* points with the same
+one-pass kernels. ``predict(model, x)`` is the serving-side counterpart
+of the fit-time assignment — same dispatch (L2 / equality / packed /
+one-hot Hamming, jnp or Pallas), bit-identical labels on the fit data.
+
+Centers are pre-packed once at model-build time (bit-packed words for the
+packed path, bf16 one-hot for the MXU path), so a predict call packs only
+the incoming batch — the (k, d) side rides along for free.
+
+The model is a pytree whose aux data carries the static dispatch fields,
+so it passes through ``jax.jit``, ``jax.device_put``, and the checkpoint
+manager unchanged. Serialization keeps only the canonical arrays
+(centers / center_valid / k_star / radius); the packed caches are
+re-derived on restore (see ``checkpoint.manager.save_model``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pack import onehot_codes, pack_codes
+
+#: fields persisted by the checkpoint manager, in manifest order
+ARRAY_FIELDS = ("centers", "center_valid", "k_star", "radius")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class GeekModel:
+    # -- canonical fitted state (serialized) --------------------------------
+    centers: jax.Array        # (k_max, d) centroids (l2) or mode codes (hamming)
+    center_valid: jax.Array   # (k_max,) bool
+    k_star: jax.Array         # () int32 — discovered #clusters
+    radius: jax.Array         # (k_max,) per-cluster max distance at fit time
+    # -- derived packed caches (rebuilt on restore, not serialized) ---------
+    packed_centers: jax.Array | None   # (k_max, w) uint32, impl == "packed"
+    onehot_centers: jax.Array | None   # (k_max, d*card) bf16, impl == "onehot"
+    # -- static dispatch metadata (pytree aux data) -------------------------
+    metric: str = "l2"        # "l2" | "hamming"
+    impl: str = ""            # hamming impl, resolved: equality|packed|onehot
+    code_bits: int = 0        # packed field width / one-hot log2(card)
+    d: int = 0                # unpacked feature / code width
+    assign_block: int = 4096
+    use_pallas: bool = False
+
+    def tree_flatten(self):
+        children = (self.centers, self.center_valid, self.k_star, self.radius,
+                    self.packed_centers, self.onehot_centers)
+        aux = (self.metric, self.impl, self.code_bits, self.d,
+               self.assign_block, self.use_pallas)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def k_max(self) -> int:
+        return self.centers.shape[0]
+
+    def static_meta(self) -> dict:
+        """JSON-serializable dispatch metadata (checkpoint manifest extra)."""
+        return {"metric": self.metric, "impl": self.impl,
+                "code_bits": self.code_bits, "d": self.d,
+                "assign_block": self.assign_block,
+                "use_pallas": self.use_pallas}
+
+
+def build_model(centers: jax.Array, center_valid: jax.Array,
+                k_star: jax.Array, radius: jax.Array, *,
+                metric: str, impl: str = "", code_bits: int = 0,
+                assign_block: int = 4096,
+                use_pallas: bool = False) -> GeekModel:
+    """Construct a GeekModel, pre-packing centers for the chosen impl.
+
+    This is the single constructor used by the ``fit_*`` paths *and* by
+    checkpoint restore — packing here (not per predict call) is what makes
+    the restored model's fast path identical to the freshly fitted one.
+    """
+    if metric not in ("l2", "hamming"):
+        raise ValueError(f"unknown metric {metric!r}")
+    if metric == "hamming" and impl not in ("equality", "packed", "onehot"):
+        raise ValueError(f"unresolved hamming impl {impl!r}")
+    packed = onehot = None
+    if metric == "hamming":
+        if impl == "packed":
+            packed = pack_codes(centers, code_bits)
+        elif impl == "onehot":
+            onehot = onehot_codes(centers, 1 << code_bits)
+    return GeekModel(centers, center_valid, k_star, radius, packed, onehot,
+                     metric, impl if metric == "hamming" else "",
+                     code_bits, int(centers.shape[1]), assign_block,
+                     use_pallas)
+
+
+def predict_l2(model: GeekModel, x: jax.Array):
+    """L2 assignment dispatch. Shared by ``predict`` AND the fit-time
+    ``_finish_dense`` pass — one code path is what makes 'predict is
+    bit-identical to fit labels' structural rather than test-enforced."""
+    from repro.core import assign as assign_mod
+    if model.use_pallas:
+        from repro.kernels import ops as kops
+        labels, d2 = kops.distance_argmin_l2(x, model.centers,
+                                             model.center_valid)
+    else:
+        labels, d2 = assign_mod.assign_l2(x, model.centers,
+                                          model.center_valid,
+                                          block=model.assign_block)
+    return labels, jnp.sqrt(d2)
+
+
+def predict_hamming(model: GeekModel, codes: jax.Array):
+    """Hamming assignment dispatch (equality/packed/one-hot, jnp or
+    Pallas), dists normalized to ≈ (1 - Jaccard). Shared by ``predict``
+    and fit-time ``_finish_codes`` — see predict_l2."""
+    from repro.core import assign as assign_mod
+    bits, d = model.code_bits, model.d
+    if model.impl == "packed":
+        xp = pack_codes(codes, bits)
+        if model.use_pallas:
+            from repro.kernels import ops as kops
+            labels, dists = kops.distance_argmin_hamming_packed(
+                xp, model.packed_centers, model.center_valid, bits=bits)
+        else:
+            labels, dists = assign_mod.assign_hamming_packed(
+                xp, model.packed_centers, model.center_valid, bits=bits,
+                d=d, block=model.assign_block)
+    elif model.impl == "onehot":
+        labels, dists = assign_mod.assign_hamming_onehot(
+            codes, model.centers, model.center_valid, card=1 << bits,
+            block=model.assign_block, centers_onehot=model.onehot_centers)
+    elif model.use_pallas:
+        from repro.kernels import ops as kops
+        labels, dists = kops.distance_argmin_hamming(
+            codes, model.centers, model.center_valid)
+    else:
+        labels, dists = assign_mod.assign_hamming(
+            codes, model.centers, model.center_valid,
+            block=model.assign_block)
+    return labels, dists / d  # normalize to ≈ (1 - Jaccard), like fit
+
+
+@jax.jit
+def predict(model: GeekModel, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """One-pass assignment of new points against a fitted model.
+
+    x: (n, d) floats for metric "l2", (n, d) int32 categorical codes for
+    metric "hamming" (use ``geek.hetero_codes`` / ``geek.sparse_codes`` to
+    reproduce the fit-time transformation). Returns (labels, dists) with
+    the same semantics as ``GeekResult`` — on the fit data the labels are
+    bit-identical to the fit-time assignment.
+    """
+    if x.ndim != 2 or x.shape[1] != model.d:
+        raise ValueError(f"expected (n, {model.d}) input, got {x.shape}")
+    if model.metric == "l2":
+        return predict_l2(model, x)
+    return predict_hamming(model, x.astype(jnp.int32))

@@ -1,0 +1,174 @@
+"""Out-of-core dense GEEK: seed from a reservoir, stream the assignment.
+
+The paper's headline cost split (§3.3/§3.5) is an expensive discovery
+phase (LSH transformation + SILK) followed by ONE cheap assignment pass.
+``fit_dense`` keeps all n points resident on device for both phases;
+this driver bounds device memory by the *chunk* size instead:
+
+  1. A stride-sampled reservoir (every ``ceil(n / seed_cap)``-th row) is
+     hashed, bucketed, and SILK-seeded **once** — the only phase that
+     needs super-chunk device residency, and it sees at most ``seed_cap``
+     rows. With ``seed_cap=None`` the reservoir is the whole dataset
+     (stride 1) and seeds/centers are bit-identical to ``fit_dense``.
+  2. The one-pass assignment streams over host-resident chunks. Each
+     chunk is device_put, assigned against the fitted ``GeekModel`` with
+     the chunk buffer donated (XLA reuses it for outputs — steady-state
+     HBM is one chunk, not n), and the labels land back in host numpy.
+     The final ragged chunk is padded with masked sentinel rows so every
+     step reuses one compiled shape; per-row assignment is independent of
+     batch composition, so streamed labels are bit-identical to the
+     in-core path regardless of the chunk size.
+
+``data`` may be an (n, d) array (numpy/JAX; chunks are sliced from it)
+or an iterator of (chunk_i, d) host arrays (materialized chunk-by-chunk
+into host RAM — n is bounded by host memory, never by HBM).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import assign as assign_mod
+from repro.core.geek import (GeekConfig, GeekResult, _seed_dense,
+                             discover_dense)
+from repro.core.model import GeekModel, predict
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _seed_from_reservoir(sample: jax.Array, key: jax.Array, cfg: GeekConfig):
+    """Discovery on the reservoir — the same pipeline as fit_dense."""
+    seeds, overflow = discover_dense(sample, key, cfg)
+    _, _, model = _seed_dense(sample, seeds, cfg)
+    return model, seeds, overflow
+
+
+def _assign_chunk_body(model: GeekModel, xc: jax.Array, k_max: int):
+    """One streamed step: labels/dists for a chunk + its partial radius."""
+    labels, dists = predict(model, xc)
+    radius = assign_mod.cluster_radius(dists, labels, k_max)
+    return labels, dists, radius
+
+
+@functools.lru_cache(maxsize=None)
+def _assign_chunk_fn(donate: bool):
+    """Jitted step with the chunk buffer donated — after the first step
+    the transfer reuses the previous chunk's device buffer instead of
+    growing HBM. CPU cannot donate (XLA warns and ignores), so donation
+    is requested only on accelerator backends."""
+    return jax.jit(_assign_chunk_body, static_argnames=("k_max",),
+                   donate_argnums=(1,) if donate else ())
+
+
+def _iter_chunks(data, chunk: int):
+    """Yield host chunks of exactly ``chunk`` rows (final one may be
+    ragged) — iterator pieces of unrelated sizes are re-cut AND coalesced,
+    so a reader yielding tiny shards never causes tiny padded device
+    steps downstream."""
+    if hasattr(data, "shape") and getattr(data, "ndim", 0) == 2:
+        pieces = (np.asarray(data),)
+    else:
+        pieces = (np.asarray(c) for c in data)
+    buf: list[np.ndarray] = []
+    have = 0
+    for c in pieces:
+        if c.ndim != 2:
+            raise ValueError(f"chunks must be (m, d), got {c.shape}")
+        while c.shape[0]:
+            take = min(chunk - have, c.shape[0])
+            buf.append(c[:take])
+            have += take
+            c = c[take:]
+            if have == chunk:
+                yield (np.concatenate(buf, axis=0) if len(buf) > 1
+                       else np.ascontiguousarray(buf[0]))
+                buf, have = [], 0
+    if have:
+        yield (np.concatenate(buf, axis=0) if len(buf) > 1
+               else np.ascontiguousarray(buf[0]))
+
+
+def fit_dense_streaming(data, key: jax.Array, cfg: GeekConfig, *,
+                        chunk: int = 8192, seed_cap: int | None = None
+                        ) -> tuple[GeekResult, GeekModel]:
+    """Out-of-core ``fit_dense``. Returns (GeekResult, GeekModel) with
+    host-numpy labels/dists in the result.
+
+    chunk:    rows resident on device during the assignment pass.
+    seed_cap: max reservoir rows for the discovery phase (None = all rows,
+              which makes labels/centers bit-identical to ``fit_dense``).
+    """
+    if chunk < 1:
+        raise ValueError(f"chunk must be positive, got {chunk}")
+
+    # -- pass 0: collect host chunks + global stride sample ----------------
+    # array inputs: chunks are row-slice *views*, and a stride-1 reservoir
+    # reuses the array itself — no second host copy of the dataset
+    arr = (np.asarray(data)
+           if hasattr(data, "shape") and getattr(data, "ndim", 0) == 2
+           else None)
+    chunks = list(_iter_chunks(arr if arr is not None else data, chunk))
+    if not chunks:
+        raise ValueError("fit_dense_streaming: empty input")
+    n = sum(c.shape[0] for c in chunks)
+    d = chunks[0].shape[1]
+
+    stride = 1 if seed_cap is None or seed_cap >= n else -(-n // seed_cap)
+    sample_idx = None  # dataset row of each reservoir row (identity if 1:1)
+    if stride == 1:
+        if arr is not None:
+            sample = arr
+        else:
+            sample = (chunks[0] if len(chunks) == 1
+                      else np.concatenate(chunks, axis=0))
+    else:
+        parts, idx_parts, off = [], [], 0
+        for c in chunks:
+            first = (-off) % stride
+            parts.append(c[first::stride])
+            idx_parts.append(np.arange(off + first, off + c.shape[0], stride,
+                                       dtype=np.int32))
+            off += c.shape[0]
+        sample = np.concatenate(parts, axis=0)
+        sample_idx = np.concatenate(idx_parts)
+
+    # -- pass 1: discovery on the reservoir --------------------------------
+    model, seeds, overflow = _seed_from_reservoir(
+        jax.device_put(sample), key, cfg)
+    model = jax.block_until_ready(model)
+    if sample_idx is not None:
+        # keep the fit_dense contract: Seeds.id holds dataset row ids, not
+        # positions inside the strided reservoir
+        seeds = seeds._replace(id=jnp.asarray(sample_idx)[seeds.id])
+
+    # -- pass 2: streamed one-pass assignment ------------------------------
+    labels = np.empty((n,), np.int32)
+    dists = np.empty((n,), np.float32)
+    radius = np.zeros((cfg.k_max,), np.float32)
+    assign_chunk = _assign_chunk_fn(jax.default_backend() != "cpu")
+    off = 0
+    for c in chunks:
+        m = c.shape[0]
+        if m < chunk:  # ragged tail: pad with masked sentinel rows
+            c = np.concatenate(
+                [c, np.zeros((chunk - m, d), c.dtype)], axis=0)
+        lab, dst, rad = assign_chunk(model, jax.device_put(c), cfg.k_max)
+        lab, dst = np.asarray(lab)[:m], np.asarray(dst)[:m]
+        if m < chunk:
+            # recompute on host so sentinel rows contribute no radius
+            rad = np.zeros((cfg.k_max,), np.float32)
+            np.maximum.at(rad, lab, dst)
+        labels[off:off + m] = lab
+        dists[off:off + m] = dst
+        np.maximum(radius, np.asarray(rad), out=radius)
+        off += m
+
+    result = GeekResult(labels, dists, np.asarray(model.centers),
+                        np.asarray(model.center_valid),
+                        np.asarray(model.k_star), radius, seeds,
+                        np.asarray(overflow))
+    model = dataclasses.replace(model, radius=jnp.asarray(radius))
+    return result, model

@@ -69,7 +69,7 @@ def main() -> None:
                   f"time={dt:.2f}s overflow={int(ovf)}")
             return
         t0 = time.time()
-        res = fit_dense(data.x, jax.random.PRNGKey(1), cfg)
+        res, _ = fit_dense(data.x, jax.random.PRNGKey(1), cfg)
         jax.block_until_ready(res.labels)
         dt = time.time() - t0
         print(f"[geek] n={args.n} k*={int(res.k_star)} "
@@ -96,7 +96,7 @@ def main() -> None:
     elif args.dataset == "geonames":
         data = synthetic.geonames_like(key, n=args.n, k=args.k)
         t0 = time.time()
-        res = fit_hetero(data.x_num, data.x_cat, jax.random.PRNGKey(1), cfg)
+        res, _ = fit_hetero(data.x_num, data.x_cat, jax.random.PRNGKey(1), cfg)
         jax.block_until_ready(res.labels)
         print(f"[geek/hetero] n={args.n} k*={int(res.k_star)} "
               f"mean_radius={mean_radius(res.radius, res.center_valid):.4f} "
@@ -112,7 +112,7 @@ def main() -> None:
     else:  # url (sparse)
         data = synthetic.url_like(key, n=args.n, k=args.k)
         t0 = time.time()
-        res = fit_sparse(data.sets, data.mask, jax.random.PRNGKey(1), cfg)
+        res, _ = fit_sparse(data.sets, data.mask, jax.random.PRNGKey(1), cfg)
         jax.block_until_ready(res.labels)
         print(f"[geek/sparse] n={args.n} k*={int(res.k_star)} "
               f"mean_radius={mean_radius(res.radius, res.center_valid):.4f} "

@@ -105,8 +105,10 @@ def parse_hlo(text: str) -> dict[str, Computation]:
             continue
         m = _OP_RE.match(line)
         if m:
-            args = [a.strip().lstrip("%") for a in m.group("args").split(",")
-                    if a.strip().startswith("%")]
+            # operands may be bare names (`%a`) or typed (`f32[4,8]{1,0} %a`);
+            # splitting on "," breaks inside layout braces, so pull the
+            # %-prefixed names directly
+            args = re.findall(r"%([\w\.\-]+)", m.group("args"))
             op = Op(m.group("name"), m.group("type"), m.group("op"), args,
                     stripped)
             cur.ops.append(op)

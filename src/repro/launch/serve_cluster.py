@@ -1,0 +1,114 @@
+"""Batched cluster-assignment serving driver (DESIGN.md §9).
+
+The ROADMAP's "heavy traffic" scenario: SILK discovery runs once
+(offline), the fitted GeekModel is checkpointed, and a serving process
+restores it and answers streams of assignment batches with the one-pass
+kernels only. This driver exercises that loop end to end on synthetic
+traffic — fit (or restore), optionally save, then serve batches and
+report steady-state points/sec.
+
+  PYTHONPATH=src python -m repro.launch.serve_cluster --metric l2 \
+      --n-fit 16384 --batch 4096 --steps 20
+  PYTHONPATH=src python -m repro.launch.serve_cluster --metric hamming \
+      --ckpt /tmp/geek_model --save   # second run restores, skips the fit
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import restore_model, save_model
+from repro.core.geek import GeekConfig, fit_dense, fit_hetero, hetero_codes
+from repro.core.model import predict
+from repro.data import synthetic
+
+
+def _fit(args, cfg):
+    key = jax.random.PRNGKey(args.seed)
+    if args.metric == "l2":
+        data = synthetic.sift_like(key, n=args.n_fit, k=args.k)
+        _, model = fit_dense(data.x, jax.random.PRNGKey(1), cfg)
+    else:
+        data = synthetic.geonames_like(key, n=args.n_fit, k=args.k)
+        _, model = fit_hetero(data.x_num, data.x_cat, jax.random.PRNGKey(1),
+                              cfg)
+    return jax.block_until_ready(model)
+
+
+def _traffic(args, cfg, step: int):
+    """A fresh batch of query points (new synthetic draws each step)."""
+    key = jax.random.PRNGKey(1000 + step)
+    if args.metric == "l2":
+        return synthetic.sift_like(key, n=args.batch, k=args.k).x
+    h = synthetic.geonames_like(key, n=args.batch, k=args.k)
+    return hetero_codes(h.x_num, h.x_cat, cfg.t_cat)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--metric", default="l2", choices=["l2", "hamming"])
+    ap.add_argument("--n-fit", type=int, default=16384)
+    ap.add_argument("--k", type=int, default=64, help="true #clusters")
+    ap.add_argument("--k-max", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=4096)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt", default=None,
+                    help="model checkpoint dir (restore if it has one)")
+    ap.add_argument("--save", action="store_true",
+                    help="save the fitted model to --ckpt")
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    if args.smoke:
+        args.n_fit, args.batch, args.steps = 2048, 512, 5
+
+    cfg = GeekConfig(m=16, t=32, silk_l=4, delta=5, k_max=args.k_max,
+                     pair_cap=1 << 15)
+
+    model = None
+    if args.ckpt:
+        try:
+            model = restore_model(args.ckpt)
+            if model.metric != args.metric:
+                raise SystemExit(
+                    f"[serve] checkpoint at {args.ckpt} was fitted with "
+                    f"metric={model.metric!r}, but --metric is "
+                    f"{args.metric!r} — refusing to serve mismatched "
+                    "traffic")
+            print(f"[serve] restored model from {args.ckpt} "
+                  f"(k*={int(model.k_star)}, metric={model.metric})")
+        except (FileNotFoundError, ValueError) as e:
+            print(f"[serve] no usable model at {args.ckpt} ({e}); fitting")
+    if model is None:
+        t0 = time.time()
+        model = _fit(args, cfg)
+        print(f"[serve] fitted: k*={int(model.k_star)} metric={model.metric} "
+              f"impl={model.impl or '-'} time={time.time() - t0:.1f}s")
+        if args.ckpt and args.save:
+            save_model(args.ckpt, model)
+            print(f"[serve] saved model to {args.ckpt}")
+
+    # -- serving loop ------------------------------------------------------
+    warm = _traffic(args, cfg, -1)
+    jax.block_until_ready(predict(model, warm))            # compile
+    total, t_serve = 0, 0.0
+    occupancy = np.zeros((model.k_max,), np.int64)
+    for step in range(args.steps):
+        batch = jax.device_put(_traffic(args, cfg, step))
+        t0 = time.time()
+        labels, dists = jax.block_until_ready(predict(model, batch))
+        t_serve += time.time() - t0
+        total += batch.shape[0]
+        occupancy += np.bincount(np.asarray(labels), minlength=model.k_max)
+    pps = total / max(t_serve, 1e-9)
+    hot = int(occupancy.argmax())
+    print(f"[serve] {args.steps} batches x {args.batch}: "
+          f"{pps:,.0f} points/s (assignment only), "
+          f"hottest cluster {hot} got {int(occupancy[hot])} points")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,7 +23,7 @@ CFG = GeekConfig(m=16, t=32, bucket_k=2, bucket_l=12, silk_l=4, delta=5,
 
 def test_geek_dense_recovers_blobs(rng):
     data = synthetic.sift_like(rng, n=2000, k=20)
-    res = fit_dense(data.x, jax.random.PRNGKey(1), CFG)
+    res, _ = fit_dense(data.x, jax.random.PRNGKey(1), CFG)
     assert int(res.k_star) >= 20
     assert purity(res.labels, data.true_labels) > 0.95
     assert int(res.overflow) == 0
@@ -31,14 +31,14 @@ def test_geek_dense_recovers_blobs(rng):
 
 def test_geek_hetero_recovers_blobs(rng):
     data = synthetic.geonames_like(rng, n=2000, k=16)
-    res = fit_hetero(data.x_num, data.x_cat, jax.random.PRNGKey(1), CFG)
+    res, _ = fit_hetero(data.x_num, data.x_cat, jax.random.PRNGKey(1), CFG)
     assert int(res.k_star) >= 16
     assert purity(res.labels, data.true_labels) > 0.9
 
 
 def test_geek_sparse_recovers_blobs(rng):
     data = synthetic.url_like(rng, n=1500, k=16)
-    res = fit_sparse(data.sets, data.mask, jax.random.PRNGKey(1), CFG)
+    res, _ = fit_sparse(data.sets, data.mask, jax.random.PRNGKey(1), CFG)
     assert int(res.k_star) >= 12
     assert purity(res.labels, data.true_labels) > 0.8
 
@@ -50,7 +50,7 @@ def test_geek_k_star_discovered_not_prespecified(rng):
     clusters (purity) — finer-than-true granularity is a feature."""
     for k in (8, 32):
         d = synthetic.dense_blobs(rng, n=1500, d=32, k=k)
-        r = fit_dense(d.x, jax.random.PRNGKey(1), CFG)
+        r, _ = fit_dense(d.x, jax.random.PRNGKey(1), CFG)
         sizes = np.bincount(np.array(r.labels), minlength=CFG.k_max)
         assert int((sizes > 0).sum()) >= k          # structure covered
         assert purity(r.labels, d.true_labels) > 0.9   # (almost) never mixed
@@ -59,7 +59,7 @@ def test_geek_k_star_discovered_not_prespecified(rng):
 def test_geek_radius_beats_random_seeding(rng):
     """Paper Figure 6: SILK seeds + one pass vs random seeds + one pass."""
     data = synthetic.sift_like(rng, n=2000, k=24)
-    res = fit_dense(data.x, jax.random.PRNGKey(1), CFG)
+    res, _ = fit_dense(data.x, jax.random.PRNGKey(1), CFG)
     k = int(res.k_star)
     rnd = baselines.seed_then_assign(data.x, k, jax.random.PRNGKey(2),
                                      method="random")
@@ -73,7 +73,7 @@ def test_geek_radius_beats_random_seeding(rng):
 def test_geek_one_pass_labels_consistent_with_centers(rng):
     """Every point's label is its nearest valid center (one-pass property)."""
     data = synthetic.sift_like(rng, n=800, k=8)
-    res = fit_dense(data.x, jax.random.PRNGKey(1), CFG)
+    res, _ = fit_dense(data.x, jax.random.PRNGKey(1), CFG)
     d2 = ((np.array(data.x)[:, None] - np.array(res.centers)[None]) ** 2).sum(-1)
     d2[:, ~np.array(res.center_valid)] = np.inf
     np.testing.assert_array_equal(np.array(res.labels), d2.argmin(1))

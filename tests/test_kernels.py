@@ -154,10 +154,10 @@ def test_geek_code_bits_rounding_and_sparse_width(rng):
     sets = templates[pick]
     mask = jnp.ones_like(sets, bool)
     base = GeekConfig(silk_l=3, delta=3, k_max=16, pair_cap=2048)
-    r16 = fit_sparse(sets, mask, jax.random.PRNGKey(1), base)
+    r16, _ = fit_sparse(sets, mask, jax.random.PRNGKey(1), base)
     # a narrow hetero code_bits must not truncate 16-bit DOPH codes
-    r4 = fit_sparse(sets, mask, jax.random.PRNGKey(1),
-                    dataclasses.replace(base, code_bits=4))
+    r4, _ = fit_sparse(sets, mask, jax.random.PRNGKey(1),
+                      dataclasses.replace(base, code_bits=4))
     np.testing.assert_array_equal(np.array(r16.labels), np.array(r4.labels))
     # unsupported width on the packed path rounds up (5 -> 8), no crash
     from repro.core.geek import fit_hetero
@@ -173,8 +173,8 @@ def test_geek_pipeline_with_pallas_assignment(rng):
     import dataclasses
     data = dense_blobs(rng, n=512, d=24, k=8)
     base = GeekConfig(m=8, t=16, silk_l=3, delta=3, k_max=32, pair_cap=2048)
-    r1 = fit_dense(data.x, jax.random.PRNGKey(1), base)
-    r2 = fit_dense(data.x, jax.random.PRNGKey(1),
-                   dataclasses.replace(base, use_pallas=True))
+    r1, _ = fit_dense(data.x, jax.random.PRNGKey(1), base)
+    r2, _ = fit_dense(data.x, jax.random.PRNGKey(1),
+                      dataclasses.replace(base, use_pallas=True))
     assert int(r1.k_star) == int(r2.k_star)
     assert float((r1.labels == r2.labels).mean()) > 0.999

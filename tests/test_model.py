@@ -1,0 +1,145 @@
+"""GeekModel: predict ≡ fit-time assignment, checkpoint round-trip.
+
+The fitted model is the serving contract (DESIGN.md §9): for every
+entry point, ``predict(model, x_fit)`` must reproduce the fit-time
+labels bit-for-bit, stay permutation-equivariant over input rows, and
+survive a save/restore cycle (packed-center caches re-derived) without
+changing a label.
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.checkpoint.manager import restore_model, save_model
+from repro.core.geek import (GeekConfig, fit_dense, fit_hetero, fit_sparse,
+                             hetero_codes, sparse_codes)
+from repro.core.model import GeekModel, build_model, predict
+from repro.data import synthetic
+
+CFG = GeekConfig(m=8, t=16, silk_l=3, delta=3, k_max=32, pair_cap=4096,
+                 t_cat=8)
+ENTRY_POINTS = ("dense", "hetero", "sparse")
+
+
+@functools.lru_cache(maxsize=None)
+def _fitted(entry: str, hamming_impl: str = "auto"):
+    """(result, model, x_predict) for one entry point — cached, so the
+    hypothesis tests pay the fit once."""
+    key = jax.random.PRNGKey(0)
+    fkey = jax.random.PRNGKey(1)
+    cfg = dataclasses.replace(CFG, hamming_impl=hamming_impl)
+    if entry == "dense":
+        d = synthetic.dense_blobs(key, n=900, d=16, k=8)
+        res, model = fit_dense(d.x, fkey, cfg)
+        x = d.x
+    elif entry == "hetero":
+        h = synthetic.geonames_like(key, n=700, k=8)
+        res, model = fit_hetero(h.x_num, h.x_cat, fkey, cfg)
+        x = hetero_codes(h.x_num, h.x_cat, cfg.t_cat)
+    else:
+        s = synthetic.url_like(key, n=600, k=8)
+        res, model = fit_sparse(s.sets, s.mask, fkey, cfg)
+        x = sparse_codes(s.sets, s.mask, fkey, cfg)
+    return res, model, x
+
+
+@pytest.mark.parametrize("entry", ENTRY_POINTS)
+def test_predict_reproduces_fit_labels(entry):
+    """The one-pass serving path replays the fit-time assignment exactly
+    (labels AND dists) for every entry point's transformed inputs."""
+    res, model, x = _fitted(entry)
+    labels, dists = predict(model, x)
+    np.testing.assert_array_equal(np.array(labels), np.array(res.labels))
+    np.testing.assert_array_equal(np.array(dists), np.array(res.dists))
+
+
+@pytest.mark.parametrize("impl", ["equality", "packed", "onehot"])
+def test_predict_reproduces_fit_labels_all_hamming_impls(impl):
+    """All three Hamming implementations serve bit-identical labels —
+    the impl choice is a throughput knob, never a semantics knob."""
+    cfg = dataclasses.replace(CFG, hamming_impl=impl,
+                              code_bits=4 if impl != "equality" else 0)
+    h = synthetic.geonames_like(jax.random.PRNGKey(0), n=500, k=8)
+    # numeric-only so every impl (onehot needs bits<=8) has a known width
+    res, model = fit_hetero(h.x_num, None, jax.random.PRNGKey(1), cfg)
+    assert model.impl == impl
+    x = hetero_codes(h.x_num, None, cfg.t_cat)
+    labels, _ = predict(model, x)
+    np.testing.assert_array_equal(np.array(labels), np.array(res.labels))
+
+
+@given(st.sampled_from(ENTRY_POINTS), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=12, deadline=None)
+def test_predict_permutation_equivariant(entry, seed):
+    """predict(model, x[perm]) == predict(model, x)[perm]: row order
+    (hence batch composition) never leaks into a row's assignment."""
+    res, model, x = _fitted(entry)
+    perm = np.random.default_rng(seed).permutation(x.shape[0])
+    labels, dists = predict(model, jnp.asarray(np.asarray(x)[perm]))
+    np.testing.assert_array_equal(np.array(labels),
+                                  np.array(res.labels)[perm])
+    np.testing.assert_array_equal(np.array(dists), np.array(res.dists)[perm])
+
+
+def test_predict_rejects_wrong_width():
+    _, model, x = _fitted("dense")
+    with pytest.raises(ValueError):
+        predict(model, jnp.zeros((4, model.d + 1)))
+
+
+def test_model_is_a_pytree():
+    """GeekModel round-trips through tree_flatten and rides jit — the
+    static dispatch metadata lives in the treedef."""
+    _, model, x = _fitted("dense")
+    leaves, treedef = jax.tree_util.tree_flatten(model)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert rebuilt.metric == model.metric
+    assert rebuilt.assign_block == model.assign_block
+    labels = jax.jit(lambda m, xb: predict(m, xb)[0])(model, x[:64])
+    np.testing.assert_array_equal(np.array(labels),
+                                  np.array(predict(model, x[:64])[0]))
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint round-trip (topology-free; packed caches re-derived)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("entry", ENTRY_POINTS)
+def test_model_checkpoint_roundtrip(entry, tmp_path):
+    res, model, x = _fitted(entry)
+    save_model(str(tmp_path), model)
+    restored = restore_model(str(tmp_path))
+    assert isinstance(restored, GeekModel)
+    assert restored.static_meta() == model.static_meta()
+    np.testing.assert_array_equal(np.array(restored.centers),
+                                  np.array(model.centers))
+    labels, dists = predict(restored, x)
+    np.testing.assert_array_equal(np.array(labels), np.array(res.labels))
+    np.testing.assert_array_equal(np.array(dists), np.array(res.dists))
+
+
+def test_model_checkpoint_roundtrip_packed_fast_path(tmp_path):
+    """The sparse model uses the bit-packed fast path; restore must
+    rebuild the packed-center cache bit-identically (ISSUE 2)."""
+    res, model, x = _fitted("sparse")
+    assert model.impl == "packed" and model.packed_centers is not None
+    save_model(str(tmp_path), model)
+    restored = restore_model(str(tmp_path))
+    assert restored.impl == "packed"
+    np.testing.assert_array_equal(np.array(restored.packed_centers),
+                                  np.array(model.packed_centers))
+    labels, _ = predict(restored, x)
+    np.testing.assert_array_equal(np.array(labels), np.array(res.labels))
+
+
+def test_restore_model_rejects_non_model_checkpoint(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+    CheckpointManager(str(tmp_path)).save(0, {"w": jnp.zeros((2, 2))})
+    with pytest.raises(ValueError):
+        restore_model(str(tmp_path))

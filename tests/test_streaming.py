@@ -1,0 +1,169 @@
+"""Out-of-core streaming fit: streamed labels ≡ in-core labels (DESIGN.md §9).
+
+The streaming driver's contract is exact, not approximate: per-row
+assignment is independent of batch composition, so chunking (any chunk
+size, ragged tails included) must not change a single label bit. The
+property tests drive arbitrary n/chunk combinations; the fixed test pins
+the acceptance shape (n=65536, d=64, divisible and non-divisible chunks).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.geek import GeekConfig, fit_dense
+from repro.core.model import build_model, predict
+from repro.core.streaming import fit_dense_streaming
+from repro.data.synthetic import dense_blobs
+
+CFG = GeekConfig(m=8, t=16, silk_l=3, delta=3, k_max=32, pair_cap=4096,
+                 assign_block=128)
+
+
+def _assert_stream_matches(n, chunk, d=12):
+    data = dense_blobs(jax.random.PRNGKey(n * 31 + chunk), n=n, d=d, k=4)
+    x = np.asarray(data.x)
+    res, model = fit_dense(data.x, jax.random.PRNGKey(1), CFG)
+    sres, smodel = fit_dense_streaming(x, jax.random.PRNGKey(1), CFG,
+                                       chunk=chunk)
+    np.testing.assert_array_equal(sres.labels, np.array(res.labels))
+    np.testing.assert_array_equal(sres.dists, np.array(res.dists))
+    np.testing.assert_array_equal(sres.radius, np.array(res.radius))
+    np.testing.assert_array_equal(np.array(smodel.centers),
+                                  np.array(model.centers))
+    assert int(sres.k_star) == int(res.k_star)
+
+
+@given(st.integers(33, 400), st.integers(1, 450))
+@settings(max_examples=8, deadline=None)
+def test_streamed_fit_matches_incore_property(n, chunk):
+    """Any n/chunk combination — chunk smaller, larger, or non-divisible
+    relative to n — yields bit-identical labels, dists, and radii."""
+    _assert_stream_matches(n, chunk)
+
+
+@pytest.mark.parametrize("n,chunk", [(256, 64), (300, 77), (100, 256),
+                                     (97, 96)])
+def test_streamed_fit_matches_incore_fixed(n, chunk):
+    _assert_stream_matches(n, chunk)
+
+
+def test_streamed_fit_accepts_iterator_and_reschunks():
+    """Iterator input with chunk sizes unrelated to --chunk (larger and
+    ragged) is re-chunked on the fly and still bit-identical."""
+    data = dense_blobs(jax.random.PRNGKey(3), n=1000, d=16, k=6)
+    x = np.asarray(data.x)
+    res, _ = fit_dense(data.x, jax.random.PRNGKey(1), CFG)
+
+    def gen():
+        for i in range(0, 1000, 370):
+            yield x[i:i + 370]
+
+    sres, _ = fit_dense_streaming(gen(), jax.random.PRNGKey(1), CFG,
+                                  chunk=256)
+    np.testing.assert_array_equal(sres.labels, np.array(res.labels))
+
+
+def test_streamed_fit_seed_cap_reservoir():
+    """seed_cap caps the discovery phase at a stride-sampled reservoir:
+    the run stays valid (labels are nearest-center under the sampled
+    seeds) even though the seeds differ from the full-data fit."""
+    data = dense_blobs(jax.random.PRNGKey(5), n=1200, d=16, k=6)
+    x = np.asarray(data.x)
+    sres, model = fit_dense_streaming(x, jax.random.PRNGKey(1), CFG,
+                                      chunk=256, seed_cap=300)
+    assert sres.labels.shape == (1200,)
+    assert int(sres.k_star) >= 1
+    # one-pass property: every label is the nearest valid center
+    d2 = ((x[:, None] - np.array(model.centers)[None]) ** 2).sum(-1)
+    d2[:, ~np.array(model.center_valid)] = np.inf
+    np.testing.assert_array_equal(sres.labels, d2.argmin(1))
+    # Seeds.id keeps the fit_dense contract (dataset rows, not reservoir
+    # positions): with n=1200/seed_cap=300 the stride is 4, and centroids
+    # recomputed from the remapped dataset rows match the model's
+    ids = np.array(sres.seeds.id)
+    grp = np.array(sres.seeds.group)
+    val = np.array(sres.seeds.valid)
+    assert (ids[val] % 4 == 0).all()
+    centers = np.array(model.centers)
+    for j in np.unique(grp[val]):
+        np.testing.assert_allclose(x[ids[val & (grp == j)]].mean(0),
+                                   centers[j], rtol=1e-5, atol=1e-5)
+
+
+def test_streamed_fit_rejects_empty_and_bad_chunks():
+    with pytest.raises(ValueError):
+        fit_dense_streaming(iter([]), jax.random.PRNGKey(0), CFG, chunk=64)
+    with pytest.raises(ValueError):
+        fit_dense_streaming(np.zeros((10, 4), np.float32),
+                            jax.random.PRNGKey(0), CFG, chunk=0)
+    with pytest.raises(ValueError):
+        fit_dense_streaming(iter([np.zeros((4,), np.float32)]),
+                            jax.random.PRNGKey(0), CFG, chunk=4)
+
+
+# ---------------------------------------------------------------------------
+# Chunked predict ≡ full-batch predict, all metric paths
+# ---------------------------------------------------------------------------
+
+def _model_and_queries(impl, n, seed=0, d=16, k=8, card=16):
+    key = jax.random.PRNGKey(seed)
+    valid = jnp.arange(k) < (k - 1)          # one invalid center in the mix
+    radius = jnp.zeros((k,), jnp.float32)
+    if impl == "l2":
+        model = build_model(jax.random.normal(key, (k, d)), valid,
+                            jnp.int32(k - 1), radius, metric="l2",
+                            assign_block=64)
+        x = jax.random.normal(jax.random.fold_in(key, 1), (n, d))
+    else:
+        cents = jax.random.randint(key, (k, d), 0, card, jnp.int32)
+        model = build_model(cents, valid, jnp.int32(k - 1), radius,
+                            metric="hamming", impl=impl, code_bits=4,
+                            assign_block=64)
+        x = jax.random.randint(jax.random.fold_in(key, 1), (n, d), 0, card,
+                               jnp.int32)
+    return model, x
+
+
+@given(st.sampled_from(["l2", "equality", "packed", "onehot"]),
+       st.integers(1, 300), st.integers(1, 128))
+@settings(max_examples=20, deadline=None)
+def test_chunked_predict_matches_full_property(impl, n, chunk):
+    """Serving in chunks (the streaming assignment pass) is bit-identical
+    to one full-batch predict on every metric path, including ragged
+    final chunks."""
+    model, x = _model_and_queries(impl, n, seed=n * 7 + chunk)
+    full_lab, full_dist = predict(model, x)
+    labs, dists = [], []
+    for i in range(0, n, chunk):
+        lab, dist = predict(model, x[i:i + chunk])
+        labs.append(np.array(lab))
+        dists.append(np.array(dist))
+    np.testing.assert_array_equal(np.concatenate(labs), np.array(full_lab))
+    np.testing.assert_array_equal(np.concatenate(dists), np.array(full_dist))
+
+
+# ---------------------------------------------------------------------------
+# Acceptance shape: n=65536, d=64 — divisible and non-divisible chunks
+# ---------------------------------------------------------------------------
+
+def test_streaming_bit_identical_at_acceptance_shape():
+    """ISSUE 2 acceptance: streamed fit at n=65536/d=64 is bit-identical
+    to in-core fit_dense with chunk=8192 (divisible) and chunk=7000
+    (non-divisible final chunk of 2536 rows, sentinel-padded)."""
+    cfg = dataclasses.replace(CFG, k_max=256, pair_cap=1 << 15)
+    data = dense_blobs(jax.random.PRNGKey(11), n=65536, d=64, k=32)
+    x = np.asarray(data.x)
+    res, _ = fit_dense(data.x, jax.random.PRNGKey(1), cfg)
+    ref_labels = np.array(res.labels)
+    ref_dists = np.array(res.dists)
+    for chunk in (8192, 7000):
+        sres, _ = fit_dense_streaming(x, jax.random.PRNGKey(1), cfg,
+                                      chunk=chunk)
+        np.testing.assert_array_equal(sres.labels, ref_labels)
+        np.testing.assert_array_equal(sres.dists, ref_dists)
+        np.testing.assert_array_equal(sres.radius, np.array(res.radius))
