@@ -1,0 +1,115 @@
+"""Benchmark-regression gate for CI (the `bench-quick` job).
+
+Compares a freshly produced benchmark report (``bench_assign --quick`` /
+``bench_predict --smoke``) against a committed baseline and fails on a
+>30% throughput regression in any tracked entry:
+
+  PYTHONPATH=src python -m benchmarks.check_regress \\
+      BENCH_assign_quick.json benchmarks/baselines/BENCH_assign_quick.json
+
+Understands both report schemas:
+  - ``us_per_call``     {name: microseconds}          (lower is better)
+  - ``points_per_sec``  {name: {batch: pts/sec}}      (higher is better)
+
+Guard rails:
+  - the two reports must describe the SAME benchmark shape — a shape
+    mismatch means the baseline is stale and must be regenerated with
+    the matching --quick/--smoke flags, so the gate errors out (exit 2)
+    rather than comparing apples to oranges;
+  - shared-runner noise is real, so the default threshold is generous
+    (30%) and tunable via --max-regress;
+  - escape hatches: the ``skip-bench-gate`` PR label (checked in the
+    workflow) or ``SKIP_BENCH_GATE=1`` in the environment (checked
+    here) skip the gate with a visible notice — e.g. for a PR that
+    knowingly trades smoke-shape throughput for something else. Such a
+    PR should also refresh the committed baselines.
+
+Exit codes: 0 ok/skipped, 1 regression, 2 unusable inputs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _throughputs(report: dict) -> dict[str, float]:
+    """Flatten a report into {entry_name: throughput}, higher = better."""
+    out: dict[str, float] = {}
+    for name, us in report.get("us_per_call", {}).items():
+        out[name] = 1e6 / us
+    for name, per_batch in report.get("points_per_sec", {}).items():
+        for batch, pps in per_batch.items():
+            out[f"{name}/batch={batch}"] = float(pps)
+    return out
+
+
+def compare(current: dict, baseline: dict, max_regress: float
+            ) -> tuple[list[str], list[str]]:
+    """Returns (report_lines, failures)."""
+    if current.get("shape") != baseline.get("shape"):
+        raise ValueError(
+            f"shape mismatch: current={current.get('shape')} vs "
+            f"baseline={baseline.get('shape')} — regenerate the committed "
+            "baseline with the same --quick/--smoke mode")
+    cur = _throughputs(current)
+    base = _throughputs(baseline)
+    if not base:
+        raise ValueError("baseline has no us_per_call/points_per_sec entries")
+    lines, failures = [], []
+    for name in sorted(base):
+        if name not in cur:
+            failures.append(f"{name}: missing from current report")
+            continue
+        ratio = cur[name] / base[name]
+        flag = "" if ratio >= 1.0 - max_regress else "  <-- REGRESSION"
+        lines.append(f"  {name:40s} {ratio:6.2f}x of baseline{flag}")
+        if flag:
+            failures.append(f"{name}: {ratio:.2f}x of baseline "
+                            f"(allowed >= {1.0 - max_regress:.2f}x)")
+    return lines, failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="freshly produced benchmark JSON")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("--max-regress", type=float, default=0.30,
+                    help="max tolerated fractional throughput drop "
+                         "(default 0.30)")
+    args = ap.parse_args()
+
+    if os.environ.get("SKIP_BENCH_GATE", "").lower() not in ("", "0",
+                                                             "false"):
+        print("[check_regress] SKIP_BENCH_GATE set — gate skipped")
+        return
+
+    try:
+        with open(args.current) as f:
+            current = json.load(f)
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        lines, failures = compare(current, baseline, args.max_regress)
+    except (OSError, ValueError) as e:
+        print(f"[check_regress] unusable inputs: {e}", file=sys.stderr)
+        sys.exit(2)
+
+    print(f"[check_regress] {args.current} vs {args.baseline} "
+          f"(threshold: {args.max_regress:.0%} drop)")
+    print("\n".join(lines))
+    if failures:
+        print(f"[check_regress] FAILED — {len(failures)} regression(s):",
+              file=sys.stderr)
+        for f_ in failures:
+            print(f"  {f_}", file=sys.stderr)
+        print("  (apply the 'skip-bench-gate' PR label or set "
+              "SKIP_BENCH_GATE=1 to bypass; refresh "
+              "benchmarks/baselines/ if the change is intentional)",
+              file=sys.stderr)
+        sys.exit(1)
+    print("[check_regress] OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -144,44 +144,66 @@ class CheckpointManager:
 # ---------------------------------------------------------------------------
 # GeekModel save/restore (DESIGN.md §9)
 # ---------------------------------------------------------------------------
-# Only the canonical arrays (model.ARRAY_FIELDS) are written; the static
-# dispatch metadata goes into the manifest's `extra` blob and the packed
-# center caches are re-derived on restore via build_model — deterministic,
-# so the restored fast path is bit-identical to the fitted one. Like every
-# checkpoint here, the files are topology-free: restore onto any mesh by
-# passing `shardings`.
+# Only the canonical arrays (model.ARRAY_FIELDS) plus the fit-time
+# transform's arrays (quantile boundaries / DOPH key, "transform_"-prefixed
+# leaves) are written; the static dispatch + transform metadata goes into
+# the manifest's `extra` blob and the packed center caches are re-derived
+# on restore via build_model — deterministic, so the restored fast path
+# (and the restored coding of new traffic) is bit-identical to the fitted
+# one. Like every checkpoint here, the files are topology-free: restore
+# onto any mesh by passing `shardings`.
 
 def save_model(directory: str, model, *, step: int = 0,
                wait: bool = True) -> None:
     """Persist a fitted GeekModel (atomic, async-capable like save())."""
     from repro.core import model as model_mod
+    from repro.core import transform as transform_mod
     mgr = CheckpointManager(directory)
     arrays = {f: getattr(model, f) for f in model_mod.ARRAY_FIELDS}
+    tmeta = None
+    if model.transform is not None:
+        tmeta = transform_mod.transform_meta(model.transform)
+        for name, arr in transform_mod.transform_arrays(
+                model.transform).items():
+            arrays["transform_" + name] = arr
     mgr.save(step, arrays, wait=wait,
-             extra={"kind": "geek_model", "meta": model.static_meta()})
+             extra={"kind": "geek_model", "meta": model.static_meta(),
+                    "transform": tmeta, "fields": sorted(arrays)})
 
 
 def restore_model(directory: str, *, step: int | None = None,
                   sharding=None):
-    """Rebuild a GeekModel (packed caches included) from save_model files.
+    """Rebuild a GeekModel (packed caches + transform included) from
+    save_model files.
 
     sharding: optional jax.sharding.Sharding applied to every leaf —
     the model is small (k_max·d), replication is the common choice.
+    Pre-transform checkpoints (no "fields"/"transform" in the manifest)
+    restore with transform=None for hamming models: predict still works
+    on pre-transformed codes.
     """
     from repro.core import model as model_mod
+    from repro.core import transform as transform_mod
     mgr = CheckpointManager(directory, create=False)
     manifest = mgr.load_manifest(step=step)
     extra = manifest.get("extra") or {}
     if extra.get("kind") != "geek_model":
         raise ValueError(f"{directory} does not hold a GeekModel checkpoint")
-    target = {f: 0 for f in model_mod.ARRAY_FIELDS}  # values unused
-    shardings = ({f: sharding for f in model_mod.ARRAY_FIELDS}
+    fields = extra.get("fields") or sorted(model_mod.ARRAY_FIELDS)
+    target = {f: 0 for f in fields}  # values unused
+    shardings = ({f: sharding for f in fields}
                  if sharding is not None else None)
     # pin the step from the manifest we just read — a concurrent save_model
     # publishing a newer step must not split meta and arrays across steps
     arrays, _ = mgr.restore(target, step=manifest["step"],
                             shardings=shardings)
     meta = dict(extra["meta"])
+    transform = None
+    if extra.get("transform") is not None:
+        prefix = "transform_"
+        tarrays = {k[len(prefix):]: jax.numpy.asarray(v)
+                   for k, v in arrays.items() if k.startswith(prefix)}
+        transform = transform_mod.transform_from(extra["transform"], tarrays)
     return model_mod.build_model(
         jax.numpy.asarray(arrays["centers"]),
         jax.numpy.asarray(arrays["center_valid"]),
@@ -189,4 +211,4 @@ def restore_model(directory: str, *, step: int | None = None,
         jax.numpy.asarray(arrays["radius"]),
         metric=meta["metric"], impl=meta["impl"],
         code_bits=meta["code_bits"], assign_block=meta["assign_block"],
-        use_pallas=meta["use_pallas"])
+        use_pallas=meta["use_pallas"], transform=transform)

@@ -8,6 +8,20 @@ from repro.core.geek import (  # noqa: F401
     hetero_codes,
     sparse_codes,
 )
-from repro.core.model import GeekModel, build_model, predict  # noqa: F401
+from repro.core.model import (  # noqa: F401
+    GeekModel,
+    NumericDiscretizer,
+    build_model,
+    predict,
+)
 from repro.core.silk import SeedPairs, Seeds, silk_seeding  # noqa: F401
-from repro.core.streaming import fit_dense_streaming  # noqa: F401
+from repro.core.streaming import (  # noqa: F401
+    fit_dense_streaming,
+    fit_hetero_streaming,
+    fit_sparse_streaming,
+)
+from repro.core.transform import (  # noqa: F401
+    HeteroTransform,
+    IdentityTransform,
+    SparseTransform,
+)

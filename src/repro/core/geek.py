@@ -10,9 +10,10 @@ Three entry points, one per data type (paper Algorithms 1-3):
   - fit_sparse(sets, mask)    Jaccard on sets, DOPH -> MinHash buckets
 
 Each returns ``(GeekResult, GeekModel)``: the per-run result (labels,
-dists, diagnostics) plus the persistent fitted model that
+dists, diagnostics) plus the persistent fitted model — central vectors
+AND the fit-time transform (``repro.core.transform``) — that
 ``repro.core.model.predict`` reuses to assign new points without
-re-running SILK (DESIGN.md §9).
+re-running SILK, coding them exactly as the fit did (DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -26,9 +27,11 @@ import jax.numpy as jnp
 from repro.core import assign as assign_mod
 from repro.core import lsh
 from repro.core.buckets import BucketTables, partition_by_signature, partition_even
-from repro.core.model import (GeekModel, build_model, predict_hamming,
-                              predict_l2)
+from repro.core.model import (GeekModel, NumericDiscretizer, build_model,
+                              predict_hamming, predict_l2)
 from repro.core.silk import Seeds, silk_seeding
+from repro.core.transform import (HeteroTransform, IdentityTransform,
+                                  SparseTransform)
 from repro.kernels.pack import bits_for_cardinality
 from repro.utils.hashing import combine2_u32, derive_hash_keys
 
@@ -98,7 +101,8 @@ def _seed_dense(x, seeds: Seeds, cfg: GeekConfig):
     model = build_model(centers, cvalid, seeds.k_star,
                         jnp.zeros((cfg.k_max,), jnp.float32), metric="l2",
                         assign_block=cfg.assign_block,
-                        use_pallas=cfg.use_pallas)
+                        use_pallas=cfg.use_pallas,
+                        transform=IdentityTransform())
     return centers, cvalid, model
 
 
@@ -113,27 +117,35 @@ def _finish_dense(x, seeds: Seeds, cfg: GeekConfig, overflow):
     return result, dataclasses.replace(model, radius=radius)
 
 
+def _seed_codes(codes, seeds: Seeds, cfg: GeekConfig, *, bits: int,
+                transform):
+    """Mode centers + model for a code-space fit — everything but the
+    n-sized pass. Shared by the in-core ``_finish_codes`` and the
+    streaming reservoir path (``core.streaming``)."""
+    centers, cvalid = assign_mod.mode_centers(codes, seeds)
+    impl, bits = resolve_hamming_impl(cfg, bits)
+    return build_model(centers, cvalid, seeds.k_star,
+                       jnp.zeros((cfg.k_max,), jnp.float32),
+                       metric="hamming", impl=impl, code_bits=bits,
+                       assign_block=cfg.assign_block,
+                       use_pallas=cfg.use_pallas, transform=transform)
+
+
 def _finish_codes(codes, seeds: Seeds, cfg: GeekConfig, overflow, *,
-                  bits: int = 0):
+                  bits: int = 0, transform=None):
     """Mode centers + one-pass Hamming assignment.
 
     ``bits`` is a static bound on the code width (0 = unknown). The
     packed and one-hot paths produce mismatch counts bit-identical to the
     equality path, so the choice is purely a throughput knob.
     """
-    centers, cvalid = assign_mod.mode_centers(codes, seeds)
-    impl, bits = resolve_hamming_impl(cfg, bits)
-    model = build_model(centers, cvalid, seeds.k_star,
-                        jnp.zeros((cfg.k_max,), jnp.float32),
-                        metric="hamming", impl=impl, code_bits=bits,
-                        assign_block=cfg.assign_block,
-                        use_pallas=cfg.use_pallas)
+    model = _seed_codes(codes, seeds, cfg, bits=bits, transform=transform)
     # shared serving dispatch (equality/packed/one-hot, jnp or Pallas);
     # dists come back normalized to ≈ (1 - Jaccard)
     labels, dists = predict_hamming(model, codes)
     radius = assign_mod.cluster_radius(dists, labels, cfg.k_max)
-    result = GeekResult(labels, dists, centers, cvalid, seeds.k_star, radius,
-                        seeds, overflow)
+    result = GeekResult(labels, dists, model.centers, model.center_valid,
+                        seeds.k_star, radius, seeds, overflow)
     return result, dataclasses.replace(model, radius=radius)
 
 
@@ -166,22 +178,37 @@ def fit_dense(x: jax.Array, key: jax.Array,
 # Heterogeneous dense (Algorithm 2)
 # ---------------------------------------------------------------------------
 
+def make_hetero_transform(x_num: jax.Array | None,
+                          t_cat: int) -> HeteroTransform:
+    """Fit the persistent hetero transform: per-attribute quantile
+    boundaries from the fit batch (DESIGN.md §9). Coding with it is exact
+    on any later batch — predict-time bins no longer drift."""
+    disc = (NumericDiscretizer.fit(x_num, t_cat)
+            if x_num is not None and x_num.shape[1] > 0 else None)
+    return HeteroTransform(disc)
+
+
 def discretize_numeric(x_num: jax.Array, t_cat: int) -> jax.Array:
-    """Rank-partition each numeric attribute into t_cat categorical codes
-    (the paper reuses the homogeneous even-partition trick per attribute)."""
-    n = x_num.shape[0]
-    ranks = jnp.argsort(jnp.argsort(x_num, axis=0), axis=0)
-    return (ranks * t_cat // n).astype(jnp.int32)
+    """Quantile-partition each numeric attribute into t_cat categorical
+    codes, boundaries fitted from this batch (the paper reuses the
+    homogeneous even-partition trick per attribute; boundaries reproduce
+    the rank partition bit-for-bit on tie-free data and, unlike ranks,
+    persist — see ``model.NumericDiscretizer``)."""
+    return NumericDiscretizer.fit(x_num, t_cat)(x_num)
 
 
-def hetero_codes(x_num: jax.Array, x_cat: jax.Array, t_cat: int) -> jax.Array:
-    """Unified categorical codes: discretized numeric ++ raw categorical."""
-    parts = []
-    if x_num is not None and x_num.shape[1] > 0:
-        parts.append(discretize_numeric(x_num, t_cat))
-    if x_cat is not None and x_cat.shape[1] > 0:
-        parts.append(x_cat.astype(jnp.int32))
-    return jnp.concatenate(parts, axis=1)
+def hetero_codes(x_num: jax.Array, x_cat: jax.Array, t_cat: int, *,
+                 transform: HeteroTransform | None = None) -> jax.Array:
+    """Unified categorical codes: discretized numeric ++ raw categorical.
+
+    With ``transform`` (e.g. ``model.transform`` from a fitted GeekModel)
+    the persisted boundaries code the batch — the exact serving path.
+    Without it, boundaries are fitted from this batch (the fit-time
+    coding; equivalently use ``model.encode``).
+    """
+    if transform is None:
+        transform = make_hetero_transform(x_num, t_cat)
+    return transform(x_num, x_cat)
 
 
 def _code_items(codes: jax.Array, key: jax.Array) -> jax.Array:
@@ -191,55 +218,87 @@ def _code_items(codes: jax.Array, key: jax.Array) -> jax.Array:
     return combine2_u32(jnp.broadcast_to(dims, codes.shape), codes, hk[0], hk[1])
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def fit_hetero(x_num: jax.Array, x_cat: jax.Array, key: jax.Array,
-               cfg: GeekConfig) -> tuple[GeekResult, GeekModel]:
-    k_item, k_sig, k_silk = jax.random.split(key, 3)
-    codes = hetero_codes(x_num, x_cat, cfg.t_cat)
+def discover_codes(codes: jax.Array, k_item: jax.Array, k_sig: jax.Array,
+                   k_silk: jax.Array, cfg: GeekConfig):
+    """Code-space discovery phase: hashed attribute-value items ->
+    MinHash (K, L) buckets -> SILK. Shared by ``fit_hetero``,
+    ``fit_sparse``, and the streaming reservoir paths — one copy is what
+    keeps the streamed bit-identity contracts structural."""
     items = _code_items(codes, k_item)
     sig_keys = derive_hash_keys(k_sig, (cfg.bucket_l, cfg.bucket_k))
     sigs = lsh.minhash_signatures(items, jnp.ones_like(items, bool), sig_keys)
     buckets = partition_by_signature(sigs)
-    seeds, overflow = silk_seeding(buckets, k_silk, silk_k=cfg.silk_k,
-                                   silk_l=cfg.silk_l, delta=cfg.delta,
-                                   pair_cap=cfg.pair_cap, k_max=cfg.k_max)
-    # numeric-only data: codes are t_cat discretization bins, width known
+    return silk_seeding(buckets, k_silk, silk_k=cfg.silk_k,
+                        silk_l=cfg.silk_l, delta=cfg.delta,
+                        pair_cap=cfg.pair_cap, k_max=cfg.k_max)
+
+
+def hetero_code_bits(cfg: GeekConfig, x_cat: jax.Array | None) -> int:
+    """Static hetero code-width bound, validated.
+
+    Numeric-only data: every code is a t_cat discretization bin, so the
+    width is known — and a user-set ``cfg.code_bits`` too narrow for
+    t_cat must raise rather than silently mask codes during packing.
+    With categorical columns the cardinality is not statically known, so
+    ``cfg.code_bits`` is taken on trust as before.
+    """
     bits = cfg.code_bits
-    if bits == 0 and (x_cat is None or x_cat.shape[1] == 0):
-        bits = bits_for_cardinality(cfg.t_cat)
-    return _finish_codes(codes, seeds, cfg, overflow, bits=bits)
+    if x_cat is None or x_cat.shape[1] == 0:
+        need = bits_for_cardinality(cfg.t_cat)
+        if bits == 0:
+            bits = need
+        elif bits < need:
+            raise ValueError(
+                f"GeekConfig.code_bits={bits} cannot hold t_cat={cfg.t_cat} "
+                f"discretization bins (needs >= {need}); packing would "
+                "silently mask codes")
+    return bits
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def fit_hetero(x_num: jax.Array, x_cat: jax.Array, key: jax.Array,
+               cfg: GeekConfig) -> tuple[GeekResult, GeekModel]:
+    k_item, k_sig, k_silk = jax.random.split(key, 3)
+    transform = make_hetero_transform(x_num, cfg.t_cat)
+    codes = transform(x_num, x_cat)
+    seeds, overflow = discover_codes(codes, k_item, k_sig, k_silk, cfg)
+    bits = hetero_code_bits(cfg, x_cat)
+    return _finish_codes(codes, seeds, cfg, overflow, bits=bits,
+                         transform=transform)
 
 
 # ---------------------------------------------------------------------------
 # Sparse (Algorithm 3)
 # ---------------------------------------------------------------------------
 
+def make_sparse_transform(key: jax.Array, cfg: GeekConfig) -> SparseTransform:
+    """The persistent sparse transform, deriving the DOPH key from the
+    fit key exactly as ``fit_sparse`` does. The key rides in the model
+    (and its checkpoints), so a serving process codes new traffic without
+    ever seeing the original fit key."""
+    return SparseTransform(jax.random.split(key, 4)[0], cfg.doph_m)
+
+
 def sparse_codes(sets: jax.Array, mask: jax.Array, key: jax.Array,
                  cfg: GeekConfig) -> jax.Array:
     """16-bit DOPH codes exactly as fit_sparse derives them from ``key``.
 
-    The serving path needs this: new sparse points must be coded with the
-    *fit-time* DOPH hash before ``predict(model, codes)`` — the model's
-    mode centers live in this code space.
+    The serving path needs this coding: new sparse points must land in
+    the model's code space — prefer ``model.encode(sets, mask)``, which
+    uses the persisted fit-time key.
     """
-    k_doph = jax.random.split(key, 4)[0]
-    codes = lsh.doph_codes(sets, mask, k_doph, cfg.doph_m)     # (n, doph_m)
-    return (codes >> jnp.uint32(16)).astype(jnp.int32)         # 16-bit codes
+    return make_sparse_transform(key, cfg)(sets, mask)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def fit_sparse(sets: jax.Array, mask: jax.Array, key: jax.Array,
                cfg: GeekConfig) -> tuple[GeekResult, GeekModel]:
     _, k_item, k_sig, k_silk = jax.random.split(key, 4)
-    codes = sparse_codes(sets, mask, key, cfg)
-    items = _code_items(codes, k_item)
-    sig_keys = derive_hash_keys(k_sig, (cfg.bucket_l, cfg.bucket_k))
-    sigs = lsh.minhash_signatures(items, jnp.ones_like(items, bool), sig_keys)
-    buckets = partition_by_signature(sigs)
-    seeds, overflow = silk_seeding(buckets, k_silk, silk_k=cfg.silk_k,
-                                   silk_l=cfg.silk_l, delta=cfg.delta,
-                                   pair_cap=cfg.pair_cap, k_max=cfg.k_max)
-    # doph_codes are truncated to 16 bits above — always packable 2:1.
+    transform = make_sparse_transform(key, cfg)
+    codes = transform(sets, mask)
+    seeds, overflow = discover_codes(codes, k_item, k_sig, k_silk, cfg)
+    # doph codes are truncated to 16 bits — always packable 2:1.
     # cfg.code_bits describes *hetero* codes, so it is ignored here: a
     # narrower width would silently mask DOPH codes during packing.
-    return _finish_codes(codes, seeds, cfg, overflow, bits=16)
+    return _finish_codes(codes, seeds, cfg, overflow, bits=16,
+                         transform=transform)

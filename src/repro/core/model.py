@@ -8,6 +8,13 @@ one-pass kernels. ``predict(model, x)`` is the serving-side counterpart
 of the fit-time assignment — same dispatch (L2 / equality / packed /
 one-hot Hamming, jnp or Pallas), bit-identical labels on the fit data.
 
+The model also carries the fit-time **transform** (``repro.core
+.transform``): the persistent raw-input → model-code-space mapping
+(identity for dense, quantile discretization + categorical concat for
+hetero, keyed DOPH for sparse). ``model.encode(*raw_parts)`` codes new
+traffic exactly as the fit did, which is what makes hetero/sparse
+serving *exact* on unseen data rather than batch-approximate.
+
 Centers are pre-packed once at model-build time (bit-packed words for the
 packed path, bf16 one-hot for the MXU path), so a predict call packs only
 the incoming batch — the (k, d) side rides along for free.
@@ -15,20 +22,89 @@ the incoming batch — the (k, d) side rides along for free.
 The model is a pytree whose aux data carries the static dispatch fields,
 so it passes through ``jax.jit``, ``jax.device_put``, and the checkpoint
 manager unchanged. Serialization keeps only the canonical arrays
-(centers / center_valid / k_star / radius); the packed caches are
-re-derived on restore (see ``checkpoint.manager.save_model``).
+(centers / center_valid / k_star / radius) plus the transform's arrays
+(quantile boundaries / DOPH key); the packed caches are re-derived on
+restore (see ``checkpoint.manager.save_model``).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.pack import onehot_codes, pack_codes
 
-#: fields persisted by the checkpoint manager, in manifest order
+#: canonical fields persisted by the checkpoint manager, in manifest order
+#: (the transform's arrays ride along under a "transform_" prefix)
 ARRAY_FIELDS = ("centers", "center_valid", "k_star", "radius")
+
+
+# ---------------------------------------------------------------------------
+# Numeric discretization with persisted quantile boundaries
+# ---------------------------------------------------------------------------
+
+def quantile_boundaries(v_sorted, t_cat: int) -> jax.Array:
+    """(d, t_cat-1) bin boundaries from per-attribute ascending-sorted values.
+
+    Boundary b (1-based) is the value at rank ``ceil(b*n/t_cat)`` — the
+    first rank the legacy within-batch rank partition assigned code b —
+    so ``searchsorted(boundaries, x, side="right")`` reproduces the rank
+    codes exactly on tie-free data (ties get the *same* code under
+    boundaries, where ranks split them arbitrarily). Ranks beyond n-1
+    (empty tail bins when n < t_cat) become +inf.
+
+    ``v_sorted`` may be a (n, d) numpy array (host two-pass streaming) or
+    a traced jnp array (in-core fit) — the rank arithmetic is static.
+    """
+    n = v_sorted.shape[0]
+    r = (np.arange(1, t_cat) * n + t_cat - 1) // t_cat
+    picked = v_sorted[np.minimum(r, n - 1)]               # (t_cat-1, d)
+    return jnp.where(jnp.asarray((r >= n)[:, None]), jnp.inf, picked).T
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class NumericDiscretizer:
+    """Per-attribute quantile bin boundaries, fitted once and persisted.
+
+    Replaces the rank-based ``discretize_numeric``: codes are
+    ``searchsorted(boundaries[j], x[:, j], side="right")`` per attribute,
+    so coding a point depends only on the fitted boundaries — never on
+    the batch it arrives in. Fit-time codes are unchanged versus the rank
+    partition when the boundaries come from the full fit batch.
+    """
+    boundaries: jax.Array    # (d_num, t_cat - 1) float32, rows ascending
+
+    def tree_flatten(self):
+        return (self.boundaries,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    @property
+    def d_num(self) -> int:
+        return self.boundaries.shape[0]
+
+    @property
+    def t_cat(self) -> int:
+        return self.boundaries.shape[1] + 1
+
+    @classmethod
+    def fit(cls, x_num: jax.Array, t_cat: int) -> "NumericDiscretizer":
+        return cls(quantile_boundaries(jnp.sort(x_num, axis=0), t_cat))
+
+    def __call__(self, x_num: jax.Array) -> jax.Array:
+        if x_num.ndim != 2 or x_num.shape[1] != self.d_num:
+            raise ValueError(f"expected (n, {self.d_num}) numeric input, "
+                             f"got {x_num.shape}")
+        codes = jax.vmap(functools.partial(jnp.searchsorted, side="right"),
+                         in_axes=(0, 1), out_axes=1)(self.boundaries, x_num)
+        return codes.astype(jnp.int32)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -42,6 +118,9 @@ class GeekModel:
     # -- derived packed caches (rebuilt on restore, not serialized) ---------
     packed_centers: jax.Array | None   # (k_max, w) uint32, impl == "packed"
     onehot_centers: jax.Array | None   # (k_max, d*card) bf16, impl == "onehot"
+    # -- fit-time transform (repro.core.transform; serialized) --------------
+    transform: object | None = None    # Transform pytree; None = caller
+                                       # supplies pre-transformed codes
     # -- static dispatch metadata (pytree aux data) -------------------------
     metric: str = "l2"        # "l2" | "hamming"
     impl: str = ""            # hamming impl, resolved: equality|packed|onehot
@@ -52,7 +131,7 @@ class GeekModel:
 
     def tree_flatten(self):
         children = (self.centers, self.center_valid, self.k_star, self.radius,
-                    self.packed_centers, self.onehot_centers)
+                    self.packed_centers, self.onehot_centers, self.transform)
         aux = (self.metric, self.impl, self.code_bits, self.d,
                self.assign_block, self.use_pallas)
         return children, aux
@@ -64,6 +143,18 @@ class GeekModel:
     @property
     def k_max(self) -> int:
         return self.centers.shape[0]
+
+    def encode(self, *parts) -> jax.Array:
+        """Code raw inputs into the model's assignment space with the
+        fit-time transform: ``encode(x)`` (dense), ``encode(x_num,
+        x_cat)`` (hetero), ``encode(sets, mask)`` (sparse). The output
+        feeds ``predict`` and reproduces the fit-time coding exactly."""
+        if self.transform is None:
+            if len(parts) == 1:
+                return parts[0]  # pre-transform-era model: codes pass through
+            raise ValueError("model has no fit-time transform; pass "
+                             "pre-transformed codes to predict() instead")
+        return self.transform(*parts)
 
     def static_meta(self) -> dict:
         """JSON-serializable dispatch metadata (checkpoint manifest extra)."""
@@ -77,12 +168,16 @@ def build_model(centers: jax.Array, center_valid: jax.Array,
                 k_star: jax.Array, radius: jax.Array, *,
                 metric: str, impl: str = "", code_bits: int = 0,
                 assign_block: int = 4096,
-                use_pallas: bool = False) -> GeekModel:
+                use_pallas: bool = False,
+                transform=None) -> GeekModel:
     """Construct a GeekModel, pre-packing centers for the chosen impl.
 
     This is the single constructor used by the ``fit_*`` paths *and* by
     checkpoint restore — packing here (not per predict call) is what makes
     the restored model's fast path identical to the freshly fitted one.
+    ``transform`` is the fit-time raw→code-space mapping (defaults to the
+    identity for L2; hamming models without one require pre-transformed
+    codes at predict time).
     """
     if metric not in ("l2", "hamming"):
         raise ValueError(f"unknown metric {metric!r}")
@@ -94,8 +189,11 @@ def build_model(centers: jax.Array, center_valid: jax.Array,
             packed = pack_codes(centers, code_bits)
         elif impl == "onehot":
             onehot = onehot_codes(centers, 1 << code_bits)
+    if transform is None and metric == "l2":
+        from repro.core.transform import IdentityTransform
+        transform = IdentityTransform()
     return GeekModel(centers, center_valid, k_star, radius, packed, onehot,
-                     metric, impl if metric == "hamming" else "",
+                     transform, metric, impl if metric == "hamming" else "",
                      code_bits, int(centers.shape[1]), assign_block,
                      use_pallas)
 
@@ -152,10 +250,11 @@ def predict(model: GeekModel, x: jax.Array) -> tuple[jax.Array, jax.Array]:
     """One-pass assignment of new points against a fitted model.
 
     x: (n, d) floats for metric "l2", (n, d) int32 categorical codes for
-    metric "hamming" (use ``geek.hetero_codes`` / ``geek.sparse_codes`` to
-    reproduce the fit-time transformation). Returns (labels, dists) with
-    the same semantics as ``GeekResult`` — on the fit data the labels are
-    bit-identical to the fit-time assignment.
+    metric "hamming" — use ``model.encode(*raw_parts)`` to reproduce the
+    fit-time transformation (persisted quantile boundaries / DOPH key)
+    on raw traffic. Returns (labels, dists) with the same semantics as
+    ``GeekResult`` — on the fit data the labels are bit-identical to the
+    fit-time assignment.
     """
     if x.ndim != 2 or x.shape[1] != model.d:
         raise ValueError(f"expected (n, {model.d}) input, got {x.shape}")

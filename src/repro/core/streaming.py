@@ -1,27 +1,42 @@
-"""Out-of-core dense GEEK: seed from a reservoir, stream the assignment.
+"""Out-of-core GEEK for every data type: seed from a reservoir, stream
+the transformation + assignment.
 
 The paper's headline cost split (§3.3/§3.5) is an expensive discovery
 phase (LSH transformation + SILK) followed by ONE cheap assignment pass.
-``fit_dense`` keeps all n points resident on device for both phases;
-this driver bounds device memory by the *chunk* size instead:
+The in-core ``fit_*`` entry points keep all n points resident on device
+for both phases; these drivers bound device memory by the *chunk* size
+instead:
 
   1. A stride-sampled reservoir (every ``ceil(n / seed_cap)``-th row) is
-     hashed, bucketed, and SILK-seeded **once** — the only phase that
-     needs super-chunk device residency, and it sees at most ``seed_cap``
-     rows. With ``seed_cap=None`` the reservoir is the whole dataset
-     (stride 1) and seeds/centers are bit-identical to ``fit_dense``.
+     transformed, bucketed, and SILK-seeded **once** — the only phase
+     that needs super-chunk device residency, and it sees at most
+     ``seed_cap`` rows. With ``seed_cap=None`` the reservoir is the whole
+     dataset (stride 1) and seeds/centers are bit-identical to the
+     in-core fit.
   2. The one-pass assignment streams over host-resident chunks. Each
-     chunk is device_put, assigned against the fitted ``GeekModel`` with
-     the chunk buffer donated (XLA reuses it for outputs — steady-state
-     HBM is one chunk, not n), and the labels land back in host numpy.
-     The final ragged chunk is padded with masked sentinel rows so every
-     step reuses one compiled shape; per-row assignment is independent of
-     batch composition, so streamed labels are bit-identical to the
-     in-core path regardless of the chunk size.
+     chunk is device_put, coded by the model's fit-time **transform**
+     (identity / quantile-boundary discretization / keyed DOPH — all
+     row-independent), assigned with the chunk buffers donated (XLA
+     reuses them for outputs — steady-state HBM is one chunk, not n),
+     and the labels land back in host numpy. The final ragged chunk is
+     padded with masked sentinel rows so every step reuses one compiled
+     shape; coding + assignment are independent of batch composition, so
+     streamed labels are bit-identical to the in-core path regardless of
+     the chunk size.
 
-``data`` may be an (n, d) array (numpy/JAX; chunks are sliced from it)
-or an iterator of (chunk_i, d) host arrays (materialized chunk-by-chunk
-into host RAM — n is bounded by host memory, never by HBM).
+Three drivers, one per entry point (DESIGN.md §9):
+
+  - ``fit_dense_streaming(x_or_iter, …)``
+  - ``fit_hetero_streaming((x_num, x_cat) or iter of pairs, …)`` — the
+    chunked MinHash path; numeric quantile boundaries are estimated from
+    the reservoir, or from the full data with ``boundaries="exact"``
+    (a second host pass over the numeric columns only)
+  - ``fit_sparse_streaming((sets, mask) or iter of pairs, …)`` — the
+    chunked DOPH path
+
+``data`` may be arrays (numpy/JAX; chunks are sliced from them) or an
+iterator of host chunks (materialized chunk-by-chunk into host RAM — n
+is bounded by host memory, never by HBM).
 """
 from __future__ import annotations
 
@@ -33,129 +48,167 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import assign as assign_mod
-from repro.core.geek import (GeekConfig, GeekResult, _seed_dense,
-                             discover_dense)
-from repro.core.model import GeekModel, predict
+from repro.core.geek import (GeekConfig, GeekResult, _seed_codes, _seed_dense,
+                             discover_codes, discover_dense, hetero_code_bits,
+                             make_sparse_transform)
+from repro.core.model import (GeekModel, NumericDiscretizer,
+                              quantile_boundaries, predict)
+from repro.core.transform import HeteroTransform
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _seed_from_reservoir(sample: jax.Array, key: jax.Array, cfg: GeekConfig):
-    """Discovery on the reservoir — the same pipeline as fit_dense."""
-    seeds, overflow = discover_dense(sample, key, cfg)
-    _, _, model = _seed_dense(sample, seeds, cfg)
-    return model, seeds, overflow
+# ---------------------------------------------------------------------------
+# Host-side chunking over tuples of parallel arrays
+# ---------------------------------------------------------------------------
+# Every streamed input is normalized to an iterator of *part tuples*:
+# (x,) for dense, (x_num, x_cat) for hetero, (sets, mask) for sparse.
+# Missing optional parts (e.g. no categorical columns) stay None in every
+# tuple. Pieces of unrelated sizes are re-cut AND coalesced to exactly
+# ``chunk`` rows, so a reader yielding tiny shards never causes tiny
+# padded device steps downstream.
+
+def _as_piece_stream(data, nparts: int):
+    """Normalize array / tuple-of-arrays / iterator input to an iterator
+    of part tuples of host arrays (None slots preserved)."""
+    def to_tuple(piece):
+        if nparts == 1 and not isinstance(piece, (tuple, list)):
+            piece = (piece,)
+        if not isinstance(piece, (tuple, list)) or len(piece) != nparts:
+            raise ValueError(f"expected {nparts}-part chunks, got "
+                             f"{type(piece).__name__}")
+        return tuple(None if p is None else np.asarray(p) for p in piece)
+
+    if nparts == 1 and hasattr(data, "shape") \
+            and getattr(data, "ndim", 0) == 2:
+        yield to_tuple(data)                      # one whole array
+    elif nparts > 1 and isinstance(data, (tuple, list)):
+        yield to_tuple(data)                      # whole arrays in one piece
+    else:
+        for piece in data:
+            yield to_tuple(piece)
 
 
-def _assign_chunk_body(model: GeekModel, xc: jax.Array, k_max: int):
-    """One streamed step: labels/dists for a chunk + its partial radius."""
-    labels, dists = predict(model, xc)
+def _cat_parts(bufs: list[tuple]) -> tuple:
+    """Concatenate a list of part tuples row-wise, slot by slot."""
+    out = []
+    for i in range(len(bufs[0])):
+        if bufs[0][i] is None:
+            out.append(None)
+            continue
+        ps = [t[i] for t in bufs]
+        out.append(np.concatenate(ps, axis=0) if len(ps) > 1
+                   else np.ascontiguousarray(ps[0]))
+    return tuple(out)
+
+
+def _rows(parts: tuple) -> int:
+    return next(p.shape[0] for p in parts if p is not None)
+
+
+def _iter_chunks(pieces, chunk: int):
+    """Yield part tuples of exactly ``chunk`` rows (final one ragged)."""
+    buf: list[tuple] = []
+    have = 0
+    first_slots = None
+    for parts in pieces:
+        slots = tuple(p is not None for p in parts)
+        if first_slots is None:
+            first_slots = slots
+        elif slots != first_slots:
+            raise ValueError("inconsistent None parts across chunks")
+        sizes = {p.shape[0] for p in parts if p is not None}
+        if not sizes:
+            raise ValueError("every part of a chunk is None")
+        if len(sizes) != 1:
+            raise ValueError(f"chunk parts disagree on rows: {sizes}")
+        for p in parts:
+            if p is not None and p.ndim != 2:
+                raise ValueError(f"chunks must be (m, d), got {p.shape}")
+        m, start = sizes.pop(), 0
+        while start < m:
+            take = min(chunk - have, m - start)
+            buf.append(tuple(None if p is None else p[start:start + take]
+                             for p in parts))
+            have += take
+            start += take
+            if have == chunk:
+                yield _cat_parts(buf)
+                buf, have = [], 0
+    if have:
+        yield _cat_parts(buf)
+
+
+def _stride_sample(chunks: list[tuple], n: int, seed_cap: int | None,
+                   whole: tuple | None):
+    """Reservoir for the discovery phase: stride-sampled part tuple plus
+    the dataset row of each reservoir row (None when 1:1). ``whole`` is
+    the original array input, reused at stride 1 to avoid a host copy."""
+    stride = 1 if seed_cap is None or seed_cap >= n else -(-n // seed_cap)
+    if stride == 1:
+        return (whole if whole is not None else _cat_parts(chunks)), None
+    bufs, idx_parts, off = [], [], 0
+    for parts in chunks:
+        m = _rows(parts)
+        first = (-off) % stride
+        bufs.append(tuple(None if p is None else p[first::stride]
+                          for p in parts))
+        idx_parts.append(np.arange(off + first, off + m, stride,
+                                   dtype=np.int32))
+        off += m
+    return _cat_parts(bufs), np.concatenate(idx_parts)
+
+
+# ---------------------------------------------------------------------------
+# Streamed one-pass assignment (shared by all three drivers)
+# ---------------------------------------------------------------------------
+
+def _assign_chunk_body(model: GeekModel, parts: tuple, k_max: int):
+    """One streamed step: transform + labels/dists for a chunk + its
+    partial radius. ``model.encode`` IS the fit-time coding (identity /
+    boundaries / keyed DOPH), so this is the chunked transformation."""
+    labels, dists = predict(model, model.encode(*parts))
     radius = assign_mod.cluster_radius(dists, labels, k_max)
     return labels, dists, radius
 
 
 @functools.lru_cache(maxsize=None)
 def _assign_chunk_fn(donate: bool):
-    """Jitted step with the chunk buffer donated — after the first step
-    the transfer reuses the previous chunk's device buffer instead of
+    """Jitted step with the chunk buffers donated — after the first step
+    the transfer reuses the previous chunk's device buffers instead of
     growing HBM. CPU cannot donate (XLA warns and ignores), so donation
     is requested only on accelerator backends."""
     return jax.jit(_assign_chunk_body, static_argnames=("k_max",),
                    donate_argnums=(1,) if donate else ())
 
 
-def _iter_chunks(data, chunk: int):
-    """Yield host chunks of exactly ``chunk`` rows (final one may be
-    ragged) — iterator pieces of unrelated sizes are re-cut AND coalesced,
-    so a reader yielding tiny shards never causes tiny padded device
-    steps downstream."""
-    if hasattr(data, "shape") and getattr(data, "ndim", 0) == 2:
-        pieces = (np.asarray(data),)
-    else:
-        pieces = (np.asarray(c) for c in data)
-    buf: list[np.ndarray] = []
-    have = 0
-    for c in pieces:
-        if c.ndim != 2:
-            raise ValueError(f"chunks must be (m, d), got {c.shape}")
-        while c.shape[0]:
-            take = min(chunk - have, c.shape[0])
-            buf.append(c[:take])
-            have += take
-            c = c[take:]
-            if have == chunk:
-                yield (np.concatenate(buf, axis=0) if len(buf) > 1
-                       else np.ascontiguousarray(buf[0]))
-                buf, have = [], 0
-    if have:
-        yield (np.concatenate(buf, axis=0) if len(buf) > 1
-               else np.ascontiguousarray(buf[0]))
+def _pad_rows(p: np.ndarray, to: int) -> np.ndarray:
+    """Sentinel rows: zeros (False for bool masks) — assignment of real
+    rows is row-independent, padded rows are sliced away on host."""
+    pad = np.zeros((to - p.shape[0], p.shape[1]), p.dtype)
+    return np.concatenate([p, pad], axis=0)
 
 
-def fit_dense_streaming(data, key: jax.Array, cfg: GeekConfig, *,
-                        chunk: int = 8192, seed_cap: int | None = None
-                        ) -> tuple[GeekResult, GeekModel]:
-    """Out-of-core ``fit_dense``. Returns (GeekResult, GeekModel) with
-    host-numpy labels/dists in the result.
-
-    chunk:    rows resident on device during the assignment pass.
-    seed_cap: max reservoir rows for the discovery phase (None = all rows,
-              which makes labels/centers bit-identical to ``fit_dense``).
-    """
-    if chunk < 1:
-        raise ValueError(f"chunk must be positive, got {chunk}")
-
-    # -- pass 0: collect host chunks + global stride sample ----------------
-    # array inputs: chunks are row-slice *views*, and a stride-1 reservoir
-    # reuses the array itself — no second host copy of the dataset
-    arr = (np.asarray(data)
-           if hasattr(data, "shape") and getattr(data, "ndim", 0) == 2
-           else None)
-    chunks = list(_iter_chunks(arr if arr is not None else data, chunk))
-    if not chunks:
-        raise ValueError("fit_dense_streaming: empty input")
-    n = sum(c.shape[0] for c in chunks)
-    d = chunks[0].shape[1]
-
-    stride = 1 if seed_cap is None or seed_cap >= n else -(-n // seed_cap)
-    sample_idx = None  # dataset row of each reservoir row (identity if 1:1)
-    if stride == 1:
-        if arr is not None:
-            sample = arr
-        else:
-            sample = (chunks[0] if len(chunks) == 1
-                      else np.concatenate(chunks, axis=0))
-    else:
-        parts, idx_parts, off = [], [], 0
-        for c in chunks:
-            first = (-off) % stride
-            parts.append(c[first::stride])
-            idx_parts.append(np.arange(off + first, off + c.shape[0], stride,
-                                       dtype=np.int32))
-            off += c.shape[0]
-        sample = np.concatenate(parts, axis=0)
-        sample_idx = np.concatenate(idx_parts)
-
-    # -- pass 1: discovery on the reservoir --------------------------------
-    model, seeds, overflow = _seed_from_reservoir(
-        jax.device_put(sample), key, cfg)
-    model = jax.block_until_ready(model)
+def _streamed_fit(chunks: list[tuple], n: int, cfg: GeekConfig, chunk: int,
+                  seed_model, seeds, overflow, sample_idx):
+    """Pass 2: stream chunks through transform + predict, assemble the
+    host-numpy GeekResult and the radius-finalized model."""
+    model = jax.block_until_ready(seed_model)
     if sample_idx is not None:
-        # keep the fit_dense contract: Seeds.id holds dataset row ids, not
+        # keep the fit_* contract: Seeds.id holds dataset row ids, not
         # positions inside the strided reservoir
         seeds = seeds._replace(id=jnp.asarray(sample_idx)[seeds.id])
 
-    # -- pass 2: streamed one-pass assignment ------------------------------
     labels = np.empty((n,), np.int32)
     dists = np.empty((n,), np.float32)
     radius = np.zeros((cfg.k_max,), np.float32)
     assign_chunk = _assign_chunk_fn(jax.default_backend() != "cpu")
     off = 0
-    for c in chunks:
-        m = c.shape[0]
+    for parts in chunks:
+        m = _rows(parts)
         if m < chunk:  # ragged tail: pad with masked sentinel rows
-            c = np.concatenate(
-                [c, np.zeros((chunk - m, d), c.dtype)], axis=0)
-        lab, dst, rad = assign_chunk(model, jax.device_put(c), cfg.k_max)
+            parts = tuple(None if p is None else _pad_rows(p, chunk)
+                          for p in parts)
+        dev = tuple(None if p is None else jax.device_put(p) for p in parts)
+        lab, dst, rad = assign_chunk(model, dev, cfg.k_max)
         lab, dst = np.asarray(lab)[:m], np.asarray(dst)[:m]
         if m < chunk:
             # recompute on host so sentinel rows contribute no radius
@@ -172,3 +225,151 @@ def fit_dense_streaming(data, key: jax.Array, cfg: GeekConfig, *,
                         np.asarray(overflow))
     model = dataclasses.replace(model, radius=jnp.asarray(radius))
     return result, model
+
+
+def _collect(data, nparts: int, chunk: int):
+    """Pass 0 shared prologue: host chunks + row count + the no-copy
+    ``whole`` tuple when the input was in-memory arrays."""
+    if chunk < 1:
+        raise ValueError(f"chunk must be positive, got {chunk}")
+    whole = None
+    if nparts == 1 and hasattr(data, "shape") \
+            and getattr(data, "ndim", 0) == 2:
+        whole = (np.asarray(data),)
+    elif nparts > 1 and isinstance(data, (tuple, list)):
+        whole = tuple(None if p is None else np.asarray(p) for p in data)
+    chunks = list(_iter_chunks(_as_piece_stream(data, nparts), chunk))
+    if not chunks:
+        raise ValueError("streaming fit: empty input")
+    return chunks, sum(_rows(c) for c in chunks), whole
+
+
+# ---------------------------------------------------------------------------
+# Dense (Algorithm 1, out of core)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _seed_dense_reservoir(sample: jax.Array, key: jax.Array, cfg: GeekConfig):
+    """Discovery on the reservoir — the same pipeline as fit_dense."""
+    seeds, overflow = discover_dense(sample, key, cfg)
+    _, _, model = _seed_dense(sample, seeds, cfg)
+    return model, seeds, overflow
+
+
+def fit_dense_streaming(data, key: jax.Array, cfg: GeekConfig, *,
+                        chunk: int = 8192, seed_cap: int | None = None
+                        ) -> tuple[GeekResult, GeekModel]:
+    """Out-of-core ``fit_dense``. Returns (GeekResult, GeekModel) with
+    host-numpy labels/dists in the result.
+
+    chunk:    rows resident on device during the assignment pass.
+    seed_cap: max reservoir rows for the discovery phase (None = all rows,
+              which makes labels/centers bit-identical to ``fit_dense``).
+    """
+    chunks, n, whole = _collect(data, 1, chunk)
+    sample, sample_idx = _stride_sample(chunks, n, seed_cap, whole)
+    model, seeds, overflow = _seed_dense_reservoir(
+        jax.device_put(sample[0]), key, cfg)
+    return _streamed_fit(chunks, n, cfg, chunk, model, seeds, overflow,
+                         sample_idx)
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous (Algorithm 2, out of core)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _seed_hetero_reservoir(x_num, x_cat, boundaries, key: jax.Array,
+                           cfg: GeekConfig):
+    """Discovery on the reservoir — the same pipeline as fit_hetero.
+    ``boundaries`` overrides the reservoir-fitted quantiles (the
+    ``boundaries="exact"`` two-pass option)."""
+    k_item, k_sig, k_silk = jax.random.split(key, 3)
+    if x_num is not None and x_num.shape[1] > 0:
+        disc = (NumericDiscretizer(jnp.asarray(boundaries))
+                if boundaries is not None
+                else NumericDiscretizer.fit(x_num, cfg.t_cat))
+    else:
+        disc = None
+    transform = HeteroTransform(disc)
+    codes = transform(x_num, x_cat)
+    seeds, overflow = discover_codes(codes, k_item, k_sig, k_silk, cfg)
+    model = _seed_codes(codes, seeds, cfg,
+                        bits=hetero_code_bits(cfg, x_cat),
+                        transform=transform)
+    return model, seeds, overflow
+
+
+def fit_hetero_streaming(data, key: jax.Array, cfg: GeekConfig, *,
+                         chunk: int = 8192, seed_cap: int | None = None,
+                         boundaries: str = "reservoir"
+                         ) -> tuple[GeekResult, GeekModel]:
+    """Out-of-core ``fit_hetero``: chunked MinHash transformation feeding
+    the reservoir discovery + donated-buffer assignment pass.
+
+    data:       ``(x_num, x_cat)`` arrays (either may be None) or an
+                iterator of such pairs of host chunks.
+    boundaries: "reservoir" fits the numeric quantile boundaries on the
+                discovery reservoir (one pass; exact when seed_cap=None);
+                "exact" makes a dedicated host pass over the numeric
+                columns first, so boundaries match the in-core fit even
+                when the reservoir is subsampled.
+
+    With ``seed_cap=None`` labels/dists/centers are bit-identical to
+    ``fit_hetero`` for any chunk size (transform and assignment are both
+    row-independent).
+    """
+    if boundaries not in ("reservoir", "exact"):
+        raise ValueError(f"boundaries must be 'reservoir' or 'exact', "
+                         f"got {boundaries!r}")
+    chunks, n, whole = _collect(data, 2, chunk)
+    sample, sample_idx = _stride_sample(chunks, n, seed_cap, whole)
+
+    bounds = None
+    if boundaries == "exact" and chunks[0][0] is not None:
+        # second pass over the numeric columns only, on host — mirrors
+        # NumericDiscretizer.fit (same sorted values -> same boundaries)
+        num = (whole[0] if whole is not None
+               else np.concatenate([c[0] for c in chunks], axis=0))
+        bounds = quantile_boundaries(np.sort(num, axis=0), cfg.t_cat)
+
+    dev = lambda p: None if p is None else jax.device_put(p)
+    model, seeds, overflow = _seed_hetero_reservoir(
+        dev(sample[0]), dev(sample[1]), bounds, key, cfg)
+    return _streamed_fit(chunks, n, cfg, chunk, model, seeds, overflow,
+                         sample_idx)
+
+
+# ---------------------------------------------------------------------------
+# Sparse (Algorithm 3, out of core)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _seed_sparse_reservoir(sets, mask, key: jax.Array, cfg: GeekConfig):
+    """Discovery on the reservoir — the same pipeline as fit_sparse."""
+    _, k_item, k_sig, k_silk = jax.random.split(key, 4)
+    transform = make_sparse_transform(key, cfg)
+    codes = transform(sets, mask)
+    seeds, overflow = discover_codes(codes, k_item, k_sig, k_silk, cfg)
+    model = _seed_codes(codes, seeds, cfg, bits=16, transform=transform)
+    return model, seeds, overflow
+
+
+def fit_sparse_streaming(data, key: jax.Array, cfg: GeekConfig, *,
+                         chunk: int = 8192, seed_cap: int | None = None
+                         ) -> tuple[GeekResult, GeekModel]:
+    """Out-of-core ``fit_sparse``: chunked DOPH transformation feeding
+    the reservoir discovery + donated-buffer assignment pass.
+
+    data: ``(sets, mask)`` arrays or an iterator of such pairs. With
+    ``seed_cap=None`` labels/dists/centers are bit-identical to
+    ``fit_sparse`` for any chunk size (DOPH is per-row).
+    """
+    chunks, n, whole = _collect(data, 2, chunk)
+    if chunks[0][0] is None or chunks[0][1] is None:
+        raise ValueError("fit_sparse_streaming needs both sets and mask")
+    sample, sample_idx = _stride_sample(chunks, n, seed_cap, whole)
+    model, seeds, overflow = _seed_sparse_reservoir(
+        jax.device_put(sample[0]), jax.device_put(sample[1]), key, cfg)
+    return _streamed_fit(chunks, n, cfg, chunk, model, seeds, overflow,
+                         sample_idx)

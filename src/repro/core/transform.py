@@ -1,0 +1,160 @@
+"""Transform protocol — the persistent fit-time data transformation.
+
+GEEK's generic pipeline (paper §3.1) starts by mapping every data type
+into a space its one-pass assignment understands: dense vectors stay
+dense, heterogeneous rows become unified categorical codes, sparse sets
+become 16-bit DOPH codes. PR 2 persisted the *assignment* half of a fit
+in ``GeekModel``; this module persists the *transformation* half, so
+streamed fits and predict-time traffic are coded by the very same object
+the fit used (DESIGN.md §9):
+
+  - ``IdentityTransform``  — dense L2 (``encode(x) == x``)
+  - ``HeteroTransform``    — persisted ``NumericDiscretizer`` quantile
+                             boundaries ++ raw categorical columns
+  - ``SparseTransform``    — DOPH with the *fit-time* hash key
+
+Every transform is a registered pytree (arrays as children, static
+params as aux), so it rides inside ``GeekModel`` through ``jax.jit``,
+``device_put``, and the checkpoint manager. Coding is row-independent
+for all three, which is what makes chunked/streamed coding bit-identical
+to in-core coding — structurally, per transform, not per call site.
+
+``transform_meta`` / ``transform_arrays`` / ``transform_from`` are the
+checkpoint (de)serialization hooks used by ``checkpoint.manager``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lsh
+from repro.core.model import NumericDiscretizer
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class IdentityTransform:
+    """Dense data is already in assignment space."""
+    kind = "identity"
+
+    def tree_flatten(self):
+        return (), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux, children
+        return cls()
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        return x
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class HeteroTransform:
+    """Unified categorical codes: discretized numeric ++ raw categorical.
+
+    ``discretizer`` holds the fit-time quantile boundaries (None when the
+    data has no numeric columns). Coding new traffic with this object is
+    *exact* — the boundaries never depend on the batch being coded.
+    """
+    discretizer: NumericDiscretizer | None
+    kind = "hetero"
+
+    def tree_flatten(self):
+        return (self.discretizer,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    def __call__(self, x_num: jax.Array | None,
+                 x_cat: jax.Array | None) -> jax.Array:
+        parts = []
+        if self.discretizer is not None:
+            if x_num is None:
+                raise ValueError("model was fitted with numeric columns; "
+                                 "x_num is required")
+            parts.append(self.discretizer(x_num))
+        elif x_num is not None and x_num.shape[1] > 0:
+            raise ValueError("model was fitted without numeric columns but "
+                             "x_num has some — refusing to drop them")
+        if x_cat is not None and x_cat.shape[1] > 0:
+            parts.append(x_cat.astype(jnp.int32))
+        if not parts:
+            raise ValueError("hetero transform got no columns")
+        return jnp.concatenate(parts, axis=1)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SparseTransform:
+    """16-bit truncated DOPH codes under the fit-time hash key.
+
+    Persisting ``doph_key`` in the model is what lets a serving process
+    code new sparse traffic after a checkpoint restore without the
+    original fit key.
+    """
+    doph_key: jax.Array      # PRNG key (raw uint32 (2,) or typed)
+    doph_m: int = 64         # static: DOPH output dimensionality
+
+    kind = "sparse"
+
+    def tree_flatten(self):
+        return (self.doph_key,), (self.doph_m,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    def __call__(self, sets: jax.Array, mask: jax.Array) -> jax.Array:
+        codes = lsh.doph_codes(sets, mask, self.doph_key, self.doph_m)
+        return (codes >> jnp.uint32(16)).astype(jnp.int32)  # 16-bit codes
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint (de)serialization — used by checkpoint.manager
+# ---------------------------------------------------------------------------
+
+def _is_typed_key(k) -> bool:
+    return jnp.issubdtype(getattr(k, "dtype", None), jax.dtypes.prng_key)
+
+
+def transform_meta(t) -> dict:
+    """JSON-serializable static half of a transform."""
+    meta = {"kind": t.kind}
+    if isinstance(t, SparseTransform):
+        meta["doph_m"] = t.doph_m
+        meta["typed_key"] = _is_typed_key(t.doph_key)
+    return meta
+
+
+def transform_arrays(t) -> dict:
+    """Array half of a transform, by stable name (checkpoint leaves)."""
+    if isinstance(t, HeteroTransform) and t.discretizer is not None:
+        return {"boundaries": t.discretizer.boundaries}
+    if isinstance(t, SparseTransform):
+        key = t.doph_key
+        return {"doph_key": jax.random.key_data(key)
+                if _is_typed_key(key) else key}
+    return {}
+
+
+def transform_from(meta: dict, arrays: dict):
+    """Rebuild a transform from its meta + arrays (checkpoint restore)."""
+    kind = meta["kind"]
+    if kind == "identity":
+        return IdentityTransform()
+    if kind == "hetero":
+        b = arrays.get("boundaries")
+        return HeteroTransform(None if b is None
+                               else NumericDiscretizer(jnp.asarray(b)))
+    if kind == "sparse":
+        key = jnp.asarray(arrays["doph_key"])
+        if meta.get("typed_key"):
+            key = jax.random.wrap_key_data(key)
+        return SparseTransform(key, int(meta["doph_m"]))
+    raise ValueError(f"unknown transform kind {kind!r}")

@@ -7,6 +7,8 @@ lowers). `--compare` adds the paper's baselines.
 
   PYTHONPATH=src python -m repro.launch.cluster --dataset sift --n 20000 \
       --k 64 --compare
+  PYTHONPATH=src python -m repro.launch.cluster --dataset url --n 100000 \
+      --streaming --chunk 8192 --seed-cap 20000   # out-of-core, any type
 """
 from __future__ import annotations
 
@@ -23,6 +25,8 @@ from repro.core import baselines
 from repro.core.distributed import make_fit_dense
 from repro.core.geek import (GeekConfig, fit_dense, fit_hetero, fit_sparse,
                              hetero_codes)
+from repro.core.streaming import (fit_dense_streaming, fit_hetero_streaming,
+                                  fit_sparse_streaming)
 from repro.data import synthetic
 
 
@@ -45,12 +49,22 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--distributed", action="store_true",
                     help="shard_map over all local devices")
+    ap.add_argument("--streaming", action="store_true",
+                    help="out-of-core fit: device memory bounded by --chunk")
+    ap.add_argument("--chunk", type=int, default=8192,
+                    help="rows on device per streamed assignment step")
+    ap.add_argument("--seed-cap", type=int, default=None,
+                    help="max reservoir rows for streamed discovery "
+                         "(default: all rows -> bit-identical to in-core)")
     ap.add_argument("--compare", action="store_true")
     args = ap.parse_args()
+    if args.streaming and args.distributed:
+        raise SystemExit("--streaming and --distributed are exclusive")
 
     key = jax.random.PRNGKey(args.seed)
     cfg = GeekConfig(m=args.m, t=args.t, silk_l=args.silk_l, delta=args.delta,
                      k_max=args.k_max, pair_cap=1 << 16)
+    stream_kw = dict(chunk=args.chunk, seed_cap=args.seed_cap)
 
     if args.dataset in ("sift", "gist"):
         gen = synthetic.sift_like if args.dataset == "sift" else synthetic.gist_like
@@ -69,10 +83,16 @@ def main() -> None:
                   f"time={dt:.2f}s overflow={int(ovf)}")
             return
         t0 = time.time()
-        res, _ = fit_dense(data.x, jax.random.PRNGKey(1), cfg)
+        if args.streaming:
+            res, _ = fit_dense_streaming(np.asarray(data.x),
+                                         jax.random.PRNGKey(1), cfg,
+                                         **stream_kw)
+        else:
+            res, _ = fit_dense(data.x, jax.random.PRNGKey(1), cfg)
         jax.block_until_ready(res.labels)
         dt = time.time() - t0
-        print(f"[geek] n={args.n} k*={int(res.k_star)} "
+        tag = "geek/stream" if args.streaming else "geek"
+        print(f"[{tag}] n={args.n} k*={int(res.k_star)} "
               f"mean_radius={mean_radius(res.radius, res.center_valid):.4f} "
               f"time={dt:.2f}s")
         if args.compare:
@@ -96,9 +116,16 @@ def main() -> None:
     elif args.dataset == "geonames":
         data = synthetic.geonames_like(key, n=args.n, k=args.k)
         t0 = time.time()
-        res, _ = fit_hetero(data.x_num, data.x_cat, jax.random.PRNGKey(1), cfg)
+        if args.streaming:
+            res, _ = fit_hetero_streaming(
+                (np.asarray(data.x_num), np.asarray(data.x_cat)),
+                jax.random.PRNGKey(1), cfg, **stream_kw)
+        else:
+            res, _ = fit_hetero(data.x_num, data.x_cat,
+                                jax.random.PRNGKey(1), cfg)
         jax.block_until_ready(res.labels)
-        print(f"[geek/hetero] n={args.n} k*={int(res.k_star)} "
+        tag = "geek/hetero/stream" if args.streaming else "geek/hetero"
+        print(f"[{tag}] n={args.n} k*={int(res.k_star)} "
               f"mean_radius={mean_radius(res.radius, res.center_valid):.4f} "
               f"time={time.time()-t0:.2f}s")
         if args.compare:
@@ -112,9 +139,16 @@ def main() -> None:
     else:  # url (sparse)
         data = synthetic.url_like(key, n=args.n, k=args.k)
         t0 = time.time()
-        res, _ = fit_sparse(data.sets, data.mask, jax.random.PRNGKey(1), cfg)
+        if args.streaming:
+            res, _ = fit_sparse_streaming(
+                (np.asarray(data.sets), np.asarray(data.mask)),
+                jax.random.PRNGKey(1), cfg, **stream_kw)
+        else:
+            res, _ = fit_sparse(data.sets, data.mask,
+                                jax.random.PRNGKey(1), cfg)
         jax.block_until_ready(res.labels)
-        print(f"[geek/sparse] n={args.n} k*={int(res.k_star)} "
+        tag = "geek/sparse/stream" if args.streaming else "geek/sparse"
+        print(f"[{tag}] n={args.n} k*={int(res.k_star)} "
               f"mean_radius={mean_radius(res.radius, res.center_valid):.4f} "
               f"time={time.time()-t0:.2f}s")
 

@@ -3,13 +3,16 @@
 The ROADMAP's "heavy traffic" scenario: SILK discovery runs once
 (offline), the fitted GeekModel is checkpointed, and a serving process
 restores it and answers streams of assignment batches with the one-pass
-kernels only. This driver exercises that loop end to end on synthetic
-traffic — fit (or restore), optionally save, then serve batches and
-report steady-state points/sec.
+kernels only. Traffic arrives *raw* (floats / numeric+categorical rows /
+sparse sets) and is coded by the model's persisted fit-time transform
+(quantile boundaries, DOPH key) — hetero/sparse serving is exact, not
+batch-approximate. This driver exercises that loop end to end on
+synthetic traffic — fit (or restore), optionally save, then serve
+batches and report steady-state points/sec.
 
-  PYTHONPATH=src python -m repro.launch.serve_cluster --metric l2 \
+  PYTHONPATH=src python -m repro.launch.serve_cluster --data dense \
       --n-fit 16384 --batch 4096 --steps 20
-  PYTHONPATH=src python -m repro.launch.serve_cluster --metric hamming \
+  PYTHONPATH=src python -m repro.launch.serve_cluster --data hetero \
       --ckpt /tmp/geek_model --save   # second run restores, skips the fit
 """
 from __future__ import annotations
@@ -21,35 +24,56 @@ import jax
 import numpy as np
 
 from repro.checkpoint.manager import restore_model, save_model
-from repro.core.geek import GeekConfig, fit_dense, fit_hetero, hetero_codes
+from repro.core.geek import GeekConfig, fit_dense, fit_hetero, fit_sparse
 from repro.core.model import predict
 from repro.data import synthetic
+
+#: expected transform kind per data type — a restored checkpoint fitted on
+#: a different type must be refused, not served garbage
+_KIND = {"dense": "identity", "hetero": "hetero", "sparse": "sparse"}
+
+
+@jax.jit
+def _serve(model, *parts):
+    """One serving step: fit-time coding + one-pass assignment, jitted
+    as a single program (the transform rides inside the model pytree)."""
+    return predict(model, model.encode(*parts))
 
 
 def _fit(args, cfg):
     key = jax.random.PRNGKey(args.seed)
-    if args.metric == "l2":
-        data = synthetic.sift_like(key, n=args.n_fit, k=args.k)
-        _, model = fit_dense(data.x, jax.random.PRNGKey(1), cfg)
+    fkey = jax.random.PRNGKey(1)
+    if args.data == "dense":
+        d = synthetic.sift_like(key, n=args.n_fit, k=args.k)
+        _, model = fit_dense(d.x, fkey, cfg)
+    elif args.data == "hetero":
+        h = synthetic.geonames_like(key, n=args.n_fit, k=args.k)
+        _, model = fit_hetero(h.x_num, h.x_cat, fkey, cfg)
     else:
-        data = synthetic.geonames_like(key, n=args.n_fit, k=args.k)
-        _, model = fit_hetero(data.x_num, data.x_cat, jax.random.PRNGKey(1),
-                              cfg)
+        s = synthetic.url_like(key, n=args.n_fit, k=args.k)
+        _, model = fit_sparse(s.sets, s.mask, fkey, cfg)
     return jax.block_until_ready(model)
 
 
-def _traffic(args, cfg, step: int):
-    """A fresh batch of query points (new synthetic draws each step)."""
+def _traffic(args, step: int) -> tuple:
+    """A fresh batch of RAW query parts (new synthetic draws each step) —
+    the model's transform does the coding, exactly as at fit time."""
     key = jax.random.PRNGKey(1000 + step)
-    if args.metric == "l2":
-        return synthetic.sift_like(key, n=args.batch, k=args.k).x
-    h = synthetic.geonames_like(key, n=args.batch, k=args.k)
-    return hetero_codes(h.x_num, h.x_cat, cfg.t_cat)
+    if args.data == "dense":
+        return (synthetic.sift_like(key, n=args.batch, k=args.k).x,)
+    if args.data == "hetero":
+        h = synthetic.geonames_like(key, n=args.batch, k=args.k)
+        return (h.x_num, h.x_cat)
+    s = synthetic.url_like(key, n=args.batch, k=args.k)
+    return (s.sets, s.mask)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--metric", default="l2", choices=["l2", "hamming"])
+    ap.add_argument("--data", default=None,
+                    choices=["dense", "hetero", "sparse"])
+    ap.add_argument("--metric", default=None, choices=["l2", "hamming"],
+                    help="deprecated alias: l2 -> dense, hamming -> hetero")
     ap.add_argument("--n-fit", type=int, default=16384)
     ap.add_argument("--k", type=int, default=64, help="true #clusters")
     ap.add_argument("--k-max", type=int, default=256)
@@ -62,6 +86,13 @@ def main() -> None:
                     help="save the fitted model to --ckpt")
     ap.add_argument("--smoke", action="store_true")
     args = ap.parse_args()
+    if args.metric is not None:
+        if args.data is not None:
+            raise SystemExit("[serve] pass --data OR the deprecated "
+                             "--metric alias, not both")
+        args.data = "dense" if args.metric == "l2" else "hetero"
+    elif args.data is None:
+        args.data = "dense"
     if args.smoke:
         args.n_fit, args.batch, args.steps = 2048, 512, 5
 
@@ -72,14 +103,15 @@ def main() -> None:
     if args.ckpt:
         try:
             model = restore_model(args.ckpt)
-            if model.metric != args.metric:
+            kind = getattr(model.transform, "kind", None)
+            if kind != _KIND[args.data]:
                 raise SystemExit(
-                    f"[serve] checkpoint at {args.ckpt} was fitted with "
-                    f"metric={model.metric!r}, but --metric is "
-                    f"{args.metric!r} — refusing to serve mismatched "
-                    "traffic")
+                    f"[serve] checkpoint at {args.ckpt} holds a "
+                    f"{kind or 'pre-transform'} model, but --data is "
+                    f"{args.data!r} — refusing to serve mismatched traffic")
             print(f"[serve] restored model from {args.ckpt} "
-                  f"(k*={int(model.k_star)}, metric={model.metric})")
+                  f"(k*={int(model.k_star)}, metric={model.metric}, "
+                  f"transform={kind})")
         except (FileNotFoundError, ValueError) as e:
             print(f"[serve] no usable model at {args.ckpt} ({e}); fitting")
     if model is None:
@@ -92,21 +124,21 @@ def main() -> None:
             print(f"[serve] saved model to {args.ckpt}")
 
     # -- serving loop ------------------------------------------------------
-    warm = _traffic(args, cfg, -1)
-    jax.block_until_ready(predict(model, warm))            # compile
+    warm = _traffic(args, -1)
+    jax.block_until_ready(_serve(model, *warm))            # compile
     total, t_serve = 0, 0.0
     occupancy = np.zeros((model.k_max,), np.int64)
     for step in range(args.steps):
-        batch = jax.device_put(_traffic(args, cfg, step))
+        batch = tuple(jax.device_put(p) for p in _traffic(args, step))
         t0 = time.time()
-        labels, dists = jax.block_until_ready(predict(model, batch))
+        labels, dists = jax.block_until_ready(_serve(model, *batch))
         t_serve += time.time() - t0
-        total += batch.shape[0]
+        total += labels.shape[0]
         occupancy += np.bincount(np.asarray(labels), minlength=model.k_max)
     pps = total / max(t_serve, 1e-9)
     hot = int(occupancy.argmax())
     print(f"[serve] {args.steps} batches x {args.batch}: "
-          f"{pps:,.0f} points/s (assignment only), "
+          f"{pps:,.0f} points/s (coding + assignment), "
           f"hottest cluster {hot} got {int(occupancy[hot])} points")
 
 

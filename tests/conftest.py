@@ -7,7 +7,16 @@ When it is missing we install a stub into sys.modules before the test
 modules import it, so collection succeeds: @given tests become zero-arg
 tests that skip with a pointer to requirements-dev.txt, and every other
 test in those modules still runs.
+
+When hypothesis IS present, two settings profiles are registered (the
+property tests themselves never pin max_examples, so the profile is in
+charge):
+  - "dev" (default): few examples, no deadline — fast local iteration.
+  - "ci": more examples, derandomized (fixed seed) so CI runs are
+    reproducible and actually exercise the properties. Selected via
+    HYPOTHESIS_PROFILE=ci (set by .github/workflows/ci.yml).
 """
+import os
 import sys
 import types
 
@@ -15,7 +24,14 @@ import jax
 import pytest
 
 try:
-    import hypothesis  # noqa: F401
+    import hypothesis
+    hypothesis.settings.register_profile(
+        "dev", deadline=None, max_examples=10)
+    hypothesis.settings.register_profile(
+        "ci", deadline=None, max_examples=50, derandomize=True,
+        print_blob=True)
+    hypothesis.settings.load_profile(
+        os.environ.get("HYPOTHESIS_PROFILE", "dev"))
 except ImportError:
     def _skip_given(*_strategies, **_kw):
         def deco(fn):

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from hypothesis import given
 from hypothesis import strategies as st
 
 from repro.checkpoint.manager import restore_model, save_model
@@ -75,7 +75,6 @@ def test_predict_reproduces_fit_labels_all_hamming_impls(impl):
 
 
 @given(st.sampled_from(ENTRY_POINTS), st.integers(0, 2 ** 31 - 1))
-@settings(max_examples=12, deadline=None)
 def test_predict_permutation_equivariant(entry, seed):
     """predict(model, x[perm]) == predict(model, x)[perm]: row order
     (hence batch composition) never leaks into a row's assignment."""

@@ -1,10 +1,13 @@
-"""Out-of-core streaming fit: streamed labels ≡ in-core labels (DESIGN.md §9).
+"""Out-of-core streaming fits: streamed labels ≡ in-core labels
+(DESIGN.md §9), for every data type.
 
-The streaming driver's contract is exact, not approximate: per-row
-assignment is independent of batch composition, so chunking (any chunk
-size, ragged tails included) must not change a single label bit. The
-property tests drive arbitrary n/chunk combinations; the fixed test pins
-the acceptance shape (n=65536, d=64, divisible and non-divisible chunks).
+The streaming drivers' contract is exact, not approximate: the fit-time
+transform (identity / quantile boundaries / keyed DOPH) and the per-row
+assignment are both independent of batch composition, so chunking (any
+chunk size, ragged tails included) must not change a single label bit.
+The property tests drive arbitrary n/chunk combinations; the fixed tests
+pin ≥2 chunk sizes per type (ragged tails included) and the dense
+acceptance shape (n=65536, d=64).
 """
 import dataclasses
 
@@ -12,16 +15,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from hypothesis import given
 from hypothesis import strategies as st
 
-from repro.core.geek import GeekConfig, fit_dense
+from repro.core.geek import GeekConfig, fit_dense, fit_hetero, fit_sparse
 from repro.core.model import build_model, predict
-from repro.core.streaming import fit_dense_streaming
-from repro.data.synthetic import dense_blobs
+from repro.core.streaming import (fit_dense_streaming, fit_hetero_streaming,
+                                  fit_sparse_streaming)
+from repro.data.synthetic import dense_blobs, geonames_like, url_like
 
 CFG = GeekConfig(m=8, t=16, silk_l=3, delta=3, k_max=32, pair_cap=4096,
-                 assign_block=128)
+                 assign_block=128, bucket_k=2, bucket_l=8, t_cat=8,
+                 doph_m=32)
 
 
 def _assert_stream_matches(n, chunk, d=12):
@@ -39,7 +44,6 @@ def _assert_stream_matches(n, chunk, d=12):
 
 
 @given(st.integers(33, 400), st.integers(1, 450))
-@settings(max_examples=8, deadline=None)
 def test_streamed_fit_matches_incore_property(n, chunk):
     """Any n/chunk combination — chunk smaller, larger, or non-divisible
     relative to n — yields bit-identical labels, dists, and radii."""
@@ -107,6 +111,152 @@ def test_streamed_fit_rejects_empty_and_bad_chunks():
 
 
 # ---------------------------------------------------------------------------
+# Streamed hetero / sparse ≡ in-core (ISSUE 3): the chunked MinHash/DOPH
+# transformation + reservoir discovery reproduce fit_hetero / fit_sparse
+# bit-for-bit when the reservoir covers all points.
+# ---------------------------------------------------------------------------
+
+def _assert_hetero_stream_matches(n, chunk, *, boundaries="reservoir",
+                                  drop_cat=False):
+    h = geonames_like(jax.random.PRNGKey(n * 13 + chunk), n=n, k=4)
+    x_num = np.asarray(h.x_num)
+    x_cat = None if drop_cat else np.asarray(h.x_cat)
+    res, model = fit_hetero(h.x_num, None if drop_cat else h.x_cat,
+                            jax.random.PRNGKey(1), CFG)
+    sres, smodel = fit_hetero_streaming((x_num, x_cat), jax.random.PRNGKey(1),
+                                        CFG, chunk=chunk,
+                                        boundaries=boundaries)
+    np.testing.assert_array_equal(sres.labels, np.array(res.labels))
+    np.testing.assert_array_equal(sres.dists, np.array(res.dists))
+    np.testing.assert_array_equal(sres.radius, np.array(res.radius))
+    np.testing.assert_array_equal(np.array(smodel.centers),
+                                  np.array(model.centers))
+    np.testing.assert_array_equal(
+        np.array(smodel.transform.discretizer.boundaries),
+        np.array(model.transform.discretizer.boundaries))
+    assert int(sres.k_star) == int(res.k_star)
+
+
+def _assert_sparse_stream_matches(n, chunk):
+    s = url_like(jax.random.PRNGKey(n * 17 + chunk), n=n, k=4)
+    res, model = fit_sparse(s.sets, s.mask, jax.random.PRNGKey(1), CFG)
+    sres, smodel = fit_sparse_streaming(
+        (np.asarray(s.sets), np.asarray(s.mask)), jax.random.PRNGKey(1),
+        CFG, chunk=chunk)
+    np.testing.assert_array_equal(sres.labels, np.array(res.labels))
+    np.testing.assert_array_equal(sres.dists, np.array(res.dists))
+    np.testing.assert_array_equal(sres.radius, np.array(res.radius))
+    np.testing.assert_array_equal(np.array(smodel.centers),
+                                  np.array(model.centers))
+    assert int(sres.k_star) == int(res.k_star)
+
+
+@given(st.integers(33, 250), st.integers(1, 300))
+def test_streamed_hetero_matches_incore_property(n, chunk):
+    """Any n/chunk combination yields bit-identical hetero labels, dists,
+    radii, centers, and discretizer boundaries."""
+    _assert_hetero_stream_matches(n, chunk)
+
+
+@given(st.integers(33, 250), st.integers(1, 300))
+def test_streamed_sparse_matches_incore_property(n, chunk):
+    """Any n/chunk combination yields bit-identical sparse labels — the
+    per-chunk DOPH coding under the fit key is row-independent."""
+    _assert_sparse_stream_matches(n, chunk)
+
+
+@pytest.mark.parametrize("n,chunk", [(256, 64), (300, 77)])
+def test_streamed_hetero_matches_incore_fixed(n, chunk):
+    """ISSUE 3 acceptance: ≥2 chunk sizes incl. a ragged tail."""
+    _assert_hetero_stream_matches(n, chunk)
+
+
+@pytest.mark.parametrize("n,chunk", [(256, 64), (300, 77)])
+def test_streamed_sparse_matches_incore_fixed(n, chunk):
+    _assert_sparse_stream_matches(n, chunk)
+
+
+def test_streamed_hetero_exact_boundaries_and_variants():
+    """boundaries="exact" (two-pass) matches in-core too, as do the
+    numeric-only and categorical-only column layouts."""
+    _assert_hetero_stream_matches(300, 77, boundaries="exact")
+    _assert_hetero_stream_matches(256, 60, drop_cat=True)
+    h = geonames_like(jax.random.PRNGKey(7), n=256, k=4)
+    res, _ = fit_hetero(None, h.x_cat, jax.random.PRNGKey(1), CFG)
+    sres, _ = fit_hetero_streaming((None, np.asarray(h.x_cat)),
+                                   jax.random.PRNGKey(1), CFG, chunk=100)
+    np.testing.assert_array_equal(sres.labels, np.array(res.labels))
+
+
+def test_streamed_hetero_exact_boundaries_survive_seed_cap():
+    """With a subsampled reservoir, boundaries="exact" still fits the
+    discretizer on the FULL numeric columns: the persisted boundaries are
+    identical to the in-core fit's even though the seeds are not."""
+    h = geonames_like(jax.random.PRNGKey(5), n=600, k=4)
+    _, model = fit_hetero(h.x_num, h.x_cat, jax.random.PRNGKey(1), CFG)
+    _, smodel = fit_hetero_streaming(
+        (np.asarray(h.x_num), np.asarray(h.x_cat)), jax.random.PRNGKey(1),
+        CFG, chunk=128, seed_cap=150, boundaries="exact")
+    np.testing.assert_array_equal(
+        np.array(smodel.transform.discretizer.boundaries),
+        np.array(model.transform.discretizer.boundaries))
+    # reservoir mode under the same seed_cap estimates from the sample
+    _, rmodel = fit_hetero_streaming(
+        (np.asarray(h.x_num), np.asarray(h.x_cat)), jax.random.PRNGKey(1),
+        CFG, chunk=128, seed_cap=150, boundaries="reservoir")
+    assert rmodel.transform.discretizer.boundaries.shape == \
+        model.transform.discretizer.boundaries.shape
+
+
+def test_streamed_hetero_iterator_input():
+    h = geonames_like(jax.random.PRNGKey(3), n=500, k=4)
+    xn, xc = np.asarray(h.x_num), np.asarray(h.x_cat)
+    res, _ = fit_hetero(h.x_num, h.x_cat, jax.random.PRNGKey(1), CFG)
+
+    def gen():
+        for i in range(0, 500, 170):
+            yield (xn[i:i + 170], xc[i:i + 170])
+
+    sres, _ = fit_hetero_streaming(gen(), jax.random.PRNGKey(1), CFG,
+                                   chunk=96)
+    np.testing.assert_array_equal(sres.labels, np.array(res.labels))
+
+
+def test_streamed_sparse_seed_cap_reservoir():
+    """seed_cap caps sparse discovery at a strided reservoir; Seeds.id
+    keeps dataset row ids and every label is nearest-center in code
+    space (one-pass property)."""
+    s = url_like(jax.random.PRNGKey(5), n=400, k=4)
+    sres, model = fit_sparse_streaming(
+        (np.asarray(s.sets), np.asarray(s.mask)), jax.random.PRNGKey(1),
+        CFG, chunk=128, seed_cap=100)
+    assert sres.labels.shape == (400,)
+    ids, val = np.array(sres.seeds.id), np.array(sres.seeds.valid)
+    assert (ids[val] % 4 == 0).all()          # stride is 400/100 = 4
+    codes = np.array(model.encode(s.sets, s.mask))
+    cents = np.array(model.centers)
+    dist = (codes[:, None, :] != cents[None, :, :]).sum(-1)
+    dist[:, ~np.array(model.center_valid)] = codes.shape[1] + 1
+    np.testing.assert_array_equal(sres.labels, dist.argmin(1))
+
+
+def test_streamed_rejects_bad_tuple_inputs():
+    with pytest.raises(ValueError):
+        fit_sparse_streaming((np.zeros((8, 4), np.int32), None),
+                             jax.random.PRNGKey(0), CFG, chunk=4)
+    with pytest.raises(ValueError):
+        fit_hetero_streaming(iter([]), jax.random.PRNGKey(0), CFG, chunk=4)
+    with pytest.raises(ValueError):  # parts disagree on rows
+        fit_hetero_streaming(
+            (np.zeros((8, 2), np.float32), np.zeros((7, 2), np.int32)),
+            jax.random.PRNGKey(0), CFG, chunk=4)
+    with pytest.raises(ValueError):  # unknown boundaries mode
+        fit_hetero_streaming((np.zeros((8, 2), np.float32), None),
+                             jax.random.PRNGKey(0), CFG, chunk=4,
+                             boundaries="nope")
+
+
+# ---------------------------------------------------------------------------
 # Chunked predict ≡ full-batch predict, all metric paths
 # ---------------------------------------------------------------------------
 
@@ -131,7 +281,6 @@ def _model_and_queries(impl, n, seed=0, d=16, k=8, card=16):
 
 @given(st.sampled_from(["l2", "equality", "packed", "onehot"]),
        st.integers(1, 300), st.integers(1, 128))
-@settings(max_examples=20, deadline=None)
 def test_chunked_predict_matches_full_property(impl, n, chunk):
     """Serving in chunks (the streaming assignment pass) is bit-identical
     to one full-batch predict on every metric path, including ragged

@@ -1,0 +1,231 @@
+"""Persisted fit-time transforms: exact multi-type serving (DESIGN.md §9).
+
+The transform pipeline's contract: (1) fit-time hetero codes under
+quantile boundaries reproduce the legacy within-batch rank partition
+bit-for-bit on tie-free data; (2) coding *new* traffic uses the
+persisted boundaries / DOPH key, so predict is exact — the same row gets
+the same code no matter which batch it arrives in; (3) the whole
+transform survives a checkpoint round-trip unchanged.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from repro.checkpoint.manager import (CheckpointManager, restore_model,
+                                      save_model)
+from repro.core.geek import (GeekConfig, fit_hetero, fit_sparse,
+                             hetero_code_bits, hetero_codes)
+from repro.core.model import NumericDiscretizer, predict
+from repro.core.transform import (HeteroTransform, IdentityTransform,
+                                  SparseTransform, transform_arrays,
+                                  transform_from, transform_meta)
+from repro.data import synthetic
+
+CFG = GeekConfig(m=8, t=16, silk_l=3, delta=3, k_max=32, pair_cap=4096,
+                 t_cat=8, bucket_k=2, bucket_l=8, doph_m=32)
+
+
+def _rank_codes(x, t_cat):
+    """The legacy within-batch rank partition (pre-boundary oracle)."""
+    n = x.shape[0]
+    ranks = jnp.argsort(jnp.argsort(x, axis=0), axis=0)
+    return np.array((ranks * t_cat // n).astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# NumericDiscretizer: boundary codes ≡ rank codes on the fit batch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,t_cat", [(1, 8), (3, 8), (7, 16), (100, 8),
+                                     (999, 16), (50, 37)])
+def test_discretizer_matches_rank_partition(n, t_cat):
+    """Boundaries from the full batch reproduce the rank partition
+    exactly (including n < t_cat, where tail bins are empty)."""
+    x = jnp.asarray(np.random.default_rng(n * t_cat)
+                    .normal(size=(n, 5)).astype(np.float32))
+    disc = NumericDiscretizer.fit(x, t_cat)
+    np.testing.assert_array_equal(np.array(disc(x)), _rank_codes(x, t_cat))
+    assert disc.t_cat == t_cat and disc.d_num == 5
+
+
+@given(st.integers(1, 400), st.sampled_from([2, 8, 16, 37]),
+       st.integers(0, 2 ** 31 - 1))
+def test_discretizer_matches_rank_partition_property(n, t_cat, seed):
+    x = jnp.asarray(np.random.default_rng(seed)
+                    .normal(size=(n, 3)).astype(np.float32))
+    disc = NumericDiscretizer.fit(x, t_cat)
+    np.testing.assert_array_equal(np.array(disc(x)), _rank_codes(x, t_cat))
+
+
+def test_discretizer_is_batch_independent():
+    """The serving property rank codes lack: coding a row depends only on
+    the persisted boundaries, never on the batch around it."""
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(200, 4)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(50, 4)).astype(np.float32))
+    disc = NumericDiscretizer.fit(a, 8)
+    whole = np.array(disc(jnp.concatenate([a, b])))
+    np.testing.assert_array_equal(whole[:200], np.array(disc(a)))
+    np.testing.assert_array_equal(whole[200:], np.array(disc(b)))
+    # ...whereas a fresh within-batch fit on b would differ in general
+    assert disc(b).shape == (50, 4)
+
+
+def test_discretizer_ties_are_deterministic():
+    """Equal values get equal codes (ranks used to split them)."""
+    x = jnp.asarray(np.repeat(np.arange(5, dtype=np.float32), 4)[:, None])
+    disc = NumericDiscretizer.fit(x, 8)
+    codes = np.array(disc(x))[:, 0]
+    for v in range(5):
+        assert len(set(codes[np.arange(20) // 4 == v])) == 1
+
+
+def test_discretizer_rejects_wrong_width():
+    disc = NumericDiscretizer.fit(jnp.zeros((10, 3)), 4)
+    with pytest.raises(ValueError):
+        disc(jnp.zeros((5, 4)))
+
+
+# ---------------------------------------------------------------------------
+# Transform pytrees: jit transparency + checkpoint (de)serialization
+# ---------------------------------------------------------------------------
+
+def test_transforms_are_pytrees_and_jit_transparent():
+    disc = NumericDiscretizer.fit(jnp.linspace(0, 1, 32).reshape(-1, 2), 4)
+    for t, parts in [
+        (IdentityTransform(), (jnp.ones((4, 2)),)),
+        (HeteroTransform(disc), (jnp.ones((4, 2)), jnp.zeros((4, 3),
+                                                             jnp.int32))),
+        (SparseTransform(jax.random.PRNGKey(0), 16),
+         (jnp.zeros((4, 8), jnp.int32), jnp.ones((4, 8), bool))),
+    ]:
+        leaves, treedef = jax.tree_util.tree_flatten(t)
+        rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+        np.testing.assert_array_equal(np.asarray(rebuilt(*parts)),
+                                      np.asarray(t(*parts)))
+        jitted = jax.jit(lambda tr, *p: tr(*p))(t, *parts)
+        np.testing.assert_array_equal(np.asarray(jitted), np.asarray(t(*parts)))
+
+
+def test_transform_serialization_roundtrip():
+    disc = NumericDiscretizer.fit(jnp.linspace(0, 1, 32).reshape(-1, 2), 4)
+    for t in (IdentityTransform(), HeteroTransform(disc),
+              HeteroTransform(None), SparseTransform(jax.random.PRNGKey(3))):
+        r = transform_from(transform_meta(t),
+                           {k: np.asarray(v)
+                            for k, v in transform_arrays(t).items()})
+        assert type(r) is type(t)
+        for ra, ta in zip(jax.tree_util.tree_leaves(r),
+                          jax.tree_util.tree_leaves(t)):
+            np.testing.assert_array_equal(np.asarray(ra), np.asarray(ta))
+    with pytest.raises(ValueError):
+        transform_from({"kind": "nope"}, {})
+
+
+# ---------------------------------------------------------------------------
+# Hetero predict-exactness (ISSUE 3 acceptance)
+# ---------------------------------------------------------------------------
+
+def test_hetero_predict_reproduces_fit_labels_exactly():
+    """Fit on batch A, predict batch A through the persisted boundaries:
+    labels AND dists identical to the fit-time assignment."""
+    h = synthetic.geonames_like(jax.random.PRNGKey(0), n=600, k=8)
+    res, model = fit_hetero(h.x_num, h.x_cat, jax.random.PRNGKey(1), CFG)
+    labels, dists = predict(model, model.encode(h.x_num, h.x_cat))
+    np.testing.assert_array_equal(np.array(labels), np.array(res.labels))
+    np.testing.assert_array_equal(np.array(dists), np.array(res.dists))
+
+
+def test_hetero_predict_exact_after_checkpoint_roundtrip(tmp_path):
+    """Unseen traffic is coded identically before and after a model
+    save/restore — boundary persistence makes hetero serving
+    deterministic, not batch-approximate."""
+    h = synthetic.geonames_like(jax.random.PRNGKey(0), n=600, k=8)
+    res, model = fit_hetero(h.x_num, h.x_cat, jax.random.PRNGKey(1), CFG)
+    fresh = synthetic.geonames_like(jax.random.PRNGKey(42), n=250, k=8)
+    before, bdists = predict(model, model.encode(fresh.x_num, fresh.x_cat))
+
+    save_model(str(tmp_path), model)
+    restored = restore_model(str(tmp_path))
+    np.testing.assert_array_equal(
+        np.array(restored.transform.discretizer.boundaries),
+        np.array(model.transform.discretizer.boundaries))
+    # fit batch: still bit-identical to the fit-time labels
+    lab_a, _ = predict(restored, restored.encode(h.x_num, h.x_cat))
+    np.testing.assert_array_equal(np.array(lab_a), np.array(res.labels))
+    # unseen batch: identical to the pre-save prediction
+    after, adists = predict(restored,
+                            restored.encode(fresh.x_num, fresh.x_cat))
+    np.testing.assert_array_equal(np.array(after), np.array(before))
+    np.testing.assert_array_equal(np.array(adists), np.array(bdists))
+
+
+def test_sparse_predict_exact_after_checkpoint_roundtrip(tmp_path):
+    """The DOPH key rides in the model: a restored serving process codes
+    new sparse traffic without the original fit key."""
+    s = synthetic.url_like(jax.random.PRNGKey(0), n=500, k=8)
+    res, model = fit_sparse(s.sets, s.mask, jax.random.PRNGKey(1), CFG)
+    fresh = synthetic.url_like(jax.random.PRNGKey(42), n=200, k=8)
+    before, _ = predict(model, model.encode(fresh.sets, fresh.mask))
+    save_model(str(tmp_path), model)
+    restored = restore_model(str(tmp_path))
+    lab, _ = predict(restored, restored.encode(s.sets, s.mask))
+    np.testing.assert_array_equal(np.array(lab), np.array(res.labels))
+    after, _ = predict(restored, restored.encode(fresh.sets, fresh.mask))
+    np.testing.assert_array_equal(np.array(after), np.array(before))
+
+
+def test_hetero_codes_with_model_transform_is_exact():
+    """hetero_codes(transform=model.transform) is the serving-side
+    coding: on the fit batch it equals the fit-time codes."""
+    h = synthetic.geonames_like(jax.random.PRNGKey(0), n=400, k=8)
+    _, model = fit_hetero(h.x_num, h.x_cat, jax.random.PRNGKey(1), CFG)
+    a = hetero_codes(h.x_num, h.x_cat, CFG.t_cat, transform=model.transform)
+    b = hetero_codes(h.x_num, h.x_cat, CFG.t_cat)   # in-batch fit, same data
+    np.testing.assert_array_equal(np.array(a), np.array(b))
+
+
+def test_pre_transform_checkpoint_still_restores(tmp_path):
+    """PR 2-format checkpoints (canonical arrays only, no transform blob)
+    restore with transform=None and serve pre-transformed codes."""
+    from repro.core import model as model_mod
+    h = synthetic.geonames_like(jax.random.PRNGKey(0), n=400, k=8)
+    res, model = fit_hetero(h.x_num, h.x_cat, jax.random.PRNGKey(1), CFG)
+    arrays = {f: getattr(model, f) for f in model_mod.ARRAY_FIELDS}
+    CheckpointManager(str(tmp_path)).save(
+        0, arrays, extra={"kind": "geek_model", "meta": model.static_meta()})
+    restored = restore_model(str(tmp_path))
+    assert restored.transform is None
+    codes = model.encode(h.x_num, h.x_cat)
+    lab, _ = predict(restored, codes)
+    np.testing.assert_array_equal(np.array(lab), np.array(res.labels))
+    with pytest.raises(ValueError):
+        restored.encode(h.x_num, h.x_cat)   # no transform to code with
+
+
+# ---------------------------------------------------------------------------
+# code_bits validation (ISSUE 3 satellite fix)
+# ---------------------------------------------------------------------------
+
+def test_numeric_only_code_bits_too_narrow_raises():
+    """Numeric-only hetero fits know the code cardinality statically —
+    an impossible cfg.code_bits must raise instead of silently masking
+    codes during packing."""
+    h = synthetic.geonames_like(jax.random.PRNGKey(0), n=200, k=4)
+    cfg = dataclasses.replace(CFG, t_cat=16, code_bits=2,
+                              hamming_impl="packed")
+    with pytest.raises(ValueError, match="code_bits"):
+        fit_hetero(h.x_num, None, jax.random.PRNGKey(1), cfg)
+    # wide-enough explicit bits are accepted
+    ok = dataclasses.replace(CFG, t_cat=16, code_bits=8,
+                             hamming_impl="packed")
+    res, model = fit_hetero(h.x_num, None, jax.random.PRNGKey(1), ok)
+    assert model.impl == "packed"
+    # with categorical columns the cardinality is unknowable: trusted
+    assert hetero_code_bits(dataclasses.replace(CFG, code_bits=2),
+                            h.x_cat) == 2
