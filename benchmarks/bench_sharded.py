@@ -1,0 +1,140 @@
+"""Sharded fit + sharded serving throughput over the local device mesh.
+
+Tracks the two multi-device hot paths of DESIGN.md §10 in one report:
+
+  - ``fit_sharded/{dense,hetero,sparse}`` — end-to-end
+    ``make_fit_sharded`` wall time (reservoir discovery + per-device
+    one-pass assignment), as points/sec;
+  - ``predict_sharded/batch=N`` — ``make_predict_sharded`` serving
+    throughput vs batch size (dense L2 model).
+
+Device count changes the numbers, so the mesh size is part of the
+report ``shape`` (the regression gate refuses to compare mismatched
+shapes). CI pins 2 fake CPU devices via
+``XLA_FLAGS=--xla_force_host_platform_device_count=2``; refresh the
+committed baseline the same way:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=2 PYTHONPATH=src \\
+      python -m benchmarks.bench_sharded --quick \\
+      --out benchmarks/baselines/BENCH_sharded_quick.json
+
+Writes ``BENCH_sharded.json`` by default (full mode only — quick mode
+writes only where --out points it, like the other benchmarks).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+
+import jax
+
+from benchmarks.common import emit, timeit
+from repro.core.distributed import make_fit_sharded, make_predict_sharded
+from repro.core.geek import GeekConfig
+from repro.data import synthetic
+from repro.utils.compat import make_mesh
+
+SHAPE = dict(n=65536, k=64, k_max=256)      # d comes from the generators
+BATCHES = (4096, 16384, 65536)
+QUICK_SHAPE = dict(n=8192, k=24, k_max=128)
+# one serving batch in quick mode, big enough to be compute-bound:
+# small batches are dispatch-bound and too noisy for a 30% gate on
+# shared runners (2 fake CPU devices add scheduler jitter)
+QUICK_BATCHES = (16384,)
+
+
+def run(quick: bool = False, out: str | None = None,
+        write_json: bool = True) -> dict:
+    """Run the sharded suites; returns (and optionally writes) the report."""
+    shape = QUICK_SHAPE if quick else SHAPE
+    batches = QUICK_BATCHES if quick else BATCHES
+    n, k = shape["n"], shape["k"]
+    mesh = make_mesh()
+    g = len(jax.devices())
+    cfg = GeekConfig(m=16, t=32, silk_l=4, delta=5, k_max=shape["k_max"],
+                     pair_cap=1 << 15)
+    key = jax.random.PRNGKey(0)
+    fkey = jax.random.PRNGKey(1)
+
+    points_per_sec: dict[str, dict[str, float]] = {}
+
+    # -- sharded fits, one per data type -----------------------------------
+    dense = synthetic.sift_like(key, n=n, k=k)
+    hetero = synthetic.geonames_like(key, n=n, k=k)
+    sparse = synthetic.url_like(key, n=n, k=k)
+    fits = {
+        "dense": (make_fit_sharded(mesh, cfg, kind="dense"), (dense.x,)),
+        "hetero": (make_fit_sharded(mesh, cfg, kind="hetero"),
+                   (hetero.x_num, hetero.x_cat)),
+        "sparse": (make_fit_sharded(mesh, cfg, kind="sparse"),
+                   (sparse.sets, sparse.mask)),
+    }
+    fitted = {}  # capture each warmup's model — no extra untimed fit
+    for name, (fit, parts) in fits.items():
+        def call(f=fit, p=parts, name=name):
+            """One timed fit; stash the first result's model."""
+            out = f(*p, key=fkey)
+            fitted.setdefault(name, out[1])
+            return out
+        sec = timeit(call, iters=2)
+        pps = n / sec
+        points_per_sec[f"fit_sharded/{name}"] = {str(n): round(pps)}
+        emit(f"fit_sharded/{name}/n={n}", sec, f"{pps:.0f} pts/s")
+    dense_model = fitted["dense"]
+
+    # -- sharded serving vs batch size -------------------------------------
+    from jax.sharding import NamedSharding, PartitionSpec
+    predict_sharded = make_predict_sharded(mesh)
+    sharding = NamedSharding(mesh, PartitionSpec("data", None))
+    per_batch = {}
+    for b in batches:
+        # traffic in the fitted model's feature width (sift_like sets d),
+        # pre-sharded outside the timer like launch/serve_cluster stages
+        # batches — the gate tracks the sharded predict step, not
+        # host->device transfer noise
+        x = jax.block_until_ready(jax.device_put(
+            jax.random.normal(jax.random.PRNGKey(7), (b, dense_model.d)),
+            sharding))
+        sec = timeit(predict_sharded, dense_model, x, iters=7)
+        pps = b / sec
+        per_batch[str(b)] = round(pps)
+        emit(f"predict_sharded/batch={b}", sec, f"{pps:.0f} pts/s")
+    points_per_sec["predict_sharded"] = per_batch
+
+    report = {
+        "host": {
+            "backend": jax.default_backend(),
+            "device": str(jax.devices()[0]),
+            "platform": platform.platform(),
+            "jax": jax.__version__,
+        },
+        "shape": {**shape, "d": int(dense_model.d), "devices": g},
+        "batch_sizes": list(batches),
+        "points_per_sec": points_per_sec,
+    }
+    if write_json:
+        out = out or os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_sharded.json")
+        with open(out, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+    return report
+
+
+def main() -> None:
+    """CLI: ``--quick`` small shapes, ``--out`` report path."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    # quick mode must not clobber the committed headline BENCH_sharded.json
+    write_json = args.out is not None or not args.quick
+    report = run(quick=args.quick, out=args.out, write_json=write_json)
+    print(json.dumps(report, indent=2))
+
+
+if __name__ == "__main__":
+    main()

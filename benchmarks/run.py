@@ -22,7 +22,7 @@ def main() -> None:
 
     from benchmarks import (bench_assign, bench_clustering, bench_complexity,
                             bench_params, bench_predict, bench_scaling,
-                            bench_seeding)
+                            bench_seeding, bench_sharded)
     suites = {
         "fig4": lambda: bench_params.run(quick=quick),
         "fig5": lambda: bench_clustering.run(quick=quick),
@@ -35,6 +35,10 @@ def main() -> None:
         "assign": lambda: bench_assign.run(quick=quick, write_json=not quick),
         "predict": lambda: bench_predict.run(smoke=quick,
                                              write_json=not quick),
+        # device-count-sensitive: the harness never writes the headline
+        # BENCH_sharded.json — refresh it via the module CLI with
+        # XLA_FLAGS=--xla_force_host_platform_device_count=2
+        "sharded": lambda: bench_sharded.run(quick=quick, write_json=False),
     }
     print("name,us_per_call,derived")
     failed = 0

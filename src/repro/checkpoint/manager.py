@@ -172,18 +172,28 @@ def save_model(directory: str, model, *, step: int = 0,
 
 
 def restore_model(directory: str, *, step: int | None = None,
-                  sharding=None):
+                  sharding=None, mesh=None):
     """Rebuild a GeekModel (packed caches + transform included) from
     save_model files.
 
     sharding: optional jax.sharding.Sharding applied to every leaf —
     the model is small (k_max·d), replication is the common choice.
+    mesh: convenience for multi-device serving — a 1-axis
+    jax.sharding.Mesh replicates every leaf onto it (equivalent to
+    sharding=NamedSharding(mesh, P())), ready for
+    ``core.distributed.make_predict_sharded``. Mutually exclusive with
+    ``sharding``.
     Pre-transform checkpoints (no "fields"/"transform" in the manifest)
     restore with transform=None for hamming models: predict still works
     on pre-transformed codes.
     """
     from repro.core import model as model_mod
     from repro.core import transform as transform_mod
+    if mesh is not None:
+        if sharding is not None:
+            raise ValueError("pass sharding OR mesh, not both")
+        sharding = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec())
     mgr = CheckpointManager(directory, create=False)
     manifest = mgr.load_manifest(step=step)
     extra = manifest.get("extra") or {}

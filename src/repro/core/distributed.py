@@ -1,42 +1,339 @@
-"""Distributed GEEK (paper §3.4) as a single shard_map program.
+"""Multi-device GEEK — sharded fit, sharded serving, and the paper's
+table-sync variant (paper §3.4, DESIGN.md §3/§10).
 
-Maps the paper's MPI design onto JAX collectives, stage by stage:
+Two complementary distributed paths live here:
 
-  paper (g GPU processes, MPI)        here (g devices on a "data" mesh axis)
-  ----------------------------------  -----------------------------------------
-  even data split across processes    x sharded P("data", None)
-  GPU QALSH hashing                   local x_l @ A (A replicated via same key)
-  global sort + even partition        sample-quantile boundaries from an
-                                      all-gathered stride sample (DESIGN.md §2)
-  bucket synchronization              one tiled all_to_all: device j receives
-  (tables -> processes, balanced)     *whole hash tables* — identical #IDs per
-                                      device regardless of bucket skew (§3.4)
-  local-bin majority voting           silk_round on local tables only
-  C_shared synchronization            all_gather of the (small) seed pairs
-  SILK dedup pass                     replicated dedup round on gathered cores
-  local centroids + broadcast         psum of local partial sums / counts
-  one-pass assignment                 local fused distance+argmin
+1. **Unified sharded fit** (``make_fit_sharded``) — the peer of the
+   in-core (``core.geek``) and streaming (``core.streaming``) paths.
+   All three data types (dense / hetero / sparse) run the same program:
+   per-device coding through the persisted ``Transform`` pipeline
+   (``model.encode``), SILK discovery on an all-gathered device-local
+   reservoir (bit-identical to the in-core seeds when the reservoir
+   covers all points — the same contract as ``core.streaming``), and a
+   local one-pass assignment through the shared ``predict_*`` dispatch.
+   It returns a canonical ``GeekModel`` that round-trips the checkpoint
+   manager and serves through ``make_predict_sharded``.
 
-The intermediate-data load balance and communication-cost arguments of the
-paper carry over verbatim: every device owns m/g complete tables (same
-N_B·D_B), and only C_shared pairs — not bins — cross the wire.
+2. **Table-sync dense fit** (``make_fit_dense``) — the paper's MPI
+   design mapped onto JAX collectives, stage by stage:
+
+     paper (g GPU processes, MPI)        here (g devices on a "data" mesh axis)
+     ----------------------------------  -----------------------------------------
+     even data split across processes    x sharded P("data", None)
+     GPU QALSH hashing                   local x_l @ A (A replicated via same key)
+     global sort + even partition        sample-quantile boundaries from an
+                                         all-gathered stride sample (DESIGN.md §2)
+     bucket synchronization              one tiled all_to_all: device j receives
+     (tables -> processes, balanced)     *whole hash tables* — identical #IDs per
+                                         device regardless of bucket skew (§3.4)
+     local-bin majority voting           silk_round on local tables only
+     C_shared synchronization            all_gather of the (small) seed pairs
+     SILK dedup pass                     replicated dedup round on gathered cores
+     local centroids + broadcast         psum of local partial sums / counts
+     one-pass assignment                 local fused distance+argmin
+
+   The intermediate-data load balance and communication-cost arguments
+   of the paper carry over verbatim: every device owns m/g complete
+   tables (same N_B·D_B), and only C_shared pairs — not bins — cross
+   the wire. Discovery here is sharded but *approximate* (sample
+   quantiles, per-device SILK rounds); use ``make_fit_sharded`` when
+   bit-identity with the in-core fit matters more than sharding the
+   discovery phase itself.
+
+Mesh/axis conventions (docs/architecture.md): every entry point takes a
+1-axis ``jax.sharding.Mesh`` and the *name* of the data-parallel axis
+(default ``"data"``). Data is sharded ``P(axis, None)`` — rows split,
+features replicated; models and seeds are replicated ``P()``.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core import assign as assign_mod
 from repro.core import lsh
 from repro.core.buckets import BucketTables
-from repro.core.geek import GeekConfig
+from repro.core.geek import (GeekConfig, GeekResult, _seed_codes, _seed_dense,
+                             discover_codes, discover_dense, hetero_code_bits,
+                             make_hetero_transform, make_sparse_transform)
+from repro.core.model import GeekModel, predict, predict_hamming, predict_l2
 from repro.core.silk import Seeds, select_top_groups, silk_round
 from repro.utils.compat import axis_size, shard_map
 from repro.utils.hashing import derive_hash_keys
 
+#: data-type kind -> number of raw input parts:
+#: dense = (x,), hetero = (x_num, x_cat), sparse = (sets, mask)
+N_PARTS = {"dense": 1, "hetero": 2, "sparse": 2}
+
+
+def _pad_and_shard(present: list, g: int, mesh, axis: str):
+    """Validate row agreement, cyclically pad to a mesh multiple, shard.
+
+    Host copies happen only when padding is needed; already-on-device
+    parts with mesh-divisible rows go straight through ``device_put``
+    (a no-op when the sharding already matches). Returns
+    ``(device_parts, n)`` with n the true (pre-padding) row count.
+    """
+    rows = {int(p.shape[0]) for p in present}
+    if len(rows) != 1:
+        raise ValueError(f"input parts disagree on rows: {rows}")
+    n = rows.pop()
+    n_pad = -(-n // g) * g
+    if n_pad != n:  # cyclic pad: duplicate rows, never sentinels
+        present = [np.resize(np.asarray(p), (n_pad,) + p.shape[1:])
+                   for p in present]
+    sharding = NamedSharding(mesh, P(axis, None))
+    return [jax.device_put(p, sharding) for p in present], n
+
+
+# ---------------------------------------------------------------------------
+# Unified sharded fit — all three data types, GeekModel out
+# ---------------------------------------------------------------------------
+
+def _reinsert_none(present: tuple, none_pattern: tuple[bool, ...]) -> tuple:
+    """Re-expand a filtered part tuple to its static None pattern."""
+    it = iter(present)
+    return tuple(None if absent else next(it) for absent in none_pattern)
+
+
+def _gather_rows(a_local: jax.Array, axis: str, keep: int | None) -> jax.Array:
+    """All-gather per-device row blocks into one (g*s, d) array.
+
+    Concatenation follows axis-index order, so when every device holds a
+    contiguous shard of a row-sharded array the gathered result is the
+    original global row order. ``keep`` statically slices off trailing
+    padding rows (None keeps everything).
+    """
+    g = jax.lax.all_gather(a_local, axis)          # (g, s, d)
+    out = g.reshape(-1, a_local.shape[1])
+    return out if keep is None else out[:keep]
+
+
+@functools.lru_cache(maxsize=None)
+def _build_fit_sharded(mesh, cfg: GeekConfig, kind: str, axis: str,
+                       none_pattern: tuple[bool, ...], n: int, nl: int,
+                       stride: int):
+    """Compile the per-(shape, mesh, config) sharded fit program.
+
+    Cached so repeated ``fit`` calls at the same shape reuse one
+    compiled executable. ``n`` is the true (pre-padding) row count,
+    ``nl`` the per-device shard rows, ``stride`` the reservoir stride
+    (1 = the reservoir is the whole dataset).
+    """
+    s = -(-nl // stride)                 # per-device reservoir rows
+    keep = n if stride == 1 else None    # exact slice only at stride 1
+
+    def _remap_seed_ids(seeds: Seeds) -> Seeds:
+        # Seeds.id indexes rows of the gathered reservoir; map back to
+        # dataset rows (device q, sample j -> row q*nl + j*stride). The
+        # pad is cyclic, so padded row i holds dataset row i % n.
+        if stride == 1:
+            return seeds                 # gathered order == dataset order
+        gid = ((seeds.id // s) * nl + (seeds.id % s) * stride) % n
+        return seeds._replace(id=jnp.where(seeds.valid, gid, seeds.id))
+
+    def body(key, *present):
+        """Per-device fit body: gather reservoir, discover, assign shard."""
+        parts = _reinsert_none(present, none_pattern)
+        if kind == "dense":
+            (x_local,) = parts
+            x_res = _gather_rows(x_local[::stride], axis, keep)
+            seeds, overflow = discover_dense(x_res, key, cfg)
+            _, _, model = _seed_dense(x_res, seeds, cfg)
+            labels, dists = predict_l2(model, x_local)
+        elif kind == "hetero":
+            num_l, cat_l = parts
+            res = tuple(None if p is None
+                        else _gather_rows(p[::stride], axis, keep)
+                        for p in parts)
+            k_item, k_sig, k_silk = jax.random.split(key, 3)
+            transform = make_hetero_transform(res[0], cfg.t_cat)
+            codes_res = transform(res[0], res[1])
+            seeds, overflow = discover_codes(codes_res, k_item, k_sig,
+                                             k_silk, cfg)
+            model = _seed_codes(codes_res, seeds, cfg,
+                                bits=hetero_code_bits(cfg, res[1]),
+                                transform=transform)
+            labels, dists = predict_hamming(model,
+                                            model.encode(num_l, cat_l))
+        else:  # sparse — code locally first, gather the narrow codes
+            sets_l, mask_l = parts
+            transform = make_sparse_transform(key, cfg)
+            _, k_item, k_sig, k_silk = jax.random.split(key, 4)
+            codes_local = transform(sets_l, mask_l)
+            codes_res = _gather_rows(codes_local[::stride], axis, keep)
+            seeds, overflow = discover_codes(codes_res, k_item, k_sig,
+                                             k_silk, cfg)
+            model = _seed_codes(codes_res, seeds, cfg, bits=16,
+                                transform=transform)
+            labels, dists = predict_hamming(model, codes_local)
+
+        radius = jax.lax.pmax(
+            assign_mod.cluster_radius(dists, labels, cfg.k_max), axis)
+        model = dataclasses.replace(model, radius=radius)
+        return labels, dists, model, _remap_seed_ids(seeds), overflow
+
+    n_present = sum(1 for absent in none_pattern if not absent)
+    mapped = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(),) + (P(axis, None),) * n_present,
+        out_specs=(P(axis), P(axis), P(), P(), P()),
+        check_vma=False)
+    return jax.jit(mapped)
+
+
+def make_fit_sharded(mesh, cfg: GeekConfig, *, kind: str = "dense",
+                     axis: str = "data", seed_cap: int | None = None):
+    """Build the unified multi-device fit for one data type.
+
+    The returned callable runs the whole GEEK pipeline with the data
+    row-sharded across ``mesh``: discovery on an all-gathered
+    device-local reservoir (replicated, so seeds are computed once and
+    identically everywhere), then a per-device one-pass assignment
+    through the shared ``predict_*`` dispatch. With ``seed_cap=None``
+    the reservoir is the entire dataset and labels/centers are
+    **bit-identical** to the in-core ``fit_dense`` / ``fit_hetero`` /
+    ``fit_sparse`` — the same contract ``core.streaming`` provides,
+    here with the assignment pass (and its memory) split g ways.
+
+    Parameters
+    ----------
+    mesh : jax.sharding.Mesh
+        1-axis device mesh (see ``utils.compat.make_mesh``).
+    cfg : GeekConfig
+        Static pipeline configuration (hashed into the compile cache).
+    kind : {"dense", "hetero", "sparse"}
+        Data type; selects the transform + discovery pipeline.
+    axis : str
+        Mesh axis name the data is sharded over.
+    seed_cap : int or None
+        Max reservoir rows for discovery. None gathers every row
+        (memory: the full (n, d) dataset materializes replicated on
+        every device for the discovery phase only). An int caps the
+        gather at ~seed_cap stride-sampled rows per the streaming
+        semantics — approximate seeds, bounded memory.
+
+    Returns
+    -------
+    fit : callable
+        ``fit(*parts, key) -> (GeekResult, GeekModel)`` where ``parts``
+        is ``(x,)`` / ``(x_num, x_cat)`` / ``(sets, mask)`` of global
+        (n, d_i) arrays (host or device). Rows are padded to a multiple
+        of the mesh size with cyclic copies of the leading rows (pure
+        duplicates — they cannot perturb radii) and sharded
+        ``P(axis, None)``; outputs are sliced back to n. The model and
+        result arrays come back replicated.
+
+    Notes
+    -----
+    When ``seed_cap`` is set and n is not divisible by the mesh size,
+    the reservoir may include up to ``pad/stride`` duplicated rows —
+    harmless for an already-approximate reservoir, and impossible at
+    ``seed_cap=None`` where the gathered reservoir is sliced to exactly
+    the n true rows.
+    """
+    if kind not in N_PARTS:
+        raise ValueError(f"unknown kind {kind!r}; expected one of "
+                         f"{sorted(N_PARTS)}")
+    g = mesh.shape[axis]
+
+    def fit(*parts, key):
+        """Pad + shard the parts, run the compiled sharded fit."""
+        if len(parts) != N_PARTS[kind]:
+            raise ValueError(f"{kind} fit takes {N_PARTS[kind]} part(s), "
+                             f"got {len(parts)}")
+        none_pattern = tuple(p is None for p in parts)
+        if kind != "hetero" and any(none_pattern):
+            raise ValueError(f"{kind} fit parts must not be None")
+        if all(none_pattern):
+            raise ValueError("every input part is None")
+        dev, n = _pad_and_shard([p for p in parts if p is not None],
+                                g, mesh, axis)
+        stride = (1 if seed_cap is None or seed_cap >= n
+                  else -(-n // seed_cap))
+        fn = _build_fit_sharded(mesh, cfg, kind, axis, none_pattern, n,
+                                -(-n // g), stride)
+        labels, dists, model, seeds, overflow = fn(key, *dev)
+        result = GeekResult(labels[:n], dists[:n], model.centers,
+                            model.center_valid, model.k_star, model.radius,
+                            seeds, overflow)
+        return result, model
+
+    return fit
+
+
+# ---------------------------------------------------------------------------
+# Sharded serving — multi-device predict over a replicated GeekModel
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _build_predict_sharded(mesh, axis: str, none_pattern: tuple[bool, ...]):
+    """Compile the sharded encode+predict step for one None pattern."""
+    def body(model, *present):
+        """Per-device serving body: encode + predict the row shard."""
+        parts = _reinsert_none(present, none_pattern)
+        return predict(model, model.encode(*parts))
+
+    n_present = sum(1 for absent in none_pattern if not absent)
+    mapped = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(),) + (P(axis, None),) * n_present,
+        out_specs=(P(axis), P(axis)),
+        check_vma=False)
+    return jax.jit(mapped)
+
+
+def make_predict_sharded(mesh, *, axis: str = "data"):
+    """Build the multi-device serving counterpart of ``model.predict``.
+
+    Each device codes and assigns its row shard with the model's
+    persisted fit-time transform (``model.encode``) + the shared
+    one-pass dispatch, so sharded serving is bit-identical to
+    single-device ``predict(model, model.encode(*parts))`` — rows are
+    independent and the model is replicated.
+
+    Parameters
+    ----------
+    mesh : jax.sharding.Mesh
+        1-axis device mesh.
+    axis : str
+        Mesh axis name to shard batch rows over.
+
+    Returns
+    -------
+    predict_fn : callable
+        ``predict_fn(model, *parts) -> (labels, dists)`` taking RAW
+        query parts — ``(x,)`` dense, ``(x_num, x_cat)`` hetero,
+        ``(sets, mask)`` sparse — as global (n, d_i) arrays. Batches
+        whose n is not a multiple of the mesh size are cyclically
+        padded and the outputs sliced back to n. ``model`` may live on
+        host or any device; it is replicated onto the mesh.
+    """
+    g = mesh.shape[axis]
+
+    def predict_fn(model: GeekModel, *parts):
+        """Pad + shard the batch, run the compiled sharded predict."""
+        none_pattern = tuple(p is None for p in parts)
+        if all(none_pattern):
+            raise ValueError("every query part is None")
+        dev, n = _pad_and_shard([p for p in parts if p is not None],
+                                g, mesh, axis)
+        fn = _build_predict_sharded(mesh, axis, none_pattern)
+        labels, dists = fn(model, *dev)
+        return labels[:n], dists[:n]
+
+    return predict_fn
+
+
+# ---------------------------------------------------------------------------
+# Table-sync dense fit — the paper's §3.4 MPI design on collectives
+# ---------------------------------------------------------------------------
 
 def _assign_l2(x_local, centers, center_valid, cfg: GeekConfig):
     """Local one-pass assignment: fused Pallas kernel when cfg.use_pallas."""
@@ -52,13 +349,34 @@ def _assign_l2_accumulate(x_local, centers, center_valid, cfg: GeekConfig):
 
     On the Pallas path the accumulation is fused into the assignment
     kernel (one-hot(labels)ᵀ @ x while the point tile is still in VMEM) —
-    the sweep makes no second pass over the data."""
+    the sweep makes no second pass over the data.
+    """
     if cfg.use_pallas:
         from repro.kernels import ops as kops
         return kops.distance_argmin_l2(x_local, centers, center_valid,
                                        accumulate=True)
     return assign_mod.assign_l2_with_partials(x_local, centers, center_valid,
                                               block=cfg.assign_block)
+
+
+def _refine_all_reduce(psums, pcnt, axis: str, cfg: GeekConfig):
+    """All-reduce one Lloyd sweep's (k, d) partial sums + (k,) counts.
+
+    With ``cfg.compress_collectives`` the f32 sums ride the int8
+    quantized ring all-reduce from ``repro.distributed.compression``
+    (4x fewer wire bytes; the (k,) counts stay an exact psum — they are
+    tiny and divide the sums, so quantizing them would amplify error).
+    The refinement loop tolerates the quantization exactly the way DDP
+    training tolerates compressed gradients: each sweep re-assigns from
+    scratch, so the error does not accumulate.
+    """
+    if cfg.compress_collectives:
+        from repro.distributed.compression import compressed_psum
+        mean, _ = compressed_psum(psums, axis)        # mean over devices
+        rsums = mean * axis_size(axis)                # psum semantics
+    else:
+        rsums = jax.lax.psum(psums, axis)
+    return rsums, jax.lax.psum(pcnt, axis)
 
 
 def _quantile_boundaries(h_local: jax.Array, t: int, samples: int,
@@ -77,9 +395,33 @@ def _quantile_boundaries(h_local: jax.Array, t: int, samples: int,
 
 def fit_dense_sharded(x_local: jax.Array, key: jax.Array, cfg: GeekConfig,
                       *, axis: str = "data", samples: int = 1024):
-    """The per-device body. Call via shard_map (see make_fit_dense below).
-    x_local: this device's (n/g, d) shard. Returns (labels_local, centers,
-    center_valid, k_star, radius, overflow)."""
+    """Per-device body of the paper-§3.4 table-sync fit.
+
+    Call via shard_map (see ``make_fit_dense``). Discovery itself is
+    sharded (per-device SILK on all_to_all-synchronized hash tables),
+    which makes it approximate versus the in-core fit — sample-quantile
+    bucket boundaries and per-device SILK rounds; ``make_fit_sharded``
+    is the exact-reservoir alternative.
+
+    Parameters
+    ----------
+    x_local : jax.Array
+        This device's (n/g, d) row shard.
+    key : jax.Array
+        PRNG key, replicated (all devices derive identical projections).
+    cfg : GeekConfig
+        Static configuration; ``cfg.m`` must divide the mesh size.
+    axis : str
+        Mesh axis name.
+    samples : int
+        Per-device rows contributed to the quantile boundary sample.
+
+    Returns
+    -------
+    tuple
+        ``(labels_local, centers, center_valid, k_star, radius,
+        overflow)`` — labels sharded (n/g,), everything else replicated.
+    """
     g = axis_size(axis)
     idx = jax.lax.axis_index(axis)
     nl, d = x_local.shape
@@ -148,12 +490,12 @@ def fit_dense_sharded(x_local: jax.Array, key: jax.Array, cfg: GeekConfig,
     center_valid = cnt > 0
 
     # optional Lloyd refinement: each sweep is one fused assign+accumulate
-    # pass (no second pass over the data) + a psum of the (k, d) partials
+    # pass (no second pass over the data) + an all-reduce of the (k, d)
+    # partials — int8-compressed when cfg.compress_collectives
     for _ in range(cfg.refine_sweeps):
         _, _, psums, pcnt = _assign_l2_accumulate(x_local, centers,
                                                   center_valid, cfg)
-        rsums = jax.lax.psum(psums, axis)
-        rcnt = jax.lax.psum(pcnt, axis)
+        rsums, rcnt = _refine_all_reduce(psums, pcnt, axis, cfg)
         centers = jnp.where((rcnt > 0)[:, None],
                             rsums / jnp.maximum(rcnt, 1.0)[:, None], centers)
         center_valid = center_valid & (rcnt > 0)
@@ -166,11 +508,30 @@ def fit_dense_sharded(x_local: jax.Array, key: jax.Array, cfg: GeekConfig,
 
 
 def make_fit_dense(mesh, cfg: GeekConfig, *, axis: str = "data"):
-    """shard_map-wrapped distributed GEEK. Input x: (n, d) sharded over
-    `axis`; outputs: labels sharded, everything else replicated."""
+    """shard_map-wrap the table-sync distributed fit (paper §3.4).
+
+    Parameters
+    ----------
+    mesh : jax.sharding.Mesh
+        1-axis device mesh.
+    cfg : GeekConfig
+        Static configuration.
+    axis : str
+        Mesh axis name the input rows are sharded over.
+
+    Returns
+    -------
+    callable
+        Jitted ``fn(x, key)`` with x (n, d) sharded ``P(axis, None)``;
+        returns ``(labels, centers, center_valid, k_star, radius,
+        overflow)`` — labels sharded, the rest replicated. Raw arrays,
+        not a ``GeekModel`` — this is the paper-faithful benchmark
+        path; ``make_fit_sharded`` is the model-producing one.
+    """
     fn = functools.partial(fit_dense_sharded, cfg=cfg, axis=axis)
 
     def body(xl, key):
+        """Per-device table-sync fit body (fit_dense_sharded)."""
         lab, c, cv, ks, rad, ovf = fn(xl, key)
         return lab, c, cv, ks, rad, ovf
 

@@ -47,7 +47,7 @@ ARRAY_FIELDS = ("centers", "center_valid", "k_star", "radius")
 # ---------------------------------------------------------------------------
 
 def quantile_boundaries(v_sorted, t_cat: int) -> jax.Array:
-    """(d, t_cat-1) bin boundaries from per-attribute ascending-sorted values.
+    """Quantile bin boundaries from per-attribute ascending-sorted values.
 
     Boundary b (1-based) is the value at rank ``ceil(b*n/t_cat)`` — the
     first rank the legacy within-batch rank partition assigned code b —
@@ -56,8 +56,20 @@ def quantile_boundaries(v_sorted, t_cat: int) -> jax.Array:
     boundaries, where ranks split them arbitrarily). Ranks beyond n-1
     (empty tail bins when n < t_cat) become +inf.
 
-    ``v_sorted`` may be a (n, d) numpy array (host two-pass streaming) or
-    a traced jnp array (in-core fit) — the rank arithmetic is static.
+    Parameters
+    ----------
+    v_sorted : (n, d) array
+        Per-attribute ascending-sorted values. May be a numpy array
+        (host two-pass streaming) or a traced jnp array (in-core fit) —
+        the rank arithmetic is static either way.
+    t_cat : int
+        Number of discretization bins.
+
+    Returns
+    -------
+    jax.Array
+        (d, t_cat-1) float boundaries, rows ascending, on the default
+        device (or traced, when called under jit).
     """
     n = v_sorted.shape[0]
     r = (np.arange(1, t_cat) * n + t_cat - 1) // t_cat
@@ -79,26 +91,45 @@ class NumericDiscretizer:
     boundaries: jax.Array    # (d_num, t_cat - 1) float32, rows ascending
 
     def tree_flatten(self):
+        """Pytree protocol: boundaries are the only child, no aux."""
         return (self.boundaries,), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
+        """Pytree protocol: rebuild from the boundaries child."""
         del aux
         return cls(*children)
 
     @property
     def d_num(self) -> int:
+        """Number of numeric attributes the boundaries were fitted on."""
         return self.boundaries.shape[0]
 
     @property
     def t_cat(self) -> int:
+        """Number of discretization bins (boundaries + 1)."""
         return self.boundaries.shape[1] + 1
 
     @classmethod
     def fit(cls, x_num: jax.Array, t_cat: int) -> "NumericDiscretizer":
+        """Fit per-attribute quantile boundaries from a batch.
+
+        Parameters
+        ----------
+        x_num : (n, d_num) jax.Array
+            Numeric fit batch (any device; sorted on device).
+        t_cat : int
+            Number of discretization bins.
+
+        Returns
+        -------
+        NumericDiscretizer
+            Holding (d_num, t_cat-1) boundaries.
+        """
         return cls(quantile_boundaries(jnp.sort(x_num, axis=0), t_cat))
 
     def __call__(self, x_num: jax.Array) -> jax.Array:
+        """Code a batch: (n, d_num) floats -> (n, d_num) int32 bins."""
         if x_num.ndim != 2 or x_num.shape[1] != self.d_num:
             raise ValueError(f"expected (n, {self.d_num}) numeric input, "
                              f"got {x_num.shape}")
@@ -110,6 +141,16 @@ class NumericDiscretizer:
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class GeekModel:
+    """The persistent fitted state of a GEEK run (module docstring).
+
+    A registered pytree: array children (canonical state + derived
+    packed caches + the transform subtree) with the static dispatch
+    metadata as aux data, so the model passes through ``jax.jit``,
+    ``device_put``/mesh replication, and the checkpoint manager whole.
+    Construct via ``build_model``; serve via ``predict`` /
+    ``core.distributed.make_predict_sharded``.
+    """
+
     # -- canonical fitted state (serialized) --------------------------------
     centers: jax.Array        # (k_max, d) centroids (l2) or mode codes (hamming)
     center_valid: jax.Array   # (k_max,) bool
@@ -130,6 +171,8 @@ class GeekModel:
     use_pallas: bool = False
 
     def tree_flatten(self):
+        """Pytree protocol: arrays (+ transform) as children, static
+        dispatch metadata as aux — the model jits/device_puts whole."""
         children = (self.centers, self.center_valid, self.k_star, self.radius,
                     self.packed_centers, self.onehot_centers, self.transform)
         aux = (self.metric, self.impl, self.code_bits, self.d,
@@ -138,17 +181,32 @@ class GeekModel:
 
     @classmethod
     def tree_unflatten(cls, aux, children):
+        """Pytree protocol: rebuild from (children, aux)."""
         return cls(*children, *aux)
 
     @property
     def k_max(self) -> int:
+        """Static cluster-budget (rows of ``centers``)."""
         return self.centers.shape[0]
 
     def encode(self, *parts) -> jax.Array:
-        """Code raw inputs into the model's assignment space with the
-        fit-time transform: ``encode(x)`` (dense), ``encode(x_num,
-        x_cat)`` (hetero), ``encode(sets, mask)`` (sparse). The output
-        feeds ``predict`` and reproduces the fit-time coding exactly."""
+        """Code raw inputs into the model's assignment space.
+
+        Parameters
+        ----------
+        *parts : jax.Array
+            Raw query parts, per the fit-time transform's kind:
+            ``encode(x)`` dense (n, d) floats, ``encode(x_num, x_cat)``
+            hetero (either may be None as fitted), ``encode(sets,
+            mask)`` sparse. Rows are coded independently, on whatever
+            device(s) the inputs live (works under jit and shard_map).
+
+        Returns
+        -------
+        jax.Array
+            (n, d) codes/vectors that feed ``predict``, reproducing
+            the fit-time coding exactly.
+        """
         if self.transform is None:
             if len(parts) == 1:
                 return parts[0]  # pre-transform-era model: codes pass through
@@ -175,9 +233,38 @@ def build_model(centers: jax.Array, center_valid: jax.Array,
     This is the single constructor used by the ``fit_*`` paths *and* by
     checkpoint restore — packing here (not per predict call) is what makes
     the restored model's fast path identical to the freshly fitted one.
-    ``transform`` is the fit-time raw→code-space mapping (defaults to the
-    identity for L2; hamming models without one require pre-transformed
-    codes at predict time).
+
+    Parameters
+    ----------
+    centers : (k_max, d) jax.Array
+        Centroids (l2) or mode codes (hamming).
+    center_valid : (k_max,) bool jax.Array
+        Which center rows are live.
+    k_star : () int32 jax.Array
+        Discovered number of clusters.
+    radius : (k_max,) float32 jax.Array
+        Per-cluster max distance at fit time.
+    metric : {"l2", "hamming"}
+        Distance dispatch.
+    impl : str
+        Resolved hamming impl ("equality" | "packed" | "onehot");
+        ignored for l2.
+    code_bits : int
+        Packed field width / one-hot log2 cardinality.
+    assign_block : int
+        Row block for the jnp assignment path.
+    use_pallas : bool
+        Route assignment through the fused Pallas kernels.
+    transform : Transform or None
+        Fit-time raw→code-space mapping (defaults to the identity for
+        L2; hamming models without one require pre-transformed codes
+        at predict time).
+
+    Returns
+    -------
+    GeekModel
+        With packed/one-hot center caches derived once, on the same
+        device(s) as ``centers``.
     """
     if metric not in ("l2", "hamming"):
         raise ValueError(f"unknown metric {metric!r}")
@@ -201,7 +288,21 @@ def build_model(centers: jax.Array, center_valid: jax.Array,
 def predict_l2(model: GeekModel, x: jax.Array):
     """L2 assignment dispatch. Shared by ``predict`` AND the fit-time
     ``_finish_dense`` pass — one code path is what makes 'predict is
-    bit-identical to fit labels' structural rather than test-enforced."""
+    bit-identical to fit labels' structural rather than test-enforced.
+
+    Parameters
+    ----------
+    model : GeekModel
+        Fitted l2 model (centers on the compute device; replicated
+        under shard_map).
+    x : (n, d) jax.Array
+        Dense rows, assigned independently.
+
+    Returns
+    -------
+    (labels, dists)
+        (n,) int32 argmin labels and (n,) float32 Euclidean distances.
+    """
     from repro.core import assign as assign_mod
     if model.use_pallas:
         from repro.kernels import ops as kops
@@ -216,8 +317,23 @@ def predict_l2(model: GeekModel, x: jax.Array):
 
 def predict_hamming(model: GeekModel, codes: jax.Array):
     """Hamming assignment dispatch (equality/packed/one-hot, jnp or
-    Pallas), dists normalized to ≈ (1 - Jaccard). Shared by ``predict``
-    and fit-time ``_finish_codes`` — see predict_l2."""
+    Pallas). Shared by ``predict`` and fit-time ``_finish_codes`` —
+    see ``predict_l2``.
+
+    Parameters
+    ----------
+    model : GeekModel
+        Fitted hamming model; packed/one-hot center caches are already
+        on device from ``build_model``.
+    codes : (n, d) int32 jax.Array
+        Categorical codes in the model's code space (``model.encode``).
+
+    Returns
+    -------
+    (labels, dists)
+        (n,) int32 labels and (n,) float32 mismatch fractions,
+        normalized to ≈ (1 - Jaccard) like the fit.
+    """
     from repro.core import assign as assign_mod
     bits, d = model.code_bits, model.d
     if model.impl == "packed":
@@ -249,12 +365,24 @@ def predict_hamming(model: GeekModel, codes: jax.Array):
 def predict(model: GeekModel, x: jax.Array) -> tuple[jax.Array, jax.Array]:
     """One-pass assignment of new points against a fitted model.
 
-    x: (n, d) floats for metric "l2", (n, d) int32 categorical codes for
-    metric "hamming" — use ``model.encode(*raw_parts)`` to reproduce the
-    fit-time transformation (persisted quantile boundaries / DOPH key)
-    on raw traffic. Returns (labels, dists) with the same semantics as
-    ``GeekResult`` — on the fit data the labels are bit-identical to the
-    fit-time assignment.
+    Parameters
+    ----------
+    model : GeekModel
+        Fitted model (any metric/impl); jitted as a pytree, so the
+        static dispatch fields select the kernel at trace time.
+    x : (n, d) jax.Array
+        Floats for metric "l2", int32 categorical codes for metric
+        "hamming" — use ``model.encode(*raw_parts)`` to reproduce the
+        fit-time transformation (persisted quantile boundaries / DOPH
+        key) on raw traffic. Single-device; for row-sharded
+        multi-device serving use
+        ``core.distributed.make_predict_sharded``.
+
+    Returns
+    -------
+    (labels, dists)
+        With the same semantics as ``GeekResult`` — on the fit data the
+        labels are bit-identical to the fit-time assignment.
     """
     if x.ndim != 2 or x.shape[1] != model.d:
         raise ValueError(f"expected (n, {model.d}) input, got {x.shape}")

@@ -37,6 +37,15 @@ Three drivers, one per entry point (DESIGN.md §9):
 ``data`` may be arrays (numpy/JAX; chunks are sliced from them) or an
 iterator of host chunks (materialized chunk-by-chunk into host RAM — n
 is bounded by host memory, never by HBM).
+
+Every driver also takes ``mesh=`` (docs/architecture.md): with a 1-axis
+``jax.sharding.Mesh`` the streamed assignment pass runs **sharded** —
+each chunk is split ``P(axis, None)`` across the mesh and assigned by a
+``shard_map``-wrapped encode+predict step (per-device donated buffers;
+the sentinel-padded ragged tail shards like any other chunk), so
+steady-state per-device HBM is ``chunk / g`` rows. Coding and
+assignment stay row-independent, so sharded streamed labels remain
+bit-identical to the in-core fit.
 """
 from __future__ import annotations
 
@@ -46,6 +55,8 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.core import assign as assign_mod
 from repro.core.geek import (GeekConfig, GeekResult, _seed_codes, _seed_dense,
@@ -70,6 +81,7 @@ def _as_piece_stream(data, nparts: int):
     """Normalize array / tuple-of-arrays / iterator input to an iterator
     of part tuples of host arrays (None slots preserved)."""
     def to_tuple(piece):
+        """Coerce one streamed piece to a host-array part tuple."""
         if nparts == 1 and not isinstance(piece, (tuple, list)):
             piece = (piece,)
         if not isinstance(piece, (tuple, list)) or len(piece) != nparts:
@@ -171,12 +183,37 @@ def _assign_chunk_body(model: GeekModel, parts: tuple, k_max: int):
 
 
 @functools.lru_cache(maxsize=None)
-def _assign_chunk_fn(donate: bool):
+def _assign_chunk_fn(donate: bool, mesh=None, axis: str = "data"):
     """Jitted step with the chunk buffers donated — after the first step
     the transfer reuses the previous chunk's device buffers instead of
     growing HBM. CPU cannot donate (XLA warns and ignores), so donation
-    is requested only on accelerator backends."""
-    return jax.jit(_assign_chunk_body, static_argnames=("k_max",),
+    is requested only on accelerator backends.
+
+    With ``mesh`` the step is shard_map-wrapped: the chunk arrives
+    row-sharded ``P(axis, None)``, every device assigns its shard
+    through the same encode+predict dispatch, and the partial radius is
+    pmax-reduced — per-device buffers are donated just like the
+    single-device path.
+    """
+    if mesh is None:
+        return jax.jit(_assign_chunk_body, static_argnames=("k_max",),
+                       donate_argnums=(1,) if donate else ())
+    from repro.utils.compat import shard_map
+
+    def step(model, parts, k_max):
+        """Sharded chunk step: shard rows, assign, pmax the radius."""
+        def body(model, parts):
+            """Per-device encode+predict on this device's row shard."""
+            labels, dists = predict(model, model.encode(*parts))
+            radius = jax.lax.pmax(
+                assign_mod.cluster_radius(dists, labels, k_max), axis)
+            return labels, dists, radius
+        return shard_map(body, mesh=mesh,
+                         in_specs=(P(), P(axis, None)),
+                         out_specs=(P(axis), P(axis), P()),
+                         check_vma=False)(model, parts)
+
+    return jax.jit(step, static_argnames=("k_max",),
                    donate_argnums=(1,) if donate else ())
 
 
@@ -187,10 +224,22 @@ def _pad_rows(p: np.ndarray, to: int) -> np.ndarray:
     return np.concatenate([p, pad], axis=0)
 
 
+def _check_mesh_chunk(mesh, mesh_axis: str, chunk: int) -> None:
+    """Sharded streaming needs chunk rows to split evenly over the mesh."""
+    if mesh is None:
+        return
+    g = mesh.shape[mesh_axis]
+    if chunk % g:
+        raise ValueError(f"chunk={chunk} must be a multiple of the mesh "
+                         f"size g={g} for sharded streaming")
+
+
 def _streamed_fit(chunks: list[tuple], n: int, cfg: GeekConfig, chunk: int,
-                  seed_model, seeds, overflow, sample_idx):
+                  seed_model, seeds, overflow, sample_idx, *,
+                  mesh=None, mesh_axis: str = "data"):
     """Pass 2: stream chunks through transform + predict, assemble the
-    host-numpy GeekResult and the radius-finalized model."""
+    host-numpy GeekResult and the radius-finalized model. With ``mesh``
+    each chunk is row-sharded over the mesh for the assignment step."""
     model = jax.block_until_ready(seed_model)
     if sample_idx is not None:
         # keep the fit_* contract: Seeds.id holds dataset row ids, not
@@ -200,14 +249,18 @@ def _streamed_fit(chunks: list[tuple], n: int, cfg: GeekConfig, chunk: int,
     labels = np.empty((n,), np.int32)
     dists = np.empty((n,), np.float32)
     radius = np.zeros((cfg.k_max,), np.float32)
-    assign_chunk = _assign_chunk_fn(jax.default_backend() != "cpu")
+    assign_chunk = _assign_chunk_fn(jax.default_backend() != "cpu",
+                                    mesh, mesh_axis)
+    sharding = (NamedSharding(mesh, P(mesh_axis, None))
+                if mesh is not None else None)
     off = 0
     for parts in chunks:
         m = _rows(parts)
         if m < chunk:  # ragged tail: pad with masked sentinel rows
             parts = tuple(None if p is None else _pad_rows(p, chunk)
                           for p in parts)
-        dev = tuple(None if p is None else jax.device_put(p) for p in parts)
+        dev = tuple(None if p is None else jax.device_put(p, sharding)
+                    for p in parts)
         lab, dst, rad = assign_chunk(model, dev, cfg.k_max)
         lab, dst = np.asarray(lab)[:m], np.asarray(dst)[:m]
         if m < chunk:
@@ -257,21 +310,47 @@ def _seed_dense_reservoir(sample: jax.Array, key: jax.Array, cfg: GeekConfig):
 
 
 def fit_dense_streaming(data, key: jax.Array, cfg: GeekConfig, *,
-                        chunk: int = 8192, seed_cap: int | None = None
+                        chunk: int = 8192, seed_cap: int | None = None,
+                        mesh=None, mesh_axis: str = "data"
                         ) -> tuple[GeekResult, GeekModel]:
-    """Out-of-core ``fit_dense``. Returns (GeekResult, GeekModel) with
-    host-numpy labels/dists in the result.
+    """Out-of-core ``fit_dense``: reservoir discovery + streamed one-pass
+    assignment.
 
-    chunk:    rows resident on device during the assignment pass.
-    seed_cap: max reservoir rows for the discovery phase (None = all rows,
-              which makes labels/centers bit-identical to ``fit_dense``).
+    Parameters
+    ----------
+    data : (n, d) array or iterator of (m_i, d) host chunks
+        Dense float rows. Iterator input is materialized chunk-by-chunk
+        into host RAM, never whole on device.
+    key : jax.Array
+        PRNG key, consumed exactly as ``fit_dense`` consumes it.
+    cfg : GeekConfig
+        Static configuration.
+    chunk : int
+        Rows resident on device during the assignment pass (per step;
+        with ``mesh``, each device holds ``chunk / g`` of them).
+    seed_cap : int or None
+        Max reservoir rows for the discovery phase. None = all rows,
+        which makes labels/centers bit-identical to ``fit_dense``.
+    mesh : jax.sharding.Mesh or None
+        With a 1-axis mesh the assignment pass runs sharded over
+        ``mesh_axis`` (``chunk`` must divide by the mesh size);
+        discovery still runs on one device.
+    mesh_axis : str
+        Mesh axis name rows are sharded over.
+
+    Returns
+    -------
+    (GeekResult, GeekModel)
+        Result arrays land in host numpy; the model's arrays stay on
+        device (replicated when ``mesh`` is given).
     """
+    _check_mesh_chunk(mesh, mesh_axis, chunk)
     chunks, n, whole = _collect(data, 1, chunk)
     sample, sample_idx = _stride_sample(chunks, n, seed_cap, whole)
     model, seeds, overflow = _seed_dense_reservoir(
         jax.device_put(sample[0]), key, cfg)
     return _streamed_fit(chunks, n, cfg, chunk, model, seeds, overflow,
-                         sample_idx)
+                         sample_idx, mesh=mesh, mesh_axis=mesh_axis)
 
 
 # ---------------------------------------------------------------------------
@@ -302,26 +381,46 @@ def _seed_hetero_reservoir(x_num, x_cat, boundaries, key: jax.Array,
 
 def fit_hetero_streaming(data, key: jax.Array, cfg: GeekConfig, *,
                          chunk: int = 8192, seed_cap: int | None = None,
-                         boundaries: str = "reservoir"
+                         boundaries: str = "reservoir",
+                         mesh=None, mesh_axis: str = "data"
                          ) -> tuple[GeekResult, GeekModel]:
     """Out-of-core ``fit_hetero``: chunked MinHash transformation feeding
     the reservoir discovery + donated-buffer assignment pass.
 
-    data:       ``(x_num, x_cat)`` arrays (either may be None) or an
-                iterator of such pairs of host chunks.
-    boundaries: "reservoir" fits the numeric quantile boundaries on the
-                discovery reservoir (one pass; exact when seed_cap=None);
-                "exact" makes a dedicated host pass over the numeric
-                columns first, so boundaries match the in-core fit even
-                when the reservoir is subsampled.
+    Parameters
+    ----------
+    data : (x_num, x_cat) arrays or iterator of such pairs
+        Either part may be None (consistently across chunks); arrays
+        are (n, d_num) float and (n, d_cat) int.
+    key : jax.Array
+        PRNG key, consumed exactly as ``fit_hetero`` consumes it.
+    cfg : GeekConfig
+        Static configuration.
+    chunk : int
+        Rows resident on device per assignment step.
+    seed_cap : int or None
+        Max reservoir rows for discovery (None = all rows).
+    boundaries : {"reservoir", "exact"}
+        "reservoir" fits the numeric quantile boundaries on the
+        discovery reservoir (one pass; exact when seed_cap=None);
+        "exact" makes a dedicated host pass over the numeric columns
+        first, so boundaries match the in-core fit even when the
+        reservoir is subsampled.
+    mesh, mesh_axis
+        Optional 1-axis mesh for a sharded assignment pass — see
+        ``fit_dense_streaming``.
 
-    With ``seed_cap=None`` labels/dists/centers are bit-identical to
-    ``fit_hetero`` for any chunk size (transform and assignment are both
-    row-independent).
+    Returns
+    -------
+    (GeekResult, GeekModel)
+        With ``seed_cap=None`` labels/dists/centers are bit-identical
+        to ``fit_hetero`` for any chunk size (transform and assignment
+        are both row-independent).
     """
     if boundaries not in ("reservoir", "exact"):
         raise ValueError(f"boundaries must be 'reservoir' or 'exact', "
                          f"got {boundaries!r}")
+    _check_mesh_chunk(mesh, mesh_axis, chunk)
     chunks, n, whole = _collect(data, 2, chunk)
     sample, sample_idx = _stride_sample(chunks, n, seed_cap, whole)
 
@@ -337,7 +436,7 @@ def fit_hetero_streaming(data, key: jax.Array, cfg: GeekConfig, *,
     model, seeds, overflow = _seed_hetero_reservoir(
         dev(sample[0]), dev(sample[1]), bounds, key, cfg)
     return _streamed_fit(chunks, n, cfg, chunk, model, seeds, overflow,
-                         sample_idx)
+                         sample_idx, mesh=mesh, mesh_axis=mesh_axis)
 
 
 # ---------------------------------------------------------------------------
@@ -356,15 +455,36 @@ def _seed_sparse_reservoir(sets, mask, key: jax.Array, cfg: GeekConfig):
 
 
 def fit_sparse_streaming(data, key: jax.Array, cfg: GeekConfig, *,
-                         chunk: int = 8192, seed_cap: int | None = None
+                         chunk: int = 8192, seed_cap: int | None = None,
+                         mesh=None, mesh_axis: str = "data"
                          ) -> tuple[GeekResult, GeekModel]:
     """Out-of-core ``fit_sparse``: chunked DOPH transformation feeding
     the reservoir discovery + donated-buffer assignment pass.
 
-    data: ``(sets, mask)`` arrays or an iterator of such pairs. With
-    ``seed_cap=None`` labels/dists/centers are bit-identical to
-    ``fit_sparse`` for any chunk size (DOPH is per-row).
+    Parameters
+    ----------
+    data : (sets, mask) arrays or iterator of such pairs
+        ``sets`` (n, s_max) int set items, ``mask`` (n, s_max) bool.
+    key : jax.Array
+        PRNG key, consumed exactly as ``fit_sparse`` consumes it (the
+        persisted ``SparseTransform`` derives the same DOPH key).
+    cfg : GeekConfig
+        Static configuration.
+    chunk : int
+        Rows resident on device per assignment step.
+    seed_cap : int or None
+        Max reservoir rows for discovery (None = all rows).
+    mesh, mesh_axis
+        Optional 1-axis mesh for a sharded assignment pass — see
+        ``fit_dense_streaming``.
+
+    Returns
+    -------
+    (GeekResult, GeekModel)
+        With ``seed_cap=None`` labels/dists/centers are bit-identical
+        to ``fit_sparse`` for any chunk size (DOPH is per-row).
     """
+    _check_mesh_chunk(mesh, mesh_axis, chunk)
     chunks, n, whole = _collect(data, 2, chunk)
     if chunks[0][0] is None or chunks[0][1] is None:
         raise ValueError("fit_sparse_streaming needs both sets and mask")
@@ -372,4 +492,4 @@ def fit_sparse_streaming(data, key: jax.Array, cfg: GeekConfig, *,
     model, seeds, overflow = _seed_sparse_reservoir(
         jax.device_put(sample[0]), jax.device_put(sample[1]), key, cfg)
     return _streamed_fit(chunks, n, cfg, chunk, model, seeds, overflow,
-                         sample_idx)
+                         sample_idx, mesh=mesh, mesh_axis=mesh_axis)

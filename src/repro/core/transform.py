@@ -40,14 +40,17 @@ class IdentityTransform:
     kind = "identity"
 
     def tree_flatten(self):
+        """Pytree protocol: stateless — no children, no aux."""
         return (), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
+        """Pytree protocol: rebuild the stateless transform."""
         del aux, children
         return cls()
 
     def __call__(self, x: jax.Array) -> jax.Array:
+        """Pass (n, d) dense rows through unchanged (any device)."""
         return x
 
 
@@ -64,15 +67,33 @@ class HeteroTransform:
     kind = "hetero"
 
     def tree_flatten(self):
+        """Pytree protocol: the discretizer subtree is the only child."""
         return (self.discretizer,), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
+        """Pytree protocol: rebuild from the discretizer child."""
         del aux
         return cls(*children)
 
     def __call__(self, x_num: jax.Array | None,
                  x_cat: jax.Array | None) -> jax.Array:
+        """Code a batch into unified categorical codes.
+
+        Parameters
+        ----------
+        x_num : (n, d_num) float jax.Array or None
+            Numeric columns; required iff the transform was fitted with
+            numeric columns.
+        x_cat : (n, d_cat) int jax.Array or None
+            Raw categorical columns, concatenated after the bins.
+
+        Returns
+        -------
+        jax.Array
+            (n, d_num + d_cat) int32 codes, row-independent (exact on
+            any batch; works under jit and shard_map).
+        """
         parts = []
         if self.discretizer is not None:
             if x_num is None:
@@ -104,13 +125,30 @@ class SparseTransform:
     kind = "sparse"
 
     def tree_flatten(self):
+        """Pytree protocol: key as child, static doph_m as aux."""
         return (self.doph_key,), (self.doph_m,)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
+        """Pytree protocol: rebuild from (key, doph_m)."""
         return cls(*children, *aux)
 
     def __call__(self, sets: jax.Array, mask: jax.Array) -> jax.Array:
+        """Code sparse sets into 16-bit DOPH codes.
+
+        Parameters
+        ----------
+        sets : (n, s_max) int jax.Array
+            Padded set items.
+        mask : (n, s_max) bool jax.Array
+            True for real items, False for padding.
+
+        Returns
+        -------
+        jax.Array
+            (n, doph_m) int32 codes (top 16 bits of the DOPH hash),
+            per-row — chunking/sharding never changes them.
+        """
         codes = lsh.doph_codes(sets, mask, self.doph_key, self.doph_m)
         return (codes >> jnp.uint32(16)).astype(jnp.int32)  # 16-bit codes
 

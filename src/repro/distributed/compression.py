@@ -13,8 +13,14 @@ Wire bytes drop 4x (both phases move int8). The quantization residual can
 be carried by the caller via error feedback (`quantize` returns the
 residual) so the bias vanishes over steps — 1-bit-Adam style.
 
-Used by the shard_map DDP path (`launch/train.py --compress-grads`);
-the HLO all-to-all/all-gather show s8 operands, which the roofline
+Two call sites share it:
+  - the shard_map DDP path (`launch/train.py --compress-grads`);
+  - the distributed GEEK Lloyd-refinement all-reduce
+    (`core/distributed.py`, `GeekConfig.compress_collectives`) — the
+    (k, d) partial-sum psum per sweep is the exact analog of a gradient
+    all-reduce, and the sweep re-assigns from scratch so quantization
+    error does not accumulate.
+The HLO all-to-all/all-gather show s8 operands, which the roofline
 collector counts (this is how the collective-term win is measured).
 """
 from __future__ import annotations

@@ -1,14 +1,20 @@
 """GEEK clustering driver — the paper's end-to-end system.
 
 Runs the full transformation -> SILK -> one-pass-assignment pipeline on
-synthetic analogues of the paper's datasets, single-device or distributed
-(shard_map over all local devices, same program the 512-chip dry-run
-lowers). `--compare` adds the paper's baselines.
+synthetic analogues of the paper's datasets, single-device or
+multi-device. `--mesh` shards any data type over all local devices via
+the unified sharded path (`core.distributed.make_fit_sharded` — exact,
+GeekModel out); `--distributed` keeps the paper-§3.4 table-sync dense
+variant; `--streaming` bounds device memory by `--chunk` and composes
+with `--mesh` (sharded chunked assignment). `--compare` adds the
+paper's baselines.
 
   PYTHONPATH=src python -m repro.launch.cluster --dataset sift --n 20000 \
       --k 64 --compare
   PYTHONPATH=src python -m repro.launch.cluster --dataset url --n 100000 \
       --streaming --chunk 8192 --seed-cap 20000   # out-of-core, any type
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
+      python -m repro.launch.cluster --dataset geonames --mesh
 """
 from __future__ import annotations
 
@@ -22,12 +28,13 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core import baselines
-from repro.core.distributed import make_fit_dense
+from repro.core.distributed import make_fit_dense, make_fit_sharded
 from repro.core.geek import (GeekConfig, fit_dense, fit_hetero, fit_sparse,
                              hetero_codes)
 from repro.core.streaming import (fit_dense_streaming, fit_hetero_streaming,
                                   fit_sparse_streaming)
 from repro.data import synthetic
+from repro.utils.compat import make_mesh
 
 
 def mean_radius(radius, valid):
@@ -48,7 +55,11 @@ def main() -> None:
     ap.add_argument("--delta", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--distributed", action="store_true",
-                    help="shard_map over all local devices")
+                    help="paper-§3.4 table-sync dense fit over all local "
+                         "devices (approximate sharded discovery)")
+    ap.add_argument("--mesh", action="store_true",
+                    help="unified sharded fit over all local devices "
+                         "(any data type, exact, GeekModel out)")
     ap.add_argument("--streaming", action="store_true",
                     help="out-of-core fit: device memory bounded by --chunk")
     ap.add_argument("--chunk", type=int, default=8192,
@@ -60,11 +71,22 @@ def main() -> None:
     args = ap.parse_args()
     if args.streaming and args.distributed:
         raise SystemExit("--streaming and --distributed are exclusive")
+    if args.mesh and args.distributed:
+        raise SystemExit("--mesh and --distributed are exclusive "
+                         "(--mesh is the unified sharded path)")
 
     key = jax.random.PRNGKey(args.seed)
     cfg = GeekConfig(m=args.m, t=args.t, silk_l=args.silk_l, delta=args.delta,
                      k_max=args.k_max, pair_cap=1 << 16)
-    stream_kw = dict(chunk=args.chunk, seed_cap=args.seed_cap)
+    mesh = make_mesh() if args.mesh else None
+    stream_kw = dict(chunk=args.chunk, seed_cap=args.seed_cap, mesh=mesh)
+
+    def sharded_tag(base: str) -> str:
+        if args.streaming:
+            base += "/stream"
+        if mesh is not None:
+            base += f"/sharded x{len(jax.devices())}"
+        return base
 
     if args.dataset in ("sift", "gist"):
         gen = synthetic.sift_like if args.dataset == "sift" else synthetic.gist_like
@@ -87,11 +109,15 @@ def main() -> None:
             res, _ = fit_dense_streaming(np.asarray(data.x),
                                          jax.random.PRNGKey(1), cfg,
                                          **stream_kw)
+        elif mesh is not None:
+            res, _ = make_fit_sharded(mesh, cfg, kind="dense",
+                                      seed_cap=args.seed_cap)(
+                data.x, key=jax.random.PRNGKey(1))
         else:
             res, _ = fit_dense(data.x, jax.random.PRNGKey(1), cfg)
         jax.block_until_ready(res.labels)
         dt = time.time() - t0
-        tag = "geek/stream" if args.streaming else "geek"
+        tag = sharded_tag("geek")
         print(f"[{tag}] n={args.n} k*={int(res.k_star)} "
               f"mean_radius={mean_radius(res.radius, res.center_valid):.4f} "
               f"time={dt:.2f}s")
@@ -120,11 +146,15 @@ def main() -> None:
             res, _ = fit_hetero_streaming(
                 (np.asarray(data.x_num), np.asarray(data.x_cat)),
                 jax.random.PRNGKey(1), cfg, **stream_kw)
+        elif mesh is not None:
+            res, _ = make_fit_sharded(mesh, cfg, kind="hetero",
+                                      seed_cap=args.seed_cap)(
+                data.x_num, data.x_cat, key=jax.random.PRNGKey(1))
         else:
             res, _ = fit_hetero(data.x_num, data.x_cat,
                                 jax.random.PRNGKey(1), cfg)
         jax.block_until_ready(res.labels)
-        tag = "geek/hetero/stream" if args.streaming else "geek/hetero"
+        tag = sharded_tag("geek/hetero")
         print(f"[{tag}] n={args.n} k*={int(res.k_star)} "
               f"mean_radius={mean_radius(res.radius, res.center_valid):.4f} "
               f"time={time.time()-t0:.2f}s")
@@ -143,11 +173,15 @@ def main() -> None:
             res, _ = fit_sparse_streaming(
                 (np.asarray(data.sets), np.asarray(data.mask)),
                 jax.random.PRNGKey(1), cfg, **stream_kw)
+        elif mesh is not None:
+            res, _ = make_fit_sharded(mesh, cfg, kind="sparse",
+                                      seed_cap=args.seed_cap)(
+                data.sets, data.mask, key=jax.random.PRNGKey(1))
         else:
             res, _ = fit_sparse(data.sets, data.mask,
                                 jax.random.PRNGKey(1), cfg)
         jax.block_until_ready(res.labels)
-        tag = "geek/sparse/stream" if args.streaming else "geek/sparse"
+        tag = sharded_tag("geek/sparse")
         print(f"[{tag}] n={args.n} k*={int(res.k_star)} "
               f"mean_radius={mean_radius(res.radius, res.center_valid):.4f} "
               f"time={time.time()-t0:.2f}s")

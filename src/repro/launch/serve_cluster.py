@@ -14,6 +14,10 @@ batches and report steady-state points/sec.
       --n-fit 16384 --batch 4096 --steps 20
   PYTHONPATH=src python -m repro.launch.serve_cluster --data hetero \
       --ckpt /tmp/geek_model --save   # second run restores, skips the fit
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
+      python -m repro.launch.serve_cluster --data sparse --mesh
+      # --mesh: restore replicated onto a 1-axis mesh over all local
+      # devices and serve each batch row-sharded (bit-identical labels)
 """
 from __future__ import annotations
 
@@ -24,9 +28,11 @@ import jax
 import numpy as np
 
 from repro.checkpoint.manager import restore_model, save_model
+from repro.core.distributed import make_predict_sharded
 from repro.core.geek import GeekConfig, fit_dense, fit_hetero, fit_sparse
 from repro.core.model import predict
 from repro.data import synthetic
+from repro.utils.compat import make_mesh
 
 #: expected transform kind per data type — a restored checkpoint fitted on
 #: a different type must be refused, not served garbage
@@ -84,6 +90,9 @@ def main() -> None:
                     help="model checkpoint dir (restore if it has one)")
     ap.add_argument("--save", action="store_true",
                     help="save the fitted model to --ckpt")
+    ap.add_argument("--mesh", action="store_true",
+                    help="serve row-sharded over all local devices "
+                         "(model replicated; labels bit-identical)")
     ap.add_argument("--smoke", action="store_true")
     args = ap.parse_args()
     if args.metric is not None:
@@ -98,11 +107,12 @@ def main() -> None:
 
     cfg = GeekConfig(m=16, t=32, silk_l=4, delta=5, k_max=args.k_max,
                      pair_cap=1 << 15)
+    mesh = make_mesh() if args.mesh else None
 
     model = None
     if args.ckpt:
         try:
-            model = restore_model(args.ckpt)
+            model = restore_model(args.ckpt, mesh=mesh)
             kind = getattr(model.transform, "kind", None)
             if kind != _KIND[args.data]:
                 raise SystemExit(
@@ -124,20 +134,34 @@ def main() -> None:
             print(f"[serve] saved model to {args.ckpt}")
 
     # -- serving loop ------------------------------------------------------
+    # --mesh: each batch is row-sharded over the mesh, the model is
+    # replicated, and the shard_map-wrapped encode+predict produces the
+    # same labels as the single-device path (rows are independent)
+    serve = make_predict_sharded(mesh) if mesh is not None else _serve
     warm = _traffic(args, -1)
-    jax.block_until_ready(_serve(model, *warm))            # compile
+    jax.block_until_ready(serve(model, *warm))             # compile
     total, t_serve = 0, 0.0
     occupancy = np.zeros((model.k_max,), np.int64)
     for step in range(args.steps):
-        batch = tuple(jax.device_put(p) for p in _traffic(args, step))
+        batch = _traffic(args, step)
+        if mesh is None:
+            batch = tuple(jax.device_put(p) for p in batch)
+        else:
+            # pre-shard outside the timer, symmetric with the
+            # single-device device_put above (predict_fn's own
+            # device_put on already-sharded arrays is a no-op)
+            from jax.sharding import NamedSharding, PartitionSpec
+            sh = NamedSharding(mesh, PartitionSpec("data", None))
+            batch = tuple(jax.device_put(p, sh) for p in batch)
         t0 = time.time()
-        labels, dists = jax.block_until_ready(_serve(model, *batch))
+        labels, dists = jax.block_until_ready(serve(model, *batch))
         t_serve += time.time() - t0
         total += labels.shape[0]
         occupancy += np.bincount(np.asarray(labels), minlength=model.k_max)
     pps = total / max(t_serve, 1e-9)
     hot = int(occupancy.argmax())
-    print(f"[serve] {args.steps} batches x {args.batch}: "
+    tag = f" x{len(jax.devices())} devices" if mesh is not None else ""
+    print(f"[serve{tag}] {args.steps} batches x {args.batch}: "
           f"{pps:,.0f} points/s (coding + assignment), "
           f"hottest cluster {hot} got {int(occupancy[hot])} points")
 

@@ -1,13 +1,19 @@
-"""Version compatibility shims.
+"""Version compatibility shims + mesh construction helpers.
 
 `jax.shard_map` (with `check_vma`) only exists on newer JAX; older
 releases ship `jax.experimental.shard_map.shard_map` (with `check_rep`).
 Same story for `jax.lax.axis_size`. Everything in this repo goes
 through these wrappers so both work.
+
+``make_mesh`` is the one-liner every sharded entry point and launch
+driver shares: a 1-axis ``Mesh`` over all local devices, named per the
+repo's mesh/axis convention (docs/architecture.md — data-parallel axis
+is called ``"data"`` unless a caller says otherwise).
 """
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def axis_size(axis_name) -> int:
@@ -16,6 +22,27 @@ def axis_size(axis_name) -> int:
         return jax.lax.axis_size(axis_name)
     frame = jax.core.axis_frame(axis_name)
     return frame if isinstance(frame, int) else frame.size
+
+
+def make_mesh(axis: str = "data", devices=None) -> "jax.sharding.Mesh":
+    """1-axis device mesh over ``devices`` (default: all local devices).
+
+    Parameters
+    ----------
+    axis : str
+        Name of the single (data-parallel) mesh axis.
+    devices : sequence of jax.Device or None
+        Devices to place on the axis; None uses ``jax.devices()``.
+
+    Returns
+    -------
+    jax.sharding.Mesh
+        The mesh accepted by ``core.distributed.make_fit_sharded``,
+        ``make_predict_sharded``, and the ``mesh=`` streaming drivers.
+    """
+    from jax.sharding import Mesh
+    return Mesh(np.array(devices if devices is not None
+                         else jax.devices()), (axis,))
 
 if hasattr(jax, "shard_map"):
     def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):

@@ -228,3 +228,231 @@ def test_distributed_geek_pallas_refinement():
         assert int(ks) >= 24
         print("ok purity", pur)
     """, timeout=600))
+
+
+# ---------------------------------------------------------------------------
+# Unified sharded path (core/distributed.py make_fit_sharded /
+# make_predict_sharded, DESIGN.md §10): bit-identity with the in-core
+# fits on 1/2/4-device CPU meshes, checkpoint round-trip, sharded
+# streaming, and the permutation/mesh-size property test.
+# ---------------------------------------------------------------------------
+
+def test_fit_sharded_matches_incore_all_types():
+    """Sharded fit (seed_cap=None) returns a GeekModel whose labels and
+    centers are bit-identical to the in-core fit for every data type,
+    on 1-, 2-, and 4-device meshes built from 4 forced CPU devices."""
+    print(run_with_devices("""
+        import jax, numpy as np
+        from repro.core.distributed import make_fit_sharded
+        from repro.core.geek import GeekConfig, fit_dense, fit_hetero, fit_sparse
+        from repro.data.synthetic import sift_like, geonames_like, url_like
+        from repro.utils.compat import make_mesh
+
+        cfg = GeekConfig(m=16, t=32, silk_l=4, delta=5, k_max=64,
+                         pair_cap=8192)
+        key = jax.random.PRNGKey(1)
+        dkey = jax.random.PRNGKey(0)
+        cases = {
+            "dense": (sift_like(dkey, n=2048, k=16),
+                      lambda d: (d.x,), fit_dense),
+            "hetero": (geonames_like(dkey, n=2048, k=16),
+                       lambda d: (d.x_num, d.x_cat), fit_hetero),
+            "sparse": (url_like(dkey, n=2048, k=16),
+                       lambda d: (d.sets, d.mask), fit_sparse),
+        }
+        for kind, (data, parts_of, fit_incore) in cases.items():
+            parts = parts_of(data)
+            res0, m0 = fit_incore(*parts, key, cfg)
+            for g in (1, 2, 4):
+                mesh = make_mesh(devices=jax.devices()[:g])
+                res1, m1 = make_fit_sharded(mesh, cfg, kind=kind)(
+                    *parts, key=key)
+                assert (np.asarray(res0.labels)
+                        == np.asarray(res1.labels)).all(), (kind, g)
+                assert (np.asarray(m0.centers)
+                        == np.asarray(m1.centers)).all(), (kind, g)
+                assert (np.asarray(m0.radius)
+                        == np.asarray(m1.radius)).all(), (kind, g)
+                assert int(res0.k_star) == int(res1.k_star), (kind, g)
+            print("ok", kind)
+    """, n=4, timeout=600))
+
+
+def test_fit_sharded_ragged_rows_match_incore():
+    """n not divisible by the mesh size: cyclic padding keeps labels,
+    centers, and radii bit-identical to the in-core fit."""
+    print(run_with_devices("""
+        import jax, numpy as np
+        from repro.core.distributed import make_fit_sharded
+        from repro.core.geek import GeekConfig, fit_dense
+        from repro.data.synthetic import sift_like
+        from repro.utils.compat import make_mesh
+
+        cfg = GeekConfig(m=16, t=32, silk_l=4, delta=5, k_max=64,
+                         pair_cap=8192)
+        data = sift_like(jax.random.PRNGKey(0), n=1537, k=12)  # 1537 % 4 != 0
+        key = jax.random.PRNGKey(1)
+        res0, m0 = fit_dense(data.x, key, cfg)
+        res1, m1 = make_fit_sharded(make_mesh(), cfg, kind="dense")(
+            data.x, key=key)
+        assert res1.labels.shape == (1537,)
+        assert (np.asarray(res0.labels) == np.asarray(res1.labels)).all()
+        assert (np.asarray(m0.radius) == np.asarray(m1.radius)).all()
+        # seed ids must stay inside the real dataset even with seed_cap
+        res2, _ = make_fit_sharded(make_mesh(), cfg, kind="dense",
+                                   seed_cap=500)(data.x, key=key)
+        ids = np.asarray(res2.seeds.id)[np.asarray(res2.seeds.valid)]
+        assert ids.min() >= 0 and ids.max() < 1537, (ids.min(), ids.max())
+        print("ok ragged + seed_cap")
+    """, n=4, timeout=600))
+
+
+def test_sharded_model_checkpoint_roundtrip_serves():
+    """Sharded fit -> save_model -> restore_model(mesh=...) ->
+    make_predict_sharded reproduces the fit labels bit-identically
+    (and matches single-device predict on the restored model)."""
+    print(run_with_devices("""
+        import jax, numpy as np, tempfile
+        from repro.checkpoint.manager import restore_model, save_model
+        from repro.core.distributed import make_fit_sharded, make_predict_sharded
+        from repro.core.geek import GeekConfig
+        from repro.core.model import predict
+        from repro.data.synthetic import geonames_like
+        from repro.utils.compat import make_mesh
+
+        mesh = make_mesh()
+        cfg = GeekConfig(m=16, t=32, silk_l=4, delta=5, k_max=64,
+                         pair_cap=8192)
+        data = geonames_like(jax.random.PRNGKey(0), n=2048, k=16)
+        res, model = make_fit_sharded(mesh, cfg, kind="hetero")(
+            data.x_num, data.x_cat, key=jax.random.PRNGKey(1))
+        with tempfile.TemporaryDirectory() as ckpt:
+            save_model(ckpt, model)
+            restored = restore_model(ckpt, mesh=mesh)
+        lab_s, dst_s = make_predict_sharded(mesh)(restored, data.x_num,
+                                                  data.x_cat)
+        assert (np.asarray(lab_s) == np.asarray(res.labels)).all()
+        lab_1, dst_1 = predict(restored,
+                               restored.encode(data.x_num, data.x_cat))
+        assert (np.asarray(lab_s) == np.asarray(lab_1)).all()
+        assert (np.asarray(dst_s) == np.asarray(dst_1)).all()
+        print("ok sharded serve == fit == single-device")
+    """, n=4, timeout=600))
+
+
+def test_sharded_streaming_matches_incore():
+    """fit_*_streaming(mesh=...) — the sharded chunked assignment pass
+    (donated per-device buffers, sentinel-padded ragged tail) stays
+    bit-identical to the in-core fit."""
+    print(run_with_devices("""
+        import jax, numpy as np
+        from repro.core.geek import GeekConfig, fit_dense, fit_sparse
+        from repro.core.streaming import fit_dense_streaming, fit_sparse_streaming
+        from repro.data.synthetic import sift_like, url_like
+        from repro.utils.compat import make_mesh
+
+        mesh = make_mesh()
+        cfg = GeekConfig(m=16, t=32, silk_l=4, delta=5, k_max=64,
+                         pair_cap=8192)
+        key = jax.random.PRNGKey(1)
+        d = sift_like(jax.random.PRNGKey(0), n=1900, k=12)  # ragged tail
+        res0, _ = fit_dense(d.x, key, cfg)
+        res1, _ = fit_dense_streaming(np.asarray(d.x), key, cfg,
+                                      chunk=512, mesh=mesh)
+        assert (np.asarray(res0.labels) == res1.labels).all()
+        s = url_like(jax.random.PRNGKey(0), n=1900, k=12)
+        res2, _ = fit_sparse(s.sets, s.mask, key, cfg)
+        res3, _ = fit_sparse_streaming(
+            (np.asarray(s.sets), np.asarray(s.mask)), key, cfg,
+            chunk=512, mesh=mesh)
+        assert (np.asarray(res2.labels) == res3.labels).all()
+        try:
+            fit_dense_streaming(np.asarray(d.x), key, cfg, chunk=511,
+                                mesh=mesh)
+            raise AssertionError("chunk % g validation missing")
+        except ValueError:
+            pass
+        print("ok sharded streaming")
+    """, n=4, timeout=600))
+
+
+def test_distributed_geek_compressed_refinement():
+    """GeekConfig.compress_collectives routes the refine-sweep partial
+    sums through the int8 quantized all-reduce and preserves quality."""
+    print(run_with_devices("""
+        import jax, numpy as np, collections
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.core.distributed import make_fit_dense
+        from repro.core.geek import GeekConfig
+        from repro.data.synthetic import sift_like
+        mesh = Mesh(np.array(jax.devices()), ("data",))
+        data = sift_like(jax.random.PRNGKey(0), n=4096, k=24)
+        cfg = GeekConfig(m=40, t=32, silk_l=6, delta=5, k_max=64,
+                         pair_cap=8192, refine_sweeps=2,
+                         compress_collectives=True)
+        fit = make_fit_dense(mesh, cfg)
+        x = jax.device_put(data.x, NamedSharding(mesh, P("data", None)))
+        lab, c, cv, ks, rad, ovf = fit(x, jax.random.PRNGKey(1))
+        lab = np.array(lab); true = np.array(data.true_labels)
+        pur = sum(collections.Counter(true[lab==cc]).most_common(1)[0][1]
+                  for cc in set(lab.tolist()))/len(lab)
+        assert pur > 0.95, pur
+        print("ok compressed-refine purity", pur)
+    """, timeout=600))
+
+
+def test_property_sharded_permutation_and_mesh_invariance():
+    """Hypothesis property: for seed_cap=None the sharded fit is
+    equivariant to permutations across shard boundaries (any re-sharding
+    of the rows reproduces the in-core fit on those rows bit-for-bit)
+    and invariant to the mesh size. Runs hypothesis inside the
+    multi-device subprocess; skips when hypothesis or a second device
+    is unavailable."""
+    out = run_with_devices("""
+        import sys
+        try:
+            from hypothesis import given, settings, strategies as st
+        except ImportError:
+            print("NO_HYPOTHESIS"); sys.exit(0)
+        import jax, numpy as np
+        from repro.core.distributed import make_fit_sharded
+        from repro.core.geek import GeekConfig, fit_dense
+        from repro.data.synthetic import sift_like
+        from repro.utils.compat import make_mesh
+
+        if len(jax.devices()) < 2:
+            print("NO_DEVICES"); sys.exit(0)
+        cfg = GeekConfig(m=8, t=16, silk_l=3, delta=4, k_max=32,
+                         pair_cap=4096)
+        key = jax.random.PRNGKey(1)
+        # two fixed row counts so jit/compile caches amortize across
+        # examples; the drawn seed varies the permutation
+        data = {n: np.asarray(sift_like(jax.random.PRNGKey(0), n=n,
+                                        k=8).x) for n in (96, 130)}
+        fits = {g: {n: make_fit_sharded(
+                        make_mesh(devices=jax.devices()[:g]), cfg,
+                        kind="dense") for n in data}
+                for g in (2, 4)}
+
+        @settings(max_examples=8, deadline=None, derandomize=True)
+        @given(st.integers(0, 2**31 - 1), st.sampled_from([96, 130]))
+        def prop(seed, n):
+            rng = np.random.default_rng(seed)
+            xp = data[n][rng.permutation(n)]   # re-shard rows arbitrarily
+            res0, m0 = fit_dense(jax.numpy.asarray(xp), key, cfg)
+            res2, m2 = fits[2][n](xp, key=key)
+            assert (np.asarray(res0.labels) == np.asarray(res2.labels)).all()
+            assert (np.asarray(m0.centers) == np.asarray(m2.centers)).all()
+            res4, m4 = fits[4][n](xp, key=key)
+            assert (np.asarray(res2.labels) == np.asarray(res4.labels)).all()
+            assert (np.asarray(m2.centers) == np.asarray(m4.centers)).all()
+
+        prop()
+        print("ok property held")
+    """, n=4, timeout=600)
+    if "NO_HYPOTHESIS" in out:
+        pytest.skip("hypothesis not installed "
+                    "(pip install -r requirements-dev.txt)")
+    if "NO_DEVICES" in out:
+        pytest.skip("needs >= 2 devices")
+    print(out)
