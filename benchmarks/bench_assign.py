@@ -8,6 +8,12 @@ the numbers are diffable across PRs.
 
 Headline shape (paper-scale assignment): n=65536, d=64, k=1024,
 card=16 (t_cat discretization bins -> 4-bit packed codes, 8 codes/word).
+
+Also reports a seeding comparison (SILK vs k-means++ through the same
+`repro.core.api.GEEK` facade, same k, same one-pass assignment): time
+and mean point-to-center distance per seeder, under the report's
+``seeding`` key. The regression gate only reads ``us_per_call`` /
+``points_per_sec``, so the comparison rows are informational.
 """
 from __future__ import annotations
 
@@ -36,6 +42,47 @@ def _data(n, d, k, card):
     cx = jax.random.normal(jax.random.fold_in(key, 3), (k, d))
     valid = jnp.ones((k,), bool)
     return codes, cents, x, cx, valid
+
+
+def _seeding_comparison(quick: bool) -> dict:
+    """SILK vs k-means++ cost, same k + one-pass assignment (facade).
+
+    Both run through `GEEK(cfg, seeder=...)`: SILK discovers k*, then
+    k-means++ is given that same k so the mean point-to-center distance
+    (the paper's Figure 6 comparison) isolates the seeding strategy.
+    """
+    import time
+
+    import numpy as np
+
+    from repro.core.api import GEEK, DenseData, KMeansPPSeeder
+    from repro.core.geek import GeekConfig
+    from repro.data import synthetic
+
+    n, k_true = (4096, 32) if quick else (32768, 64)
+    data = synthetic.sift_like(jax.random.PRNGKey(0), n=n, k=k_true)
+    cfg = GeekConfig(m=16, t=32, silk_l=4, delta=5, k_max=256,
+                     pair_cap=1 << 15)
+    out: dict[str, dict] = {}
+
+    def one(name, est):
+        est.fit(DenseData(data.x), jax.random.PRNGKey(1))  # compile
+        t0 = time.time()
+        est.fit(DenseData(data.x), jax.random.PRNGKey(1))
+        jax.block_until_ready(est.result_.labels)
+        dt = time.time() - t0
+        cost = float(np.mean(np.asarray(est.result_.dists)))
+        out[name] = {"k": int(est.result_.k_star),
+                     "mean_dist": round(cost, 4),
+                     "fit_ms": round(dt * 1e3, 1)}
+        emit(f"seeding/{name}", dt,
+             f"k={out[name]['k']} mean_dist={cost:.4f}")
+
+    silk = GEEK(cfg)
+    one("silk", silk)
+    k_star = int(silk.result_.k_star)
+    one("kmeanspp", GEEK(cfg, seeder=KMeansPPSeeder(k_star)))
+    return out
 
 
 def run(quick: bool = False, out: str | None = None,
@@ -68,6 +115,8 @@ def run(quick: bool = False, out: str | None = None,
     speedup = eq / fastest
     emit("assign/packed_speedup", 0.0, f"{speedup:.2f}x")
 
+    seeding = _seeding_comparison(quick)
+
     report = {
         "host": {
             "backend": jax.default_backend(),
@@ -82,6 +131,7 @@ def run(quick: bool = False, out: str | None = None,
             "hamming_onehot": round(eq / results["hamming_onehot"], 2),
             "best": round(speedup, 2),
         },
+        "seeding": seeding,
     }
     if write_json:
         out = out or os.path.join(os.path.dirname(os.path.dirname(

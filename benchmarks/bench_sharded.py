@@ -3,8 +3,8 @@
 Tracks the two multi-device hot paths of DESIGN.md §10 in one report:
 
   - ``fit_sharded/{dense,hetero,sparse}`` — end-to-end
-    ``make_fit_sharded`` wall time (reservoir discovery + per-device
-    one-pass assignment), as points/sec;
+    ``GEEK.fit(data, key, mesh=…)`` wall time (reservoir discovery +
+    per-device one-pass assignment), as points/sec;
   - ``predict_sharded/batch=N`` — ``make_predict_sharded`` serving
     throughput vs batch size (dense L2 model).
 
@@ -31,7 +31,8 @@ import platform
 import jax
 
 from benchmarks.common import emit, timeit
-from repro.core.distributed import make_fit_sharded, make_predict_sharded
+from repro.core.api import GEEK, DenseData, HeteroData, SparseData
+from repro.core.distributed import make_predict_sharded
 from repro.core.geek import GeekConfig
 from repro.data import synthetic
 from repro.utils.compat import make_mesh
@@ -65,19 +66,18 @@ def run(quick: bool = False, out: str | None = None,
     hetero = synthetic.geonames_like(key, n=n, k=k)
     sparse = synthetic.url_like(key, n=n, k=k)
     fits = {
-        "dense": (make_fit_sharded(mesh, cfg, kind="dense"), (dense.x,)),
-        "hetero": (make_fit_sharded(mesh, cfg, kind="hetero"),
-                   (hetero.x_num, hetero.x_cat)),
-        "sparse": (make_fit_sharded(mesh, cfg, kind="sparse"),
-                   (sparse.sets, sparse.mask)),
+        "dense": DenseData(dense.x),
+        "hetero": HeteroData(hetero.x_num, hetero.x_cat),
+        "sparse": SparseData(sparse.sets, sparse.mask),
     }
     fitted = {}  # capture each warmup's model — no extra untimed fit
-    for name, (fit, parts) in fits.items():
-        def call(f=fit, p=parts, name=name):
-            """One timed fit; stash the first result's model."""
-            out = f(*p, key=fkey)
-            fitted.setdefault(name, out[1])
-            return out
+    for name, dataset in fits.items():
+        est = GEEK(cfg)
+        def call(est=est, d=dataset, name=name):
+            """One timed facade fit; stash the first result's model."""
+            model = est.fit(d, fkey, mesh=mesh)
+            fitted.setdefault(name, model)
+            return est.result_
         sec = timeit(call, iters=2)
         pps = n / sec
         points_per_sec[f"fit_sharded/{name}"] = {str(n): round(pps)}

@@ -1,5 +1,6 @@
 """Multi-device GEEK quickstart: sharded fit -> checkpoint -> restore
--> sharded serving, on a 2-device CPU mesh forced via XLA_FLAGS.
+-> sharded serving, on a 2-device CPU mesh forced via XLA_FLAGS —
+everything through the ONE `repro.GEEK` facade.
 
 Run it anywhere (CI uses it as a smoke test — no accelerator needed):
 
@@ -20,10 +21,8 @@ os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.checkpoint.manager import restore_model, save_model  # noqa: E402
-from repro.core.distributed import (make_fit_sharded,  # noqa: E402
-                                    make_predict_sharded)
-from repro.core.geek import GeekConfig  # noqa: E402
+from repro import (GEEK, GeekConfig, HeteroData,  # noqa: E402
+                   restore_model, save_model)
 from repro.data.synthetic import geonames_like  # noqa: E402
 from repro.utils.compat import make_mesh  # noqa: E402
 
@@ -38,26 +37,31 @@ def main() -> None:
     data = geonames_like(jax.random.PRNGKey(0), n=4096, k=24)
     cfg = GeekConfig(m=16, t=32, silk_l=4, delta=5, k_max=64,
                      pair_cap=1 << 13)
+    est = GEEK(cfg)
 
     # 1. sharded fit: rows split over the mesh, discovery on the
     #    all-gathered reservoir -> bit-identical to the in-core fit
-    fit = make_fit_sharded(mesh, cfg, kind="hetero")
-    result, model = fit(data.x_num, data.x_cat, key=jax.random.PRNGKey(1))
-    print(f"fit: k*={int(result.k_star)} on n={result.labels.shape[0]} rows")
+    model = est.fit(HeteroData(data.x_num, data.x_cat),
+                    jax.random.PRNGKey(1), mesh=mesh)
+    result = est.result_
+    print(f"fit: k*={int(result.k_star)} on n={result.labels.shape[0]} rows "
+          f"(pipeline: {model.bucketer_id}/{model.seeder_id})")
 
     with tempfile.TemporaryDirectory() as ckpt:
-        # 2. checkpoint the model (centers + transform arrays + manifest)
+        # 2. checkpoint the model (centers + transform arrays + manifest,
+        #    incl. the bucketer/seeder identity)
         save_model(ckpt, model)
 
         # 3. restore REPLICATED onto the mesh, ready for sharded serving
         served = restore_model(ckpt, mesh=mesh)
         print(f"restored: metric={served.metric} "
-              f"transform={served.transform.kind}")
+              f"transform={served.transform.kind} "
+              f"seeder={served.seeder_id}")
 
         # 4. sharded predict on raw traffic — each device codes+assigns
         #    its row shard with the persisted transform
-        predict_sharded = make_predict_sharded(mesh)
-        labels, dists = predict_sharded(served, data.x_num, data.x_cat)
+        labels, dists = est.predict(HeteroData(data.x_num, data.x_cat),
+                                    model=served, mesh=mesh)
 
     same = bool((np.asarray(labels) == np.asarray(result.labels)).all())
     print(f"sharded predict on the fit data reproduces fit labels: {same}")

@@ -1,0 +1,62 @@
+"""Generic seeding quickstart: ONE facade, swappable seeding stage.
+
+The paper's claim is that GEEK is generic — any seeding method can sit
+behind the bucket layer. This example fits the SAME dense dataset three
+ways through `repro.GEEK`, swapping only the Seeder protocol object:
+
+  - SILK (default)          — k* DISCOVERED from similar buckets
+  - KMeansPPSeeder          — classic k-means++ D^2 sampling (k given)
+  - ScalableKMeansPPSeeder  — k-means|| (Bahmani et al.), oversample+reduce
+
+Everything else — transform, bucket layer, one-pass kernel dispatch,
+checkpointing, serving — is identical, which is the point. CI runs this
+as a smoke test.
+
+  PYTHONPATH=src python examples/generic_seeding.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro import (GEEK, DenseData, GeekConfig, KMeansPPSeeder,
+                   ScalableKMeansPPSeeder)
+from repro.data import synthetic
+
+
+def main() -> None:
+    """Fit one dataset with three seeders, compare cost + k."""
+    data = synthetic.sift_like(jax.random.PRNGKey(0), n=8192, k=32)
+    cfg = GeekConfig(m=16, t=32, silk_l=4, delta=5, k_max=128,
+                     pair_cap=1 << 14)
+
+    # 1. SILK: k* is discovered, not pre-specified
+    est = GEEK(cfg)
+    est.fit(DenseData(data.x), jax.random.PRNGKey(1))
+    k_star = int(est.result_.k_star)
+    print(f"[silk              ] k*={k_star} (discovered) "
+          f"mean_dist={float(np.mean(np.asarray(est.result_.dists))):.4f}")
+
+    # 2./3. the baseline seeders, given SILK's k — same pipeline, same
+    # one-pass assignment, only the seeding stage swapped
+    for seeder in (KMeansPPSeeder(k_star), ScalableKMeansPPSeeder(k_star)):
+        est = GEEK(cfg, seeder=seeder)
+        t0 = time.time()
+        model = est.fit(DenseData(data.x), jax.random.PRNGKey(1))
+        jax.block_until_ready(est.result_.labels)
+        cost = float(np.mean(np.asarray(est.result_.dists)))
+        print(f"[{seeder.name:18s}] k={int(est.result_.k_star)} "
+              f"mean_dist={cost:.4f} time={time.time()-t0:.2f}s "
+              f"(model.seeder_id={model.seeder_id!r})")
+
+    # the swapped-seeder model serves like any other GeekModel
+    labels, _ = est.predict(DenseData(data.x[:256]))
+    agree = float((np.asarray(labels)
+                   == np.asarray(est.result_.labels)[:256]).mean())
+    print(f"predict on fit data reproduces fit labels: {agree:.3f}")
+    if agree != 1.0:
+        raise SystemExit("predict diverged from fit labels")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,9 +9,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import (GEEK, DenseData, GeekConfig, HeteroData, SparseData,
+                   predict)
 from repro.core import baselines
-from repro.core.geek import GeekConfig, fit_dense, fit_hetero, fit_sparse
-from repro.core.model import predict
 from repro.data import synthetic
 
 
@@ -34,7 +34,9 @@ def main():
     print("== dense (Sift-like, Euclidean) ==")
     d = synthetic.sift_like(key, n=4000, k=32)
     t0 = time.time()
-    res, model = fit_dense(d.x, jax.random.PRNGKey(1), cfg)
+    est = GEEK(cfg)
+    model = est.fit(DenseData(d.x), jax.random.PRNGKey(1))
+    res = est.result_
     jax.block_until_ready(res.labels)
     dense_labels = np.array(res.labels)
     print(f"  GEEK: k*={int(res.k_star)} (discovered, not pre-specified) "
@@ -48,7 +50,9 @@ def main():
 
     print("== heterogeneous (GeoNames-like, 1-Jaccard) ==")
     h = synthetic.geonames_like(key, n=3000, k=16)
-    res, hmodel = fit_hetero(h.x_num, h.x_cat, jax.random.PRNGKey(1), cfg)
+    est = GEEK(cfg)
+    hmodel = est.fit(HeteroData(h.x_num, h.x_cat), jax.random.PRNGKey(1))
+    res = est.result_
     hetero_labels = np.array(res.labels)
     print(f"  GEEK: k*={int(res.k_star)} "
           f"purity={purity(res.labels, h.true_labels):.3f} "
@@ -56,7 +60,9 @@ def main():
 
     print("== sparse (URL-like, Jaccard via DOPH) ==")
     s = synthetic.url_like(key, n=2000, k=16)
-    res, _ = fit_sparse(s.sets, s.mask, jax.random.PRNGKey(1), cfg)
+    est = GEEK(cfg)
+    est.fit(SparseData(s.sets, s.mask), jax.random.PRNGKey(1))
+    res = est.result_
     print(f"  GEEK: k*={int(res.k_star)} "
           f"purity={purity(res.labels, s.true_labels):.3f} "
           f"mean_radius={mean_radius(res):.4f}")

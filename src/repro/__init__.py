@@ -1,0 +1,50 @@
+"""GEEK — a generic distributed clustering framework, reproduced in JAX.
+
+One estimator, any data kind, any execution mode (DESIGN.md §11)::
+
+    from repro import GEEK, DenseData, GeekConfig
+
+    est = GEEK(GeekConfig(k_max=256))
+    model = est.fit(DenseData(x), key)              # in-core
+    model = est.fit(DenseData(x), key, chunk=8192)  # streaming
+    model = est.fit(DenseData(x), key, mesh=mesh)   # sharded
+    labels, dists = est.predict(DenseData(new_x))   # serving
+
+This top-level namespace is the supported public API, locked by
+``tests/test_api_surface.py``. Everything else (``repro.core.*``
+internals, ``repro.kernels``, the LM training stack) is
+implementation detail and may change without deprecation.
+"""
+from repro.checkpoint.manager import restore_model, save_model  # noqa: F401
+from repro.core.api import (  # noqa: F401
+    GEEK,
+    DenseData,
+    HeteroData,
+    KernelAssigner,
+    KMeansPPSeeder,
+    LSHBucketer,
+    ScalableKMeansPPSeeder,
+    SILKSeeder,
+    SparseData,
+)
+from repro.core.geek import GeekConfig, GeekResult  # noqa: F401
+from repro.core.model import GeekModel, predict  # noqa: F401
+
+#: the supported public surface (sorted; locked by tests/test_api_surface.py)
+__all__ = [
+    "DenseData",
+    "GEEK",
+    "GeekConfig",
+    "GeekModel",
+    "GeekResult",
+    "HeteroData",
+    "KMeansPPSeeder",
+    "KernelAssigner",
+    "LSHBucketer",
+    "SILKSeeder",
+    "ScalableKMeansPPSeeder",
+    "SparseData",
+    "predict",
+    "restore_model",
+    "save_model",
+]

@@ -221,4 +221,7 @@ def restore_model(directory: str, *, step: int | None = None,
         jax.numpy.asarray(arrays["radius"]),
         metric=meta["metric"], impl=meta["impl"],
         code_bits=meta["code_bits"], assign_block=meta["assign_block"],
-        use_pallas=meta["use_pallas"], transform=transform)
+        use_pallas=meta["use_pallas"], transform=transform,
+        # pipeline provenance (facade-era manifests; "" for older ones)
+        bucketer_id=meta.get("bucketer_id", ""),
+        seeder_id=meta.get("seeder_id", ""))

@@ -1,4 +1,24 @@
-"""GEEK core: the paper's contribution as composable JAX modules."""
+"""GEEK core: the paper's contribution as composable JAX modules.
+
+The supported surface is the facade (``repro.core.api``) plus the
+shared config/result/model types; it is locked by
+``tests/test_api_surface.py`` (``__all__`` below) so accidental surface
+growth fails CI. The legacy ``fit_*`` entry points are deprecated shims
+over the facade and are intentionally NOT part of ``__all__``.
+"""
+from repro.core.api import (  # noqa: F401
+    GEEK,
+    DenseData,
+    HeteroData,
+    KernelAssigner,
+    KMeansPPSeeder,
+    LSHBucketer,
+    ScalableKMeansPPSeeder,
+    SILKSeeder,
+    SparseData,
+    as_dataset,
+    discover,
+)
 from repro.core.geek import (  # noqa: F401
     GeekConfig,
     GeekResult,
@@ -25,3 +45,30 @@ from repro.core.transform import (  # noqa: F401
     IdentityTransform,
     SparseTransform,
 )
+
+#: the supported public surface (sorted; locked by tests/test_api_surface.py)
+__all__ = [
+    "DenseData",
+    "GEEK",
+    "GeekConfig",
+    "GeekModel",
+    "GeekResult",
+    "HeteroData",
+    "HeteroTransform",
+    "IdentityTransform",
+    "KMeansPPSeeder",
+    "KernelAssigner",
+    "LSHBucketer",
+    "NumericDiscretizer",
+    "SILKSeeder",
+    "ScalableKMeansPPSeeder",
+    "SeedPairs",
+    "Seeds",
+    "SparseData",
+    "SparseTransform",
+    "as_dataset",
+    "build_model",
+    "discover",
+    "predict",
+    "silk_seeding",
+]

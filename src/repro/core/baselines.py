@@ -18,6 +18,8 @@ from repro.core import assign as assign_mod
 
 
 class KMeansResult(NamedTuple):
+    """Baseline clustering output (labels + centers + diagnostics)."""
+
     labels: jax.Array
     dists: jax.Array
     centers: jax.Array
@@ -31,29 +33,152 @@ class KMeansResult(NamedTuple):
 # ---------------------------------------------------------------------------
 
 def random_seeds(x: jax.Array, k: int, key: jax.Array) -> jax.Array:
+    """k uniformly sampled rows of x (without replacement)."""
     idx = jax.random.choice(key, x.shape[0], (k,), replace=False)
     return x[idx]
 
 
-def kmeanspp_seeds(x: jax.Array, k: int, key: jax.Array) -> jax.Array:
-    """k-means++ D^2 sampling (Arthur & Vassilvitskii '07): O(ndk), k rounds."""
+def kmeanspp_indices(x: jax.Array, k: int, key: jax.Array) -> jax.Array:
+    """k-means++ D^2 sampling, returning ROW INDICES into x.
+
+    Same sampling (and key consumption) as ``kmeanspp_seeds`` — the
+    index form is what the ``repro.core.api`` Seeder protocol needs,
+    since GEEK's ``Seeds`` contract names seed points by dataset row id.
+
+    Parameters
+    ----------
+    x : (n, d) jax.Array
+        Dense rows (Euclidean space).
+    k : int
+        Number of seeds to draw.
+    key : jax.Array
+        PRNG key.
+
+    Returns
+    -------
+    jax.Array
+        (k,) int32 row indices of the chosen seed points.
+    """
     n = x.shape[0]
     xsq = jnp.sum(x * x, axis=-1)
     k0, key = jax.random.split(key)
-    first = x[jax.random.randint(k0, (), 0, n)]
+    first = jax.random.randint(k0, (), 0, n)
 
     def step(d2, subkey):
+        """One D^2-sampling round: draw a point, tighten distances."""
         probs = jnp.maximum(d2, 0.0)
         probs = probs / jnp.maximum(probs.sum(), 1e-30)
         idx = jax.random.choice(subkey, n, (), p=probs)
         c = x[idx]
         d2_new = jnp.minimum(d2, xsq - 2.0 * (x @ c) + jnp.sum(c * c))
-        return d2_new, c
+        return d2_new, idx
 
-    d2 = xsq - 2.0 * (x @ first) + jnp.sum(first * first)
+    c0 = x[first]
+    d2 = xsq - 2.0 * (x @ c0) + jnp.sum(c0 * c0)
     keys = jax.random.split(key, k - 1)
     _, rest = jax.lax.scan(step, d2, keys)
-    return jnp.concatenate([first[None], rest], axis=0)
+    return jnp.concatenate([first[None], rest]).astype(jnp.int32)
+
+
+def kmeanspp_seeds(x: jax.Array, k: int, key: jax.Array) -> jax.Array:
+    """k-means++ D^2 sampling (Arthur & Vassilvitskii '07): O(ndk), k rounds."""
+    return x[kmeanspp_indices(x, k, key)]
+
+
+def _weighted_kmeanspp(cand: jax.Array, w: jax.Array, k: int,
+                       key: jax.Array) -> jax.Array:
+    """Weighted k-means++ over a candidate set; returns candidate indices.
+
+    The reduction step of k-means|| — each candidate's D^2 contribution
+    is scaled by its weight (the number of data points it represents).
+    """
+    m = cand.shape[0]
+    csq = jnp.sum(cand * cand, axis=-1)
+    wf = w.astype(cand.dtype)
+    k0, key = jax.random.split(key)
+    first = jax.random.choice(k0, m, (), p=wf / jnp.maximum(wf.sum(), 1e-30))
+
+    def step(d2, subkey):
+        """One weighted D^2 round over the candidate set."""
+        probs = jnp.maximum(d2, 0.0) * wf
+        probs = probs / jnp.maximum(probs.sum(), 1e-30)
+        idx = jax.random.choice(subkey, m, (), p=probs)
+        c = cand[idx]
+        d2_new = jnp.minimum(d2, csq - 2.0 * (cand @ c) + jnp.sum(c * c))
+        return d2_new, idx
+
+    c0 = cand[first]
+    d2 = csq - 2.0 * (cand @ c0) + jnp.sum(c0 * c0)
+    keys = jax.random.split(key, k - 1)
+    _, rest = jax.lax.scan(step, d2, keys)
+    return jnp.concatenate([first[None], rest]).astype(jnp.int32)
+
+
+def scalable_kmeanspp_indices(x: jax.Array, k: int, key: jax.Array, *,
+                              rounds: int = 5,
+                              oversample: int | None = None) -> jax.Array:
+    """k-means|| (Bahmani et al. '12) seeding, returning ROW INDICES.
+
+    Instead of k strictly sequential D^2 draws, each of ``rounds``
+    rounds samples ``oversample`` points at once (D^2-proportional,
+    with replacement — fixed shapes, so the whole thing jits), then the
+    ~``rounds * oversample`` candidates are weighted by how many data
+    points they attract and reduced to k via weighted k-means++. The
+    paper's motivation carries over: rounds, not k, sequential passes.
+
+    Parameters
+    ----------
+    x : (n, d) jax.Array
+        Dense rows (Euclidean space).
+    k : int
+        Number of seeds to produce.
+    key : jax.Array
+        PRNG key.
+    rounds : int
+        Number of oversampling rounds (paper: O(log n) in theory, ~5 in
+        practice).
+    oversample : int or None
+        Points drawn per round (paper: l = O(k); default 2k).
+
+    Returns
+    -------
+    jax.Array
+        (k,) int32 row indices of the chosen seed points.
+    """
+    n = x.shape[0]
+    l = 2 * k if oversample is None else oversample
+    xsq = jnp.sum(x * x, axis=-1)
+    k0, key = jax.random.split(key)
+    first = jax.random.randint(k0, (), 0, n)
+
+    c0 = x[first]
+    d2 = xsq - 2.0 * (x @ c0) + jnp.sum(c0 * c0)
+    cand = [first[None].astype(jnp.int32)]
+    for r in range(rounds):
+        kr = jax.random.fold_in(key, r)
+        probs = jnp.maximum(d2, 0.0)
+        probs = probs / jnp.maximum(probs.sum(), 1e-30)
+        idx = jax.random.choice(kr, n, (l,), p=probs).astype(jnp.int32)
+        cand.append(idx)
+        newc = x[idx]                                    # (l, d)
+        # blocked nearest-candidate pass — never materializes (n, l)
+        _, d2_new = assign_mod.assign_l2(x, newc, jnp.ones((l,), bool))
+        d2 = jnp.minimum(d2, d2_new)
+    cand_idx = jnp.concatenate(cand)                     # (1 + rounds*l,)
+
+    # weight candidates by attraction (blocked, never (n, C) in memory);
+    # duplicates collapse onto the first occurrence (argmin tie-break),
+    # leaving the rest weight 0
+    cvec = x[cand_idx]
+    nearest, _ = assign_mod.assign_l2(
+        x, cvec, jnp.ones((cand_idx.shape[0],), bool))
+    w = jax.ops.segment_sum(jnp.ones((n,), jnp.int32), nearest,
+                            num_segments=cand_idx.shape[0])
+    # dedicated subkey: the rounds consumed fold_in(key, 0..rounds-1),
+    # so the reduction must not re-split the raw key (overlapping
+    # counter blocks under threefry)
+    chosen = _weighted_kmeanspp(cvec, w, k, jax.random.fold_in(key, rounds))
+    return cand_idx[chosen]
 
 
 # ---------------------------------------------------------------------------
@@ -63,6 +188,7 @@ def kmeanspp_seeds(x: jax.Array, k: int, key: jax.Array) -> jax.Array:
 @functools.partial(jax.jit, static_argnames=("k", "iters", "init", "block"))
 def lloyd(x: jax.Array, k: int, key: jax.Array, *, iters: int = 25,
           init: str = "random", block: int = 4096) -> KMeansResult:
+    """Lloyd's k-means: ``iters`` full assign+update sweeps."""
     if init == "random":
         centers = random_seeds(x, k, key)
     elif init == "kmeans++":
@@ -73,10 +199,12 @@ def lloyd(x: jax.Array, k: int, key: jax.Array, *, iters: int = 25,
 
 
 def _lloyd_iterate(x, centers, iters, block):
+    """Run ``iters`` Lloyd sweeps from the given centers."""
     k = centers.shape[0]
     valid0 = jnp.ones((k,), bool)
 
     def body(_, carry):
+        """One Lloyd sweep: assign all points, recompute centroids."""
         centers, valid = carry
         labels, _ = assign_mod.assign_l2(x, centers, valid, block=block)
         sums = jax.ops.segment_sum(x, labels, num_segments=k)
@@ -118,6 +246,7 @@ def sampled_kmeans(x: jax.Array, k: int, key: jax.Array, *, iters: int = 25,
 @functools.partial(jax.jit, static_argnames=("k", "iters", "block"))
 def kmodes(codes: jax.Array, k: int, key: jax.Array, *, iters: int = 10,
            block: int = 4096) -> KMeansResult:
+    """k-modes (Huang '98) over categorical codes — Hamming Lloyd."""
     n, d = codes.shape
     idx = jax.random.choice(key, n, (k,), replace=False)
     centers = codes[idx]
@@ -126,6 +255,7 @@ def kmodes(codes: jax.Array, k: int, key: jax.Array, *, iters: int = 10,
     from repro.core.silk import Seeds  # mode update reuses the seed machinery
 
     def body(_, carry):
+        """One k-modes sweep: assign all points, recompute modes."""
         centers, valid = carry
         labels, _ = assign_mod.assign_hamming(codes, centers, valid, block=block)
         seeds = Seeds(group=labels, id=jnp.arange(n, dtype=jnp.int32),
@@ -147,8 +277,18 @@ def kmodes(codes: jax.Array, k: int, key: jax.Array, *, iters: int = 10,
 @functools.partial(jax.jit, static_argnames=("k", "method", "block"))
 def seed_then_assign(x: jax.Array, k: int, key: jax.Array, *,
                      method: str = "kmeans++", block: int = 4096) -> KMeansResult:
+    """Seed with ``method``, then ONE assignment pass (paper Figure 6).
+
+    The GEEK-comparable baseline shape: no Lloyd iterations, just
+    seeding cost + the same one-pass assignment GEEK pays. The facade
+    equivalent is ``GEEK(cfg, seeder=KMeansPPSeeder(k))`` — see
+    ``repro.core.api``, which routes these seeders through the full
+    estimator (model out, checkpointable, sharded serving).
+    """
     if method == "kmeans++":
         centers = kmeanspp_seeds(x, k, key)
+    elif method == "scalable-kmeans++":
+        centers = x[scalable_kmeanspp_indices(x, k, key)]
     elif method == "random":
         centers = random_seeds(x, k, key)
     else:

@@ -3,16 +3,21 @@ table-sync variant (paper §3.4, DESIGN.md §3/§10).
 
 Two complementary distributed paths live here:
 
-1. **Unified sharded fit** (``make_fit_sharded``) — the peer of the
-   in-core (``core.geek``) and streaming (``core.streaming``) paths.
-   All three data types (dense / hetero / sparse) run the same program:
+1. **Unified sharded fit** — the peer of the in-core and streaming
+   paths, reached through the facade: ``GEEK(cfg).fit(data, key,
+   mesh=…)`` (``repro.core.api``, which owns the sharded fit body and
+   routes it through the same Bucketer/Seeder/Assigner protocols as
+   every other mode). All three data types run the same program:
    per-device coding through the persisted ``Transform`` pipeline
-   (``model.encode``), SILK discovery on an all-gathered device-local
+   (``model.encode``), discovery on an all-gathered device-local
    reservoir (bit-identical to the in-core seeds when the reservoir
    covers all points — the same contract as ``core.streaming``), and a
    local one-pass assignment through the shared ``predict_*`` dispatch.
    It returns a canonical ``GeekModel`` that round-trips the checkpoint
-   manager and serves through ``make_predict_sharded``.
+   manager and serves through ``make_predict_sharded``. This module
+   keeps the sharding *machinery* (``_pad_and_shard``,
+   ``_gather_rows``, ``make_predict_sharded``) plus the deprecated
+   ``make_fit_sharded`` shim over the facade.
 
 2. **Table-sync dense fit** (``make_fit_dense``) — the paper's MPI
    design mapped onto JAX collectives, stage by stage:
@@ -47,7 +52,6 @@ features replicated; models and seeds are replicated ``P()``.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 
 import jax
@@ -59,17 +63,12 @@ from jax.sharding import PartitionSpec as P
 from repro.core import assign as assign_mod
 from repro.core import lsh
 from repro.core.buckets import BucketTables
-from repro.core.geek import (GeekConfig, GeekResult, _seed_codes, _seed_dense,
-                             discover_codes, discover_dense, hetero_code_bits,
-                             make_hetero_transform, make_sparse_transform)
-from repro.core.model import GeekModel, predict, predict_hamming, predict_l2
-from repro.core.silk import Seeds, select_top_groups, silk_round
+from repro.core.geek import (N_PARTS, GeekConfig, _reinsert_none,
+                             _warn_deprecated)
+from repro.core.model import GeekModel, predict
+from repro.core.silk import select_top_groups, silk_round
 from repro.utils.compat import axis_size, shard_map
 from repro.utils.hashing import derive_hash_keys
-
-#: data-type kind -> number of raw input parts:
-#: dense = (x,), hetero = (x_num, x_cat), sparse = (sets, mask)
-N_PARTS = {"dense": 1, "hetero": 2, "sparse": 2}
 
 
 def _pad_and_shard(present: list, g: int, mesh, axis: str):
@@ -93,14 +92,8 @@ def _pad_and_shard(present: list, g: int, mesh, axis: str):
 
 
 # ---------------------------------------------------------------------------
-# Unified sharded fit — all three data types, GeekModel out
+# Unified sharded fit — machinery + the deprecated entry-point shim
 # ---------------------------------------------------------------------------
-
-def _reinsert_none(present: tuple, none_pattern: tuple[bool, ...]) -> tuple:
-    """Re-expand a filtered part tuple to its static None pattern."""
-    it = iter(present)
-    return tuple(None if absent else next(it) for absent in none_pattern)
-
 
 def _gather_rows(a_local: jax.Array, axis: str, keep: int | None) -> jax.Array:
     """All-gather per-device row blocks into one (g*s, d) array.
@@ -115,109 +108,22 @@ def _gather_rows(a_local: jax.Array, axis: str, keep: int | None) -> jax.Array:
     return out if keep is None else out[:keep]
 
 
-@functools.lru_cache(maxsize=None)
-def _build_fit_sharded(mesh, cfg: GeekConfig, kind: str, axis: str,
-                       none_pattern: tuple[bool, ...], n: int, nl: int,
-                       stride: int):
-    """Compile the per-(shape, mesh, config) sharded fit program.
-
-    Cached so repeated ``fit`` calls at the same shape reuse one
-    compiled executable. ``n`` is the true (pre-padding) row count,
-    ``nl`` the per-device shard rows, ``stride`` the reservoir stride
-    (1 = the reservoir is the whole dataset).
-    """
-    s = -(-nl // stride)                 # per-device reservoir rows
-    keep = n if stride == 1 else None    # exact slice only at stride 1
-
-    def _remap_seed_ids(seeds: Seeds) -> Seeds:
-        # Seeds.id indexes rows of the gathered reservoir; map back to
-        # dataset rows (device q, sample j -> row q*nl + j*stride). The
-        # pad is cyclic, so padded row i holds dataset row i % n.
-        if stride == 1:
-            return seeds                 # gathered order == dataset order
-        gid = ((seeds.id // s) * nl + (seeds.id % s) * stride) % n
-        return seeds._replace(id=jnp.where(seeds.valid, gid, seeds.id))
-
-    def body(key, *present):
-        """Per-device fit body: gather reservoir, discover, assign shard."""
-        parts = _reinsert_none(present, none_pattern)
-        if kind == "dense":
-            (x_local,) = parts
-            x_res = _gather_rows(x_local[::stride], axis, keep)
-            seeds, overflow = discover_dense(x_res, key, cfg)
-            _, _, model = _seed_dense(x_res, seeds, cfg)
-            labels, dists = predict_l2(model, x_local)
-        elif kind == "hetero":
-            num_l, cat_l = parts
-            res = tuple(None if p is None
-                        else _gather_rows(p[::stride], axis, keep)
-                        for p in parts)
-            k_item, k_sig, k_silk = jax.random.split(key, 3)
-            transform = make_hetero_transform(res[0], cfg.t_cat)
-            codes_res = transform(res[0], res[1])
-            seeds, overflow = discover_codes(codes_res, k_item, k_sig,
-                                             k_silk, cfg)
-            model = _seed_codes(codes_res, seeds, cfg,
-                                bits=hetero_code_bits(cfg, res[1]),
-                                transform=transform)
-            labels, dists = predict_hamming(model,
-                                            model.encode(num_l, cat_l))
-        else:  # sparse — code locally first, gather the narrow codes
-            sets_l, mask_l = parts
-            transform = make_sparse_transform(key, cfg)
-            _, k_item, k_sig, k_silk = jax.random.split(key, 4)
-            codes_local = transform(sets_l, mask_l)
-            codes_res = _gather_rows(codes_local[::stride], axis, keep)
-            seeds, overflow = discover_codes(codes_res, k_item, k_sig,
-                                             k_silk, cfg)
-            model = _seed_codes(codes_res, seeds, cfg, bits=16,
-                                transform=transform)
-            labels, dists = predict_hamming(model, codes_local)
-
-        radius = jax.lax.pmax(
-            assign_mod.cluster_radius(dists, labels, cfg.k_max), axis)
-        model = dataclasses.replace(model, radius=radius)
-        return labels, dists, model, _remap_seed_ids(seeds), overflow
-
-    n_present = sum(1 for absent in none_pattern if not absent)
-    mapped = shard_map(
-        body, mesh=mesh,
-        in_specs=(P(),) + (P(axis, None),) * n_present,
-        out_specs=(P(axis), P(axis), P(), P(), P()),
-        check_vma=False)
-    return jax.jit(mapped)
-
-
 def make_fit_sharded(mesh, cfg: GeekConfig, *, kind: str = "dense",
                      axis: str = "data", seed_cap: int | None = None):
-    """Build the unified multi-device fit for one data type.
+    """Deprecated shim: ``GEEK(cfg).fit(data, key, mesh=…)``.
 
-    The returned callable runs the whole GEEK pipeline with the data
-    row-sharded across ``mesh``: discovery on an all-gathered
-    device-local reservoir (replicated, so seeds are computed once and
-    identically everywhere), then a per-device one-pass assignment
-    through the shared ``predict_*`` dispatch. With ``seed_cap=None``
-    the reservoir is the entire dataset and labels/centers are
-    **bit-identical** to the in-core ``fit_dense`` / ``fit_hetero`` /
-    ``fit_sparse`` — the same contract ``core.streaming`` provides,
-    here with the assignment pass (and its memory) split g ways.
+    Builds the unified multi-device fit for one data type: discovery on
+    an all-gathered device-local reservoir (replicated, so seeds are
+    computed once and identically everywhere), then a per-device
+    one-pass assignment through the shared kernel dispatch. With
+    ``seed_cap=None`` the reservoir is the entire dataset and
+    labels/centers are **bit-identical** to the in-core fit — the same
+    contract ``core.streaming`` provides, here with the assignment pass
+    (and its memory) split g ways. The facade form takes the dataset
+    spec instead of ``kind``::
 
-    Parameters
-    ----------
-    mesh : jax.sharding.Mesh
-        1-axis device mesh (see ``utils.compat.make_mesh``).
-    cfg : GeekConfig
-        Static pipeline configuration (hashed into the compile cache).
-    kind : {"dense", "hetero", "sparse"}
-        Data type; selects the transform + discovery pipeline.
-    axis : str
-        Mesh axis name the data is sharded over.
-    seed_cap : int or None
-        Max reservoir rows for discovery. None gathers every row
-        (memory: the full (n, d) dataset materializes replicated on
-        every device for the discovery phase only). An int caps the
-        gather at ~seed_cap stride-sampled rows per the streaming
-        semantics — approximate seeds, bounded memory.
+        GEEK(cfg).fit(HeteroData(x_num, x_cat), key, mesh=mesh,
+                      mesh_axis=axis, seed_cap=seed_cap)
 
     Returns
     -------
@@ -228,42 +134,27 @@ def make_fit_sharded(mesh, cfg: GeekConfig, *, kind: str = "dense",
         of the mesh size with cyclic copies of the leading rows (pure
         duplicates — they cannot perturb radii) and sharded
         ``P(axis, None)``; outputs are sliced back to n. The model and
-        result arrays come back replicated.
-
-    Notes
-    -----
-    When ``seed_cap`` is set and n is not divisible by the mesh size,
-    the reservoir may include up to ``pad/stride`` duplicated rows —
-    harmless for an already-approximate reservoir, and impossible at
-    ``seed_cap=None`` where the gathered reservoir is sliced to exactly
-    the n true rows.
+        result arrays come back replicated. Emits one
+        ``DeprecationWarning`` when called.
     """
+    from repro.core import api
     if kind not in N_PARTS:
         raise ValueError(f"unknown kind {kind!r}; expected one of "
                          f"{sorted(N_PARTS)}")
-    g = mesh.shape[axis]
+    spec = {"dense": api.DenseData, "hetero": api.HeteroData,
+            "sparse": api.SparseData}[kind]
 
     def fit(*parts, key):
-        """Pad + shard the parts, run the compiled sharded fit."""
+        """Wrap the parts in a Dataset, fit via the facade."""
+        _warn_deprecated("make_fit_sharded",
+                         "GEEK(cfg).fit(data, key, mesh=...)")
         if len(parts) != N_PARTS[kind]:
             raise ValueError(f"{kind} fit takes {N_PARTS[kind]} part(s), "
                              f"got {len(parts)}")
-        none_pattern = tuple(p is None for p in parts)
-        if kind != "hetero" and any(none_pattern):
-            raise ValueError(f"{kind} fit parts must not be None")
-        if all(none_pattern):
-            raise ValueError("every input part is None")
-        dev, n = _pad_and_shard([p for p in parts if p is not None],
-                                g, mesh, axis)
-        stride = (1 if seed_cap is None or seed_cap >= n
-                  else -(-n // seed_cap))
-        fn = _build_fit_sharded(mesh, cfg, kind, axis, none_pattern, n,
-                                -(-n // g), stride)
-        labels, dists, model, seeds, overflow = fn(key, *dev)
-        result = GeekResult(labels[:n], dists[:n], model.centers,
-                            model.center_valid, model.k_star, model.radius,
-                            seeds, overflow)
-        return result, model
+        est = api.GEEK(cfg)
+        model = est.fit(spec(*parts), key, mesh=mesh, mesh_axis=axis,
+                        seed_cap=seed_cap)
+        return est.result_, model
 
     return fit
 

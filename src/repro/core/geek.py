@@ -4,36 +4,54 @@
     buckets --[SILK]--> seed groups (k* discovered, not pre-specified)
     seeds --[central vectors + ONE assignment pass]--> clusters
 
-Three entry points, one per data type (paper Algorithms 1-3):
-  - fit_dense(x)              Euclidean, QALSH rank-partition buckets
-  - fit_hetero(x_num, x_cat)  1-Jaccard on attribute-value sets, MinHash buckets
-  - fit_sparse(sets, mask)    Jaccard on sets, DOPH -> MinHash buckets
+The pipeline itself lives behind the ``repro.core.api`` facade
+(``GEEK(cfg).fit(DenseData(x) | HeteroData(...) | SparseData(...),
+key)``) as three pluggable protocols — Bucketer, Seeder, Assigner
+(DESIGN.md §11). This module keeps the shared configuration
+(``GeekConfig``), the per-run result type (``GeekResult``), the
+kind-specific helpers the protocols are built from, and the legacy
+per-type entry points as **deprecated shims** over the facade:
 
-Each returns ``(GeekResult, GeekModel)``: the per-run result (labels,
-dists, diagnostics) plus the persistent fitted model — central vectors
-AND the fit-time transform (``repro.core.transform``) — that
-``repro.core.model.predict`` reuses to assign new points without
-re-running SILK, coding them exactly as the fit did (DESIGN.md §9).
+  - fit_dense(x)              == GEEK(cfg).fit(DenseData(x), key)
+  - fit_hetero(x_num, x_cat)  == GEEK(cfg).fit(HeteroData(...), key)
+  - fit_sparse(sets, mask)    == GEEK(cfg).fit(SparseData(...), key)
+
+Each shim returns ``(GeekResult, GeekModel)`` bit-identically to the
+facade (it IS the facade) and emits one ``DeprecationWarning`` per
+call.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
+import warnings
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import assign as assign_mod
-from repro.core import lsh
-from repro.core.buckets import BucketTables, partition_by_signature, partition_even
-from repro.core.model import (GeekModel, NumericDiscretizer, build_model,
-                              predict_hamming, predict_l2)
-from repro.core.silk import Seeds, silk_seeding
+from repro.core.model import (GeekModel, NumericDiscretizer, build_model)
+from repro.core.silk import Seeds
 from repro.core.transform import (HeteroTransform, IdentityTransform,
                                   SparseTransform)
 from repro.kernels.pack import bits_for_cardinality
 from repro.utils.hashing import combine2_u32, derive_hash_keys
+
+#: data-type kind -> number of raw input parts:
+#: dense = (x,), hetero = (x_num, x_cat), sparse = (sets, mask)
+N_PARTS = {"dense": 1, "hetero": 2, "sparse": 2}
+
+
+def _reinsert_none(present: tuple, none_pattern: tuple[bool, ...]) -> tuple:
+    """Re-expand a filtered part tuple to its static None pattern."""
+    it = iter(present)
+    return tuple(None if absent else next(it) for absent in none_pattern)
+
+
+def _warn_deprecated(old: str, new: str) -> None:
+    """One DeprecationWarning per legacy entry-point call (DESIGN.md §11)."""
+    warnings.warn(f"{old} is deprecated; use {new} (repro.core.api, "
+                  "DESIGN.md §11)", DeprecationWarning, stacklevel=3)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,83 +118,50 @@ def resolve_hamming_impl(cfg: GeekConfig, bits: int) -> tuple[str, int]:
     return impl, bits
 
 
-def _seed_dense(x, seeds: Seeds, cfg: GeekConfig):
+def _seed_dense(x, seeds: Seeds, cfg: GeekConfig, *, transform=None,
+                bucketer_id: str = "", seeder_id: str = ""):
     """Centers + model for a dense fit — everything but the n-sized pass."""
     centers, cvalid = assign_mod.centroid_centers(x, seeds)
     model = build_model(centers, cvalid, seeds.k_star,
                         jnp.zeros((cfg.k_max,), jnp.float32), metric="l2",
                         assign_block=cfg.assign_block,
                         use_pallas=cfg.use_pallas,
-                        transform=IdentityTransform())
+                        transform=(IdentityTransform() if transform is None
+                                   else transform),
+                        bucketer_id=bucketer_id, seeder_id=seeder_id)
     return centers, cvalid, model
 
 
-def _finish_dense(x, seeds: Seeds, cfg: GeekConfig, overflow):
-    centers, cvalid, model = _seed_dense(x, seeds, cfg)
-    # the fit-time pass IS the serving dispatch — predict on the fit data
-    # is bit-identical by construction, not by parallel maintenance
-    labels, dists = predict_l2(model, x)
-    radius = assign_mod.cluster_radius(dists, labels, cfg.k_max)
-    result = GeekResult(labels, dists, centers, cvalid, seeds.k_star, radius,
-                        seeds, overflow)
-    return result, dataclasses.replace(model, radius=radius)
-
-
 def _seed_codes(codes, seeds: Seeds, cfg: GeekConfig, *, bits: int,
-                transform):
+                transform, bucketer_id: str = "", seeder_id: str = ""):
     """Mode centers + model for a code-space fit — everything but the
-    n-sized pass. Shared by the in-core ``_finish_codes`` and the
-    streaming reservoir path (``core.streaming``)."""
+    n-sized pass. ``bits`` is a static bound on the code width (0 =
+    unknown); the packed and one-hot paths produce mismatch counts
+    bit-identical to the equality path, so the resolved impl is purely
+    a throughput knob. Shared by every execution mode via
+    ``api.KernelAssigner``."""
     centers, cvalid = assign_mod.mode_centers(codes, seeds)
     impl, bits = resolve_hamming_impl(cfg, bits)
     return build_model(centers, cvalid, seeds.k_star,
                        jnp.zeros((cfg.k_max,), jnp.float32),
                        metric="hamming", impl=impl, code_bits=bits,
                        assign_block=cfg.assign_block,
-                       use_pallas=cfg.use_pallas, transform=transform)
-
-
-def _finish_codes(codes, seeds: Seeds, cfg: GeekConfig, overflow, *,
-                  bits: int = 0, transform=None):
-    """Mode centers + one-pass Hamming assignment.
-
-    ``bits`` is a static bound on the code width (0 = unknown). The
-    packed and one-hot paths produce mismatch counts bit-identical to the
-    equality path, so the choice is purely a throughput knob.
-    """
-    model = _seed_codes(codes, seeds, cfg, bits=bits, transform=transform)
-    # shared serving dispatch (equality/packed/one-hot, jnp or Pallas);
-    # dists come back normalized to ≈ (1 - Jaccard)
-    labels, dists = predict_hamming(model, codes)
-    radius = assign_mod.cluster_radius(dists, labels, cfg.k_max)
-    result = GeekResult(labels, dists, model.centers, model.center_valid,
-                        seeds.k_star, radius, seeds, overflow)
-    return result, dataclasses.replace(model, radius=radius)
+                       use_pallas=cfg.use_pallas, transform=transform,
+                       bucketer_id=bucketer_id, seeder_id=seeder_id)
 
 
 # ---------------------------------------------------------------------------
 # Homogeneous dense (Algorithm 1)
 # ---------------------------------------------------------------------------
 
-def discover_dense(x: jax.Array, key: jax.Array, cfg: GeekConfig):
-    """Dense discovery phase: QALSH hash -> even-partition buckets -> SILK.
-
-    Shared by ``fit_dense`` and the streaming reservoir path — one copy is
-    what keeps ``fit_dense_streaming``'s bit-identity contract structural.
-    """
-    k_proj, k_silk = jax.random.split(key)
-    a = lsh.qalsh_projections(k_proj, x.shape[1], cfg.m, dtype=x.dtype)
-    buckets = partition_even(lsh.qalsh_hash(x, a), cfg.t)
-    return silk_seeding(buckets, k_silk, silk_k=cfg.silk_k,
-                        silk_l=cfg.silk_l, delta=cfg.delta,
-                        pair_cap=cfg.pair_cap, k_max=cfg.k_max)
-
-
-@functools.partial(jax.jit, static_argnames=("cfg",))
 def fit_dense(x: jax.Array, key: jax.Array,
               cfg: GeekConfig) -> tuple[GeekResult, GeekModel]:
-    seeds, overflow = discover_dense(x, key, cfg)
-    return _finish_dense(x, seeds, cfg, overflow)
+    """Deprecated shim: ``GEEK(cfg).fit(DenseData(x), key)``."""
+    from repro.core import api
+    _warn_deprecated("fit_dense", "GEEK(cfg).fit(DenseData(x), key)")
+    est = api.GEEK(cfg)
+    model = est.fit(api.DenseData(x), key)
+    return est.result_, model
 
 
 # ---------------------------------------------------------------------------
@@ -223,21 +208,6 @@ def _code_items(codes: jax.Array, key: jax.Array) -> jax.Array:
     return combine2_u32(jnp.broadcast_to(dims, codes.shape), codes, hk[0], hk[1])
 
 
-def discover_codes(codes: jax.Array, k_item: jax.Array, k_sig: jax.Array,
-                   k_silk: jax.Array, cfg: GeekConfig):
-    """Code-space discovery phase: hashed attribute-value items ->
-    MinHash (K, L) buckets -> SILK. Shared by ``fit_hetero``,
-    ``fit_sparse``, and the streaming reservoir paths — one copy is what
-    keeps the streamed bit-identity contracts structural."""
-    items = _code_items(codes, k_item)
-    sig_keys = derive_hash_keys(k_sig, (cfg.bucket_l, cfg.bucket_k))
-    sigs = lsh.minhash_signatures(items, jnp.ones_like(items, bool), sig_keys)
-    buckets = partition_by_signature(sigs)
-    return silk_seeding(buckets, k_silk, silk_k=cfg.silk_k,
-                        silk_l=cfg.silk_l, delta=cfg.delta,
-                        pair_cap=cfg.pair_cap, k_max=cfg.k_max)
-
-
 def hetero_code_bits(cfg: GeekConfig, x_cat: jax.Array | None) -> int:
     """Static hetero code-width bound, validated.
 
@@ -260,16 +230,15 @@ def hetero_code_bits(cfg: GeekConfig, x_cat: jax.Array | None) -> int:
     return bits
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
 def fit_hetero(x_num: jax.Array, x_cat: jax.Array, key: jax.Array,
                cfg: GeekConfig) -> tuple[GeekResult, GeekModel]:
-    k_item, k_sig, k_silk = jax.random.split(key, 3)
-    transform = make_hetero_transform(x_num, cfg.t_cat)
-    codes = transform(x_num, x_cat)
-    seeds, overflow = discover_codes(codes, k_item, k_sig, k_silk, cfg)
-    bits = hetero_code_bits(cfg, x_cat)
-    return _finish_codes(codes, seeds, cfg, overflow, bits=bits,
-                         transform=transform)
+    """Deprecated shim: ``GEEK(cfg).fit(HeteroData(x_num, x_cat), key)``."""
+    from repro.core import api
+    _warn_deprecated("fit_hetero",
+                     "GEEK(cfg).fit(HeteroData(x_num, x_cat), key)")
+    est = api.GEEK(cfg)
+    model = est.fit(api.HeteroData(x_num, x_cat), key)
+    return est.result_, model
 
 
 # ---------------------------------------------------------------------------
@@ -295,15 +264,18 @@ def sparse_codes(sets: jax.Array, mask: jax.Array, key: jax.Array,
     return make_sparse_transform(key, cfg)(sets, mask)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
 def fit_sparse(sets: jax.Array, mask: jax.Array, key: jax.Array,
                cfg: GeekConfig) -> tuple[GeekResult, GeekModel]:
-    _, k_item, k_sig, k_silk = jax.random.split(key, 4)
-    transform = make_sparse_transform(key, cfg)
-    codes = transform(sets, mask)
-    seeds, overflow = discover_codes(codes, k_item, k_sig, k_silk, cfg)
-    # doph codes are truncated to 16 bits — always packable 2:1.
-    # cfg.code_bits describes *hetero* codes, so it is ignored here: a
-    # narrower width would silently mask DOPH codes during packing.
-    return _finish_codes(codes, seeds, cfg, overflow, bits=16,
-                         transform=transform)
+    """Deprecated shim: ``GEEK(cfg).fit(SparseData(sets, mask), key)``.
+
+    DOPH codes are truncated to 16 bits — always packable 2:1.
+    ``cfg.code_bits`` describes *hetero* codes, so the facade ignores it
+    for sparse data: a narrower width would silently mask DOPH codes
+    during packing.
+    """
+    from repro.core import api
+    _warn_deprecated("fit_sparse",
+                     "GEEK(cfg).fit(SparseData(sets, mask), key)")
+    est = api.GEEK(cfg)
+    model = est.fit(api.SparseData(sets, mask), key)
+    return est.result_, model

@@ -169,6 +169,12 @@ class GeekModel:
     d: int = 0                # unpacked feature / code width
     assign_block: int = 4096
     use_pallas: bool = False
+    # provenance: which pipeline stages fitted this model (repro.core.api
+    # protocol names, e.g. "lsh"/"silk"; "" for models built before the
+    # facade or directly via build_model). Persisted in the checkpoint
+    # manifest so a serving process can report HOW its seeds were made.
+    bucketer_id: str = ""
+    seeder_id: str = ""
 
     def tree_flatten(self):
         """Pytree protocol: arrays (+ transform) as children, static
@@ -176,7 +182,8 @@ class GeekModel:
         children = (self.centers, self.center_valid, self.k_star, self.radius,
                     self.packed_centers, self.onehot_centers, self.transform)
         aux = (self.metric, self.impl, self.code_bits, self.d,
-               self.assign_block, self.use_pallas)
+               self.assign_block, self.use_pallas,
+               self.bucketer_id, self.seeder_id)
         return children, aux
 
     @classmethod
@@ -219,7 +226,9 @@ class GeekModel:
         return {"metric": self.metric, "impl": self.impl,
                 "code_bits": self.code_bits, "d": self.d,
                 "assign_block": self.assign_block,
-                "use_pallas": self.use_pallas}
+                "use_pallas": self.use_pallas,
+                "bucketer_id": self.bucketer_id,
+                "seeder_id": self.seeder_id}
 
 
 def build_model(centers: jax.Array, center_valid: jax.Array,
@@ -227,7 +236,8 @@ def build_model(centers: jax.Array, center_valid: jax.Array,
                 metric: str, impl: str = "", code_bits: int = 0,
                 assign_block: int = 4096,
                 use_pallas: bool = False,
-                transform=None) -> GeekModel:
+                transform=None, bucketer_id: str = "",
+                seeder_id: str = "") -> GeekModel:
     """Construct a GeekModel, pre-packing centers for the chosen impl.
 
     This is the single constructor used by the ``fit_*`` paths *and* by
@@ -259,6 +269,9 @@ def build_model(centers: jax.Array, center_valid: jax.Array,
         Fit-time raw→code-space mapping (defaults to the identity for
         L2; hamming models without one require pre-transformed codes
         at predict time).
+    bucketer_id, seeder_id : str
+        Provenance: the ``repro.core.api`` protocol names of the stages
+        that fitted this model ("" when not fitted via the facade).
 
     Returns
     -------
@@ -282,7 +295,7 @@ def build_model(centers: jax.Array, center_valid: jax.Array,
     return GeekModel(centers, center_valid, k_star, radius, packed, onehot,
                      transform, metric, impl if metric == "hamming" else "",
                      code_bits, int(centers.shape[1]), assign_block,
-                     use_pallas)
+                     use_pallas, bucketer_id, seeder_id)
 
 
 def predict_l2(model: GeekModel, x: jax.Array):

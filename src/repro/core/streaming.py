@@ -24,7 +24,14 @@ instead:
      streamed labels are bit-identical to the in-core path regardless of
      the chunk size.
 
-Three drivers, one per entry point (DESIGN.md §9):
+The one entry point is the facade: ``GEEK(cfg).fit(data, key,
+chunk=…)`` (``repro.core.api``, DESIGN.md §11) — the facade runs
+discovery on the reservoir through its Bucketer/Seeder protocols and
+hands this module the chunked assignment pass (``_streamed_fit``).
+This module owns the *execution machinery* only: host-side chunk
+normalization, the stride-sampled reservoir, and the donated-buffer
+streamed assignment loop. The legacy per-type drivers remain as
+deprecated shims over the facade (DESIGN.md §9):
 
   - ``fit_dense_streaming(x_or_iter, …)``
   - ``fit_hetero_streaming((x_num, x_cat) or iter of pairs, …)`` — the
@@ -59,12 +66,8 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core import assign as assign_mod
-from repro.core.geek import (GeekConfig, GeekResult, _seed_codes, _seed_dense,
-                             discover_codes, discover_dense, hetero_code_bits,
-                             make_sparse_transform)
-from repro.core.model import (GeekModel, NumericDiscretizer,
-                              quantile_boundaries, predict)
-from repro.core.transform import HeteroTransform
+from repro.core.geek import GeekConfig, GeekResult, _warn_deprecated
+from repro.core.model import GeekModel
 
 
 # ---------------------------------------------------------------------------
@@ -173,38 +176,41 @@ def _stride_sample(chunks: list[tuple], n: int, seed_cap: int | None,
 # Streamed one-pass assignment (shared by all three drivers)
 # ---------------------------------------------------------------------------
 
-def _assign_chunk_body(model: GeekModel, parts: tuple, k_max: int):
-    """One streamed step: transform + labels/dists for a chunk + its
-    partial radius. ``model.encode`` IS the fit-time coding (identity /
-    boundaries / keyed DOPH), so this is the chunked transformation."""
-    labels, dists = predict(model, model.encode(*parts))
-    radius = assign_mod.cluster_radius(dists, labels, k_max)
-    return labels, dists, radius
-
-
 @functools.lru_cache(maxsize=None)
-def _assign_chunk_fn(donate: bool, mesh=None, axis: str = "data"):
+def _assign_chunk_fn(donate: bool, mesh=None, axis: str = "data",
+                     assigner=None):
     """Jitted step with the chunk buffers donated — after the first step
     the transfer reuses the previous chunk's device buffers instead of
     growing HBM. CPU cannot donate (XLA warns and ignores), so donation
     is requested only on accelerator backends.
 
+    ``assigner`` is the facade's (hashable, jit-static) Assigner
+    protocol object; ``model.encode`` IS the fit-time coding (identity /
+    boundaries / keyed DOPH), so each step is the chunked transformation
+    + the shared one-pass dispatch.
+
     With ``mesh`` the step is shard_map-wrapped: the chunk arrives
     row-sharded ``P(axis, None)``, every device assigns its shard
-    through the same encode+predict dispatch, and the partial radius is
+    through the same encode+assign dispatch, and the partial radius is
     pmax-reduced — per-device buffers are donated just like the
     single-device path.
     """
+    def chunk_body(model: GeekModel, parts: tuple, k_max: int):
+        """One streamed step: labels/dists for a chunk + partial radius."""
+        labels, dists = assigner.assign(model, model.encode(*parts))
+        radius = assign_mod.cluster_radius(dists, labels, k_max)
+        return labels, dists, radius
+
     if mesh is None:
-        return jax.jit(_assign_chunk_body, static_argnames=("k_max",),
+        return jax.jit(chunk_body, static_argnames=("k_max",),
                        donate_argnums=(1,) if donate else ())
     from repro.utils.compat import shard_map
 
     def step(model, parts, k_max):
         """Sharded chunk step: shard rows, assign, pmax the radius."""
         def body(model, parts):
-            """Per-device encode+predict on this device's row shard."""
-            labels, dists = predict(model, model.encode(*parts))
+            """Per-device encode+assign on this device's row shard."""
+            labels, dists = assigner.assign(model, model.encode(*parts))
             radius = jax.lax.pmax(
                 assign_mod.cluster_radius(dists, labels, k_max), axis)
             return labels, dists, radius
@@ -236,10 +242,14 @@ def _check_mesh_chunk(mesh, mesh_axis: str, chunk: int) -> None:
 
 def _streamed_fit(chunks: list[tuple], n: int, cfg: GeekConfig, chunk: int,
                   seed_model, seeds, overflow, sample_idx, *,
-                  mesh=None, mesh_axis: str = "data"):
-    """Pass 2: stream chunks through transform + predict, assemble the
-    host-numpy GeekResult and the radius-finalized model. With ``mesh``
-    each chunk is row-sharded over the mesh for the assignment step."""
+                  mesh=None, mesh_axis: str = "data", assigner=None):
+    """Pass 2: stream chunks through transform + assignment, assemble the
+    host-numpy GeekResult and the radius-finalized model. ``assigner``
+    is the facade's Assigner protocol object. With ``mesh`` each chunk
+    is row-sharded over the mesh for the assignment step."""
+    if assigner is None:                      # default = the kernel dispatch
+        from repro.core.api import KernelAssigner
+        assigner = KernelAssigner()
     model = jax.block_until_ready(seed_model)
     if sample_idx is not None:
         # keep the fit_* contract: Seeds.id holds dataset row ids, not
@@ -250,7 +260,7 @@ def _streamed_fit(chunks: list[tuple], n: int, cfg: GeekConfig, chunk: int,
     dists = np.empty((n,), np.float32)
     radius = np.zeros((cfg.k_max,), np.float32)
     assign_chunk = _assign_chunk_fn(jax.default_backend() != "cpu",
-                                    mesh, mesh_axis)
+                                    mesh, mesh_axis, assigner)
     sharding = (NamedSharding(mesh, P(mesh_axis, None))
                 if mesh is not None else None)
     off = 0
@@ -298,85 +308,35 @@ def _collect(data, nparts: int, chunk: int):
 
 
 # ---------------------------------------------------------------------------
-# Dense (Algorithm 1, out of core)
+# Deprecated per-type drivers — thin shims over the facade
 # ---------------------------------------------------------------------------
-
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _seed_dense_reservoir(sample: jax.Array, key: jax.Array, cfg: GeekConfig):
-    """Discovery on the reservoir — the same pipeline as fit_dense."""
-    seeds, overflow = discover_dense(sample, key, cfg)
-    _, _, model = _seed_dense(sample, seeds, cfg)
-    return model, seeds, overflow
-
 
 def fit_dense_streaming(data, key: jax.Array, cfg: GeekConfig, *,
                         chunk: int = 8192, seed_cap: int | None = None,
                         mesh=None, mesh_axis: str = "data"
                         ) -> tuple[GeekResult, GeekModel]:
-    """Out-of-core ``fit_dense``: reservoir discovery + streamed one-pass
-    assignment.
+    """Deprecated shim: ``GEEK(cfg).fit(DenseData(x), key, chunk=…)``.
 
-    Parameters
-    ----------
-    data : (n, d) array or iterator of (m_i, d) host chunks
-        Dense float rows. Iterator input is materialized chunk-by-chunk
-        into host RAM, never whole on device.
-    key : jax.Array
-        PRNG key, consumed exactly as ``fit_dense`` consumes it.
-    cfg : GeekConfig
-        Static configuration.
-    chunk : int
-        Rows resident on device during the assignment pass (per step;
-        with ``mesh``, each device holds ``chunk / g`` of them).
-    seed_cap : int or None
-        Max reservoir rows for the discovery phase. None = all rows,
-        which makes labels/centers bit-identical to ``fit_dense``.
-    mesh : jax.sharding.Mesh or None
-        With a 1-axis mesh the assignment pass runs sharded over
-        ``mesh_axis`` (``chunk`` must divide by the mesh size);
-        discovery still runs on one device.
-    mesh_axis : str
-        Mesh axis name rows are sharded over.
-
-    Returns
-    -------
-    (GeekResult, GeekModel)
-        Result arrays land in host numpy; the model's arrays stay on
-        device (replicated when ``mesh`` is given).
+    ``data`` may be a (n, d) array or an iterator of (m_i, d) host
+    chunks; with ``seed_cap=None`` labels/centers are bit-identical to
+    the in-core fit for any chunk size. See ``api.GEEK.fit``.
     """
-    _check_mesh_chunk(mesh, mesh_axis, chunk)
-    chunks, n, whole = _collect(data, 1, chunk)
-    sample, sample_idx = _stride_sample(chunks, n, seed_cap, whole)
-    model, seeds, overflow = _seed_dense_reservoir(
-        jax.device_put(sample[0]), key, cfg)
-    return _streamed_fit(chunks, n, cfg, chunk, model, seeds, overflow,
-                         sample_idx, mesh=mesh, mesh_axis=mesh_axis)
+    from repro.core import api
+    _warn_deprecated("fit_dense_streaming",
+                     "GEEK(cfg).fit(DenseData(x), key, chunk=...)")
+    est = api.GEEK(cfg)
+    spec = (api.DenseData(data) if hasattr(data, "shape")
+            and getattr(data, "ndim", 0) == 2 else api.DenseData(chunks=data))
+    model = est.fit(spec, key, chunk=chunk, seed_cap=seed_cap, mesh=mesh,
+                    mesh_axis=mesh_axis)
+    return est.result_, model
 
 
-# ---------------------------------------------------------------------------
-# Heterogeneous (Algorithm 2, out of core)
-# ---------------------------------------------------------------------------
-
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _seed_hetero_reservoir(x_num, x_cat, boundaries, key: jax.Array,
-                           cfg: GeekConfig):
-    """Discovery on the reservoir — the same pipeline as fit_hetero.
-    ``boundaries`` overrides the reservoir-fitted quantiles (the
-    ``boundaries="exact"`` two-pass option)."""
-    k_item, k_sig, k_silk = jax.random.split(key, 3)
-    if x_num is not None and x_num.shape[1] > 0:
-        disc = (NumericDiscretizer(jnp.asarray(boundaries))
-                if boundaries is not None
-                else NumericDiscretizer.fit(x_num, cfg.t_cat))
-    else:
-        disc = None
-    transform = HeteroTransform(disc)
-    codes = transform(x_num, x_cat)
-    seeds, overflow = discover_codes(codes, k_item, k_sig, k_silk, cfg)
-    model = _seed_codes(codes, seeds, cfg,
-                        bits=hetero_code_bits(cfg, x_cat),
-                        transform=transform)
-    return model, seeds, overflow
+def _pair_spec(cls, data):
+    """Wrap legacy (p1, p2)-or-iterator streaming input in a Dataset."""
+    if isinstance(data, (tuple, list)):
+        return cls(*data)
+    return cls(chunks=data)
 
 
 def fit_hetero_streaming(data, key: jax.Array, cfg: GeekConfig, *,
@@ -384,112 +344,37 @@ def fit_hetero_streaming(data, key: jax.Array, cfg: GeekConfig, *,
                          boundaries: str = "reservoir",
                          mesh=None, mesh_axis: str = "data"
                          ) -> tuple[GeekResult, GeekModel]:
-    """Out-of-core ``fit_hetero``: chunked MinHash transformation feeding
-    the reservoir discovery + donated-buffer assignment pass.
+    """Deprecated shim: ``GEEK(cfg).fit(HeteroData(...), key, chunk=…)``.
 
-    Parameters
-    ----------
-    data : (x_num, x_cat) arrays or iterator of such pairs
-        Either part may be None (consistently across chunks); arrays
-        are (n, d_num) float and (n, d_cat) int.
-    key : jax.Array
-        PRNG key, consumed exactly as ``fit_hetero`` consumes it.
-    cfg : GeekConfig
-        Static configuration.
-    chunk : int
-        Rows resident on device per assignment step.
-    seed_cap : int or None
-        Max reservoir rows for discovery (None = all rows).
-    boundaries : {"reservoir", "exact"}
-        "reservoir" fits the numeric quantile boundaries on the
-        discovery reservoir (one pass; exact when seed_cap=None);
-        "exact" makes a dedicated host pass over the numeric columns
-        first, so boundaries match the in-core fit even when the
-        reservoir is subsampled.
-    mesh, mesh_axis
-        Optional 1-axis mesh for a sharded assignment pass — see
-        ``fit_dense_streaming``.
-
-    Returns
-    -------
-    (GeekResult, GeekModel)
-        With ``seed_cap=None`` labels/dists/centers are bit-identical
-        to ``fit_hetero`` for any chunk size (transform and assignment
-        are both row-independent).
+    ``data`` is a (x_num, x_cat) pair or an iterator of such pairs;
+    ``boundaries="exact"`` makes a dedicated host pass over the numeric
+    columns so a subsampled reservoir still yields the in-core
+    discretizer. See ``api.GEEK.fit``.
     """
-    if boundaries not in ("reservoir", "exact"):
-        raise ValueError(f"boundaries must be 'reservoir' or 'exact', "
-                         f"got {boundaries!r}")
-    _check_mesh_chunk(mesh, mesh_axis, chunk)
-    chunks, n, whole = _collect(data, 2, chunk)
-    sample, sample_idx = _stride_sample(chunks, n, seed_cap, whole)
-
-    bounds = None
-    if boundaries == "exact" and chunks[0][0] is not None:
-        # second pass over the numeric columns only, on host — mirrors
-        # NumericDiscretizer.fit (same sorted values -> same boundaries)
-        num = (whole[0] if whole is not None
-               else np.concatenate([c[0] for c in chunks], axis=0))
-        bounds = quantile_boundaries(np.sort(num, axis=0), cfg.t_cat)
-
-    dev = lambda p: None if p is None else jax.device_put(p)
-    model, seeds, overflow = _seed_hetero_reservoir(
-        dev(sample[0]), dev(sample[1]), bounds, key, cfg)
-    return _streamed_fit(chunks, n, cfg, chunk, model, seeds, overflow,
-                         sample_idx, mesh=mesh, mesh_axis=mesh_axis)
-
-
-# ---------------------------------------------------------------------------
-# Sparse (Algorithm 3, out of core)
-# ---------------------------------------------------------------------------
-
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _seed_sparse_reservoir(sets, mask, key: jax.Array, cfg: GeekConfig):
-    """Discovery on the reservoir — the same pipeline as fit_sparse."""
-    _, k_item, k_sig, k_silk = jax.random.split(key, 4)
-    transform = make_sparse_transform(key, cfg)
-    codes = transform(sets, mask)
-    seeds, overflow = discover_codes(codes, k_item, k_sig, k_silk, cfg)
-    model = _seed_codes(codes, seeds, cfg, bits=16, transform=transform)
-    return model, seeds, overflow
+    from repro.core import api
+    _warn_deprecated("fit_hetero_streaming",
+                     "GEEK(cfg).fit(HeteroData(x_num, x_cat), key, "
+                     "chunk=...)")
+    est = api.GEEK(cfg)
+    model = est.fit(_pair_spec(api.HeteroData, data), key, chunk=chunk,
+                    seed_cap=seed_cap, boundaries=boundaries, mesh=mesh,
+                    mesh_axis=mesh_axis)
+    return est.result_, model
 
 
 def fit_sparse_streaming(data, key: jax.Array, cfg: GeekConfig, *,
                          chunk: int = 8192, seed_cap: int | None = None,
                          mesh=None, mesh_axis: str = "data"
                          ) -> tuple[GeekResult, GeekModel]:
-    """Out-of-core ``fit_sparse``: chunked DOPH transformation feeding
-    the reservoir discovery + donated-buffer assignment pass.
+    """Deprecated shim: ``GEEK(cfg).fit(SparseData(...), key, chunk=…)``.
 
-    Parameters
-    ----------
-    data : (sets, mask) arrays or iterator of such pairs
-        ``sets`` (n, s_max) int set items, ``mask`` (n, s_max) bool.
-    key : jax.Array
-        PRNG key, consumed exactly as ``fit_sparse`` consumes it (the
-        persisted ``SparseTransform`` derives the same DOPH key).
-    cfg : GeekConfig
-        Static configuration.
-    chunk : int
-        Rows resident on device per assignment step.
-    seed_cap : int or None
-        Max reservoir rows for discovery (None = all rows).
-    mesh, mesh_axis
-        Optional 1-axis mesh for a sharded assignment pass — see
-        ``fit_dense_streaming``.
-
-    Returns
-    -------
-    (GeekResult, GeekModel)
-        With ``seed_cap=None`` labels/dists/centers are bit-identical
-        to ``fit_sparse`` for any chunk size (DOPH is per-row).
+    ``data`` is a (sets, mask) pair or an iterator of such pairs. See
+    ``api.GEEK.fit``.
     """
-    _check_mesh_chunk(mesh, mesh_axis, chunk)
-    chunks, n, whole = _collect(data, 2, chunk)
-    if chunks[0][0] is None or chunks[0][1] is None:
-        raise ValueError("fit_sparse_streaming needs both sets and mask")
-    sample, sample_idx = _stride_sample(chunks, n, seed_cap, whole)
-    model, seeds, overflow = _seed_sparse_reservoir(
-        jax.device_put(sample[0]), jax.device_put(sample[1]), key, cfg)
-    return _streamed_fit(chunks, n, cfg, chunk, model, seeds, overflow,
-                         sample_idx, mesh=mesh, mesh_axis=mesh_axis)
+    from repro.core import api
+    _warn_deprecated("fit_sparse_streaming",
+                     "GEEK(cfg).fit(SparseData(sets, mask), key, chunk=...)")
+    est = api.GEEK(cfg)
+    model = est.fit(_pair_spec(api.SparseData, data), key, chunk=chunk,
+                    seed_cap=seed_cap, mesh=mesh, mesh_axis=mesh_axis)
+    return est.result_, model

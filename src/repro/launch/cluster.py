@@ -1,18 +1,19 @@
 """GEEK clustering driver — the paper's end-to-end system.
 
-Runs the full transformation -> SILK -> one-pass-assignment pipeline on
-synthetic analogues of the paper's datasets, single-device or
-multi-device. `--mesh` shards any data type over all local devices via
-the unified sharded path (`core.distributed.make_fit_sharded` — exact,
-GeekModel out); `--distributed` keeps the paper-§3.4 table-sync dense
-variant; `--streaming` bounds device memory by `--chunk` and composes
-with `--mesh` (sharded chunked assignment). `--compare` adds the
-paper's baselines.
+Runs the full transformation -> seeding -> one-pass-assignment pipeline
+on synthetic analogues of the paper's datasets through the ONE facade
+(`repro.core.api.GEEK`): the dataset picks the kind, `--streaming` /
+`--mesh` pick the execution mode, and `--seeder` swaps the seeding
+strategy (SILK default; the paper's §4.1 comparison seeders plug into
+the same pipeline). `--distributed` keeps the paper-§3.4 table-sync
+dense variant; `--compare` adds the iteration baselines.
 
   PYTHONPATH=src python -m repro.launch.cluster --dataset sift --n 20000 \
       --k 64 --compare
   PYTHONPATH=src python -m repro.launch.cluster --dataset url --n 100000 \
       --streaming --chunk 8192 --seed-cap 20000   # out-of-core, any type
+  PYTHONPATH=src python -m repro.launch.cluster --dataset sift \
+      --seeder kmeanspp                           # swapped seeding stage
   XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
       python -m repro.launch.cluster --dataset geonames --mesh
 """
@@ -28,11 +29,10 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core import baselines
-from repro.core.distributed import make_fit_dense, make_fit_sharded
-from repro.core.geek import (GeekConfig, fit_dense, fit_hetero, fit_sparse,
-                             hetero_codes)
-from repro.core.streaming import (fit_dense_streaming, fit_hetero_streaming,
-                                  fit_sparse_streaming)
+from repro.core.api import (GEEK, DenseData, HeteroData, KMeansPPSeeder,
+                            ScalableKMeansPPSeeder, SparseData)
+from repro.core.distributed import make_fit_dense
+from repro.core.geek import GeekConfig, hetero_codes
 from repro.data import synthetic
 from repro.utils.compat import make_mesh
 
@@ -40,6 +40,29 @@ from repro.utils.compat import make_mesh
 def mean_radius(radius, valid):
     r = jnp.where(valid, radius, 0.0)
     return float(r.sum() / jnp.maximum(valid.sum(), 1))
+
+
+def make_dataset(args, key):
+    """One synthetic dataset as a facade Dataset spec (+ raw handle)."""
+    if args.dataset in ("sift", "gist"):
+        gen = (synthetic.sift_like if args.dataset == "sift"
+               else synthetic.gist_like)
+        data = gen(key, n=args.n, k=args.k)
+        return DenseData(data.x), data, "geek"
+    if args.dataset == "geonames":
+        data = synthetic.geonames_like(key, n=args.n, k=args.k)
+        return HeteroData(data.x_num, data.x_cat), data, "geek/hetero"
+    data = synthetic.url_like(key, n=args.n, k=args.k)
+    return SparseData(data.sets, data.mask), data, "geek/sparse"
+
+
+def make_seeder(name: str, k: int):
+    """--seeder flag -> Seeder protocol object (None = SILK default)."""
+    if name == "silk":
+        return None
+    if name == "kmeanspp":
+        return KMeansPPSeeder(k)
+    return ScalableKMeansPPSeeder(k)
 
 
 def main() -> None:
@@ -54,6 +77,10 @@ def main() -> None:
     ap.add_argument("--silk-l", type=int, default=6)
     ap.add_argument("--delta", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--seeder", default="silk",
+                    choices=["silk", "kmeanspp", "scalable-kmeanspp"],
+                    help="seeding stage: SILK (k* discovered) or a "
+                         "k-means++ family seeder (k = --k, dense only)")
     ap.add_argument("--distributed", action="store_true",
                     help="paper-§3.4 table-sync dense fit over all local "
                          "devices (approximate sharded discovery)")
@@ -65,7 +92,7 @@ def main() -> None:
     ap.add_argument("--chunk", type=int, default=8192,
                     help="rows on device per streamed assignment step")
     ap.add_argument("--seed-cap", type=int, default=None,
-                    help="max reservoir rows for streamed discovery "
+                    help="max reservoir rows for streamed/sharded discovery "
                          "(default: all rows -> bit-identical to in-core)")
     ap.add_argument("--compare", action="store_true")
     args = ap.parse_args()
@@ -78,112 +105,74 @@ def main() -> None:
     key = jax.random.PRNGKey(args.seed)
     cfg = GeekConfig(m=args.m, t=args.t, silk_l=args.silk_l, delta=args.delta,
                      k_max=args.k_max, pair_cap=1 << 16)
-    mesh = make_mesh() if args.mesh else None
-    stream_kw = dict(chunk=args.chunk, seed_cap=args.seed_cap, mesh=mesh)
+    dataset, data, tag = make_dataset(args, key)
 
-    def sharded_tag(base: str) -> str:
-        if args.streaming:
-            base += "/stream"
-        if mesh is not None:
-            base += f"/sharded x{len(jax.devices())}"
-        return base
-
-    if args.dataset in ("sift", "gist"):
-        gen = synthetic.sift_like if args.dataset == "sift" else synthetic.gist_like
-        data = gen(key, n=args.n, k=args.k)
-        if args.distributed:
-            mesh = Mesh(np.array(jax.devices()), ("data",))
-            fit = make_fit_dense(mesh, cfg)
-            x = jax.device_put(data.x, NamedSharding(mesh, P("data", None)))
-            t0 = time.time()
-            labels, centers, cvalid, k_star, radius, ovf = fit(
-                x, jax.random.PRNGKey(1))
-            jax.block_until_ready(labels)
-            dt = time.time() - t0
-            print(f"[geek/dist x{len(jax.devices())}] n={args.n} "
-                  f"k*={int(k_star)} mean_radius={mean_radius(radius, cvalid):.4f} "
-                  f"time={dt:.2f}s overflow={int(ovf)}")
-            return
+    if args.distributed:
+        if dataset.kind != "dense":
+            raise SystemExit("--distributed (table-sync §3.4) is dense-only")
+        mesh = Mesh(np.array(jax.devices()), ("data",))
+        fit = make_fit_dense(mesh, cfg)
+        x = jax.device_put(data.x, NamedSharding(mesh, P("data", None)))
         t0 = time.time()
-        if args.streaming:
-            res, _ = fit_dense_streaming(np.asarray(data.x),
-                                         jax.random.PRNGKey(1), cfg,
-                                         **stream_kw)
-        elif mesh is not None:
-            res, _ = make_fit_sharded(mesh, cfg, kind="dense",
-                                      seed_cap=args.seed_cap)(
-                data.x, key=jax.random.PRNGKey(1))
-        else:
-            res, _ = fit_dense(data.x, jax.random.PRNGKey(1), cfg)
-        jax.block_until_ready(res.labels)
+        labels, centers, cvalid, k_star, radius, ovf = fit(
+            x, jax.random.PRNGKey(1))
+        jax.block_until_ready(labels)
         dt = time.time() - t0
-        tag = sharded_tag("geek")
-        print(f"[{tag}] n={args.n} k*={int(res.k_star)} "
-              f"mean_radius={mean_radius(res.radius, res.center_valid):.4f} "
-              f"time={dt:.2f}s")
-        if args.compare:
-            k = int(res.k_star)
-            for name, fn in [
-                ("lloyd", lambda: baselines.lloyd(data.x, k,
-                                                  jax.random.PRNGKey(2), iters=10)),
-                ("kmeans++1p", lambda: baselines.seed_then_assign(
-                    data.x, k, jax.random.PRNGKey(3))),
-                ("random1p", lambda: baselines.seed_then_assign(
-                    data.x, k, jax.random.PRNGKey(4), method="random")),
-                ("sampled", lambda: baselines.sampled_kmeans(
-                    data.x, k, jax.random.PRNGKey(5), iters=10)),
-            ]:
-                t0 = time.time()
-                r = fn()
-                jax.block_until_ready(r.labels)
-                print(f"[{name:10s}] k={k} "
-                      f"mean_radius={mean_radius(r.radius, r.center_valid):.4f} "
-                      f"time={time.time()-t0:.2f}s")
-    elif args.dataset == "geonames":
-        data = synthetic.geonames_like(key, n=args.n, k=args.k)
-        t0 = time.time()
-        if args.streaming:
-            res, _ = fit_hetero_streaming(
-                (np.asarray(data.x_num), np.asarray(data.x_cat)),
-                jax.random.PRNGKey(1), cfg, **stream_kw)
-        elif mesh is not None:
-            res, _ = make_fit_sharded(mesh, cfg, kind="hetero",
-                                      seed_cap=args.seed_cap)(
-                data.x_num, data.x_cat, key=jax.random.PRNGKey(1))
-        else:
-            res, _ = fit_hetero(data.x_num, data.x_cat,
-                                jax.random.PRNGKey(1), cfg)
-        jax.block_until_ready(res.labels)
-        tag = sharded_tag("geek/hetero")
-        print(f"[{tag}] n={args.n} k*={int(res.k_star)} "
-              f"mean_radius={mean_radius(res.radius, res.center_valid):.4f} "
-              f"time={time.time()-t0:.2f}s")
-        if args.compare:
-            codes = hetero_codes(data.x_num, data.x_cat, cfg.t_cat)
+        print(f"[geek/dist x{len(jax.devices())}] n={args.n} "
+              f"k*={int(k_star)} mean_radius={mean_radius(radius, cvalid):.4f} "
+              f"time={dt:.2f}s overflow={int(ovf)}")
+        return
+
+    mesh = make_mesh() if args.mesh else None
+    est = GEEK(cfg, seeder=make_seeder(args.seeder, args.k))
+    t0 = time.time()
+    # seed_cap passes through unconditionally: the facade itself rejects
+    # it without a bounded-memory mode, so a forgotten --streaming/--mesh
+    # errors instead of silently running an unbounded in-core fit
+    est.fit(dataset, jax.random.PRNGKey(1), mesh=mesh,
+            chunk=args.chunk if args.streaming else None,
+            seed_cap=args.seed_cap)
+    res = est.result_
+    jax.block_until_ready(res.labels)   # no-op for host-numpy results
+    dt = time.time() - t0
+
+    if args.seeder != "silk":
+        tag += f"/{args.seeder}"
+    if args.streaming:
+        tag += "/stream"
+    if mesh is not None:
+        tag += f"/sharded x{len(jax.devices())}"
+    print(f"[{tag}] n={args.n} k*={int(res.k_star)} "
+          f"mean_radius={mean_radius(res.radius, res.center_valid):.4f} "
+          f"time={dt:.2f}s")
+
+    if not args.compare:
+        return
+    k = int(res.k_star)
+    if dataset.kind == "dense":
+        for name, fn in [
+            ("lloyd", lambda: baselines.lloyd(data.x, k,
+                                              jax.random.PRNGKey(2), iters=10)),
+            ("kmeans++1p", lambda: baselines.seed_then_assign(
+                data.x, k, jax.random.PRNGKey(3))),
+            ("random1p", lambda: baselines.seed_then_assign(
+                data.x, k, jax.random.PRNGKey(4), method="random")),
+            ("sampled", lambda: baselines.sampled_kmeans(
+                data.x, k, jax.random.PRNGKey(5), iters=10)),
+        ]:
             t0 = time.time()
-            r = baselines.kmodes(codes, int(res.k_star), jax.random.PRNGKey(2))
+            r = fn()
             jax.block_until_ready(r.labels)
-            print(f"[kmodes    ] mean_radius="
-                  f"{mean_radius(r.radius, r.center_valid):.4f} "
+            print(f"[{name:10s}] k={k} "
+                  f"mean_radius={mean_radius(r.radius, r.center_valid):.4f} "
                   f"time={time.time()-t0:.2f}s")
-    else:  # url (sparse)
-        data = synthetic.url_like(key, n=args.n, k=args.k)
+    elif dataset.kind == "hetero":
+        codes = hetero_codes(data.x_num, data.x_cat, cfg.t_cat)
         t0 = time.time()
-        if args.streaming:
-            res, _ = fit_sparse_streaming(
-                (np.asarray(data.sets), np.asarray(data.mask)),
-                jax.random.PRNGKey(1), cfg, **stream_kw)
-        elif mesh is not None:
-            res, _ = make_fit_sharded(mesh, cfg, kind="sparse",
-                                      seed_cap=args.seed_cap)(
-                data.sets, data.mask, key=jax.random.PRNGKey(1))
-        else:
-            res, _ = fit_sparse(data.sets, data.mask,
-                                jax.random.PRNGKey(1), cfg)
-        jax.block_until_ready(res.labels)
-        tag = sharded_tag("geek/sparse")
-        print(f"[{tag}] n={args.n} k*={int(res.k_star)} "
-              f"mean_radius={mean_radius(res.radius, res.center_valid):.4f} "
+        r = baselines.kmodes(codes, k, jax.random.PRNGKey(2))
+        jax.block_until_ready(r.labels)
+        print(f"[kmodes    ] mean_radius="
+              f"{mean_radius(r.radius, r.center_valid):.4f} "
               f"time={time.time()-t0:.2f}s")
 
 

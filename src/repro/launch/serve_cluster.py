@@ -28,8 +28,9 @@ import jax
 import numpy as np
 
 from repro.checkpoint.manager import restore_model, save_model
+from repro.core.api import GEEK, DenseData, HeteroData, SparseData
 from repro.core.distributed import make_predict_sharded
-from repro.core.geek import GeekConfig, fit_dense, fit_hetero, fit_sparse
+from repro.core.geek import GeekConfig
 from repro.core.model import predict
 from repro.data import synthetic
 from repro.utils.compat import make_mesh
@@ -48,16 +49,17 @@ def _serve(model, *parts):
 
 def _fit(args, cfg):
     key = jax.random.PRNGKey(args.seed)
-    fkey = jax.random.PRNGKey(1)
     if args.data == "dense":
         d = synthetic.sift_like(key, n=args.n_fit, k=args.k)
-        _, model = fit_dense(d.x, fkey, cfg)
+        dataset = DenseData(d.x)
     elif args.data == "hetero":
         h = synthetic.geonames_like(key, n=args.n_fit, k=args.k)
-        _, model = fit_hetero(h.x_num, h.x_cat, fkey, cfg)
+        dataset = HeteroData(h.x_num, h.x_cat)
     else:
         s = synthetic.url_like(key, n=args.n_fit, k=args.k)
-        _, model = fit_sparse(s.sets, s.mask, fkey, cfg)
+        dataset = SparseData(s.sets, s.mask)
+    # one facade call for every data kind — the dataset spec dispatches
+    model = GEEK(cfg).fit(dataset, jax.random.PRNGKey(1))
     return jax.block_until_ready(model)
 
 

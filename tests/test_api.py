@@ -1,0 +1,270 @@
+"""Facade + protocol tests (DESIGN.md §11).
+
+Covers the ISSUE-5 acceptance criteria:
+- shim-vs-facade bit-identity + exactly one DeprecationWarning per call
+- the facade reproduces the execution-mode bit-identity matrix
+- KMeansPPSeeder parity with baselines.seed_then_assign on a fixed key
+- checkpoint round-trip of the bucketer/seeder manifest fields
+- a non-SILK Seeder end-to-end: fit -> checkpoint -> sharded predict
+
+Multi-device sharding is covered by tests/test_distributed.py (whose
+shims now route through the facade); here sharded paths run on a
+1-device mesh, which exercises the same shard_map code.
+"""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro import (GEEK, DenseData, GeekConfig, HeteroData, KMeansPPSeeder,
+                   ScalableKMeansPPSeeder, SparseData, restore_model,
+                   save_model)
+from repro.core import baselines
+from repro.core.geek import fit_dense, fit_hetero, fit_sparse
+from repro.core.streaming import (fit_dense_streaming, fit_hetero_streaming,
+                                  fit_sparse_streaming)
+from repro.data import synthetic
+from repro.utils.compat import make_mesh
+
+CFG = GeekConfig(m=8, t=16, bucket_k=2, bucket_l=8, silk_l=3, delta=4,
+                 k_max=64, pair_cap=4096)
+KEY = jax.random.PRNGKey(0)
+FIT_KEY = jax.random.PRNGKey(1)
+
+
+def _dense(n=1500):
+    return synthetic.sift_like(KEY, n=n, k=12)
+
+
+def _datasets():
+    d = _dense()
+    h = synthetic.geonames_like(KEY, n=1200, k=8)
+    s = synthetic.url_like(KEY, n=800, k=8)
+    return {
+        "dense": (DenseData(d.x), fit_dense, (d.x,)),
+        "hetero": (HeteroData(h.x_num, h.x_cat), fit_hetero,
+                   (h.x_num, h.x_cat)),
+        "sparse": (SparseData(s.sets, s.mask), fit_sparse, (s.sets, s.mask)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Shim-vs-facade bit-identity + deprecation warnings
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["dense", "hetero", "sparse"])
+def test_shim_matches_facade_and_warns_once(kind):
+    spec, shim, parts = _datasets()[kind]
+    est = GEEK(CFG)
+    model = est.fit(spec, FIT_KEY)
+    res = est.result_
+
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        res2, model2 = shim(*parts, FIT_KEY, CFG)
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1, f"expected exactly 1 DeprecationWarning, got {dep}"
+
+    np.testing.assert_array_equal(np.asarray(res.labels),
+                                  np.asarray(res2.labels))
+    np.testing.assert_array_equal(np.asarray(res.dists),
+                                  np.asarray(res2.dists))
+    np.testing.assert_array_equal(np.asarray(model.centers),
+                                  np.asarray(model2.centers))
+    assert model.bucketer_id == model2.bucketer_id == "lsh"
+    assert model.seeder_id == model2.seeder_id == "silk"
+
+
+def test_streaming_shims_match_facade_and_warn_once():
+    d = _dense()
+    est = GEEK(CFG)
+    est.fit(DenseData(np.asarray(d.x)), FIT_KEY, chunk=400)
+    ref = est.result_
+
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        res, _ = fit_dense_streaming(np.asarray(d.x), FIT_KEY, CFG, chunk=400)
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1
+    np.testing.assert_array_equal(res.labels, ref.labels)
+
+    h = synthetic.geonames_like(KEY, n=900, k=8)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        fit_hetero_streaming((np.asarray(h.x_num), np.asarray(h.x_cat)),
+                             FIT_KEY, CFG, chunk=300)
+    assert sum(issubclass(w.category, DeprecationWarning) for w in rec) == 1
+
+    s = synthetic.url_like(KEY, n=600, k=8)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        fit_sparse_streaming((np.asarray(s.sets), np.asarray(s.mask)),
+                             FIT_KEY, CFG, chunk=250)
+    assert sum(issubclass(w.category, DeprecationWarning) for w in rec) == 1
+
+
+def test_make_fit_sharded_shim_warns_once():
+    from repro.core.distributed import make_fit_sharded
+    d = _dense()
+    mesh = make_mesh()
+    fit = make_fit_sharded(mesh, CFG, kind="dense")
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        res, model = fit(d.x, key=FIT_KEY)
+    assert sum(issubclass(w.category, DeprecationWarning) for w in rec) == 1
+    est = GEEK(CFG)
+    est.fit(DenseData(d.x), FIT_KEY, mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(res.labels),
+                                  np.asarray(est.result_.labels))
+
+
+# ---------------------------------------------------------------------------
+# Execution-mode bit-identity matrix through the facade alone
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["dense", "hetero", "sparse"])
+def test_facade_mode_matrix_bit_identity(kind):
+    spec, _, parts = _datasets()[kind]
+    base = GEEK(CFG)
+    base.fit(spec, FIT_KEY)
+    ref = np.asarray(base.result_.labels)
+
+    # streaming (ragged tail), host-numpy input
+    np_parts = tuple(np.asarray(p) for p in parts)
+    np_spec = {"dense": DenseData(np_parts[0]),
+               "hetero": HeteroData(*np_parts),
+               "sparse": SparseData(*np_parts)}[kind]
+    st = GEEK(CFG)
+    st.fit(np_spec, FIT_KEY, chunk=333)
+    np.testing.assert_array_equal(np.asarray(st.result_.labels), ref)
+
+    # sharded (1-device mesh exercises the shard_map path)
+    sh = GEEK(CFG)
+    sh.fit(spec, FIT_KEY, mesh=make_mesh())
+    np.testing.assert_array_equal(np.asarray(sh.result_.labels), ref)
+
+    # predict on the fit data ≡ fit labels
+    lab, _ = sh.predict(spec)
+    np.testing.assert_array_equal(np.asarray(lab), ref)
+
+
+def test_seed_cap_requires_bounded_mode():
+    d = _dense(500)
+    with pytest.raises(ValueError, match="seed_cap"):
+        GEEK(CFG).fit(DenseData(d.x), FIT_KEY, seed_cap=100)
+
+
+def test_bare_array_means_dense_and_tuples_rejected():
+    d = _dense(500)
+    est = GEEK(CFG)
+    est.fit(d.x, FIT_KEY)                       # bare (n, d) array OK
+    assert est.model_.metric == "l2"
+    with pytest.raises(TypeError, match="ambiguous"):
+        GEEK(CFG).fit((d.x, d.x), FIT_KEY)
+
+
+# ---------------------------------------------------------------------------
+# Pluggable seeders
+# ---------------------------------------------------------------------------
+
+def test_kmeanspp_seeder_matches_seed_then_assign():
+    """GEEK(cfg, seeder=KMeansPPSeeder(k)) ≡ baselines.seed_then_assign
+    on the same fixed key — the facade hands non-bucket seeders the
+    whole fit key, so the D^2 draws are identical."""
+    d = _dense()
+    k = 16
+    key = jax.random.PRNGKey(7)
+    est = GEEK(CFG, seeder=KMeansPPSeeder(k))
+    model = est.fit(DenseData(d.x), key)
+    base = baselines.seed_then_assign(d.x, k, key)
+    np.testing.assert_array_equal(np.asarray(est.result_.labels),
+                                  np.asarray(base.labels))
+    np.testing.assert_allclose(np.asarray(est.result_.dists),
+                               np.asarray(base.dists), rtol=0, atol=0)
+    assert int(est.result_.k_star) == k
+    assert model.seeder_id == "kmeans++"
+
+
+def test_scalable_kmeanspp_seeder_end_to_end():
+    d = _dense()
+    k = 16
+    est = GEEK(CFG, seeder=ScalableKMeansPPSeeder(k, rounds=3))
+    model = est.fit(DenseData(d.x), jax.random.PRNGKey(3))
+    assert int(est.result_.k_star) == k
+    assert model.seeder_id == "scalable-kmeans++"
+    # seeds are real data rows (singleton groups -> centers are rows)
+    x = np.asarray(d.x)
+    centers = np.asarray(model.centers)[np.asarray(model.center_valid)]
+    ids = np.asarray(est.result_.seeds.id)
+    assert np.array_equal(centers, x[ids[: len(centers)]])
+
+
+def test_kmeanspp_rejected_for_code_spaces():
+    h = synthetic.geonames_like(KEY, n=600, k=8)
+    with pytest.raises(ValueError, match="metrics"):
+        GEEK(CFG, seeder=KMeansPPSeeder(8)).fit(
+            HeteroData(h.x_num, h.x_cat), FIT_KEY)
+
+
+def test_seeder_k_must_fit_budget():
+    d = _dense(500)
+    with pytest.raises(ValueError, match="k_max"):
+        GEEK(CFG, seeder=KMeansPPSeeder(CFG.k_max + 1)).fit(
+            DenseData(d.x), FIT_KEY)
+
+
+def test_kmeanspp_seeder_streaming_and_sharded_match_incore():
+    """The bit-identity matrix holds for a non-SILK seeder too."""
+    d = _dense()
+    key = jax.random.PRNGKey(5)
+    ref = GEEK(CFG, seeder=KMeansPPSeeder(12))
+    ref.fit(DenseData(d.x), key)
+    st = GEEK(CFG, seeder=KMeansPPSeeder(12))
+    st.fit(DenseData(np.asarray(d.x)), key, chunk=400)
+    np.testing.assert_array_equal(np.asarray(st.result_.labels),
+                                  np.asarray(ref.result_.labels))
+    sh = GEEK(CFG, seeder=KMeansPPSeeder(12))
+    sh.fit(DenseData(d.x), key, mesh=make_mesh())
+    np.testing.assert_array_equal(np.asarray(sh.result_.labels),
+                                  np.asarray(ref.result_.labels))
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint round-trip of pipeline identity + non-SILK serving
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrips_pipeline_identity(tmp_path):
+    d = _dense()
+    est = GEEK(CFG)
+    model = est.fit(DenseData(d.x), FIT_KEY)
+    save_model(str(tmp_path), model)
+    restored = restore_model(str(tmp_path))
+    assert restored.bucketer_id == "lsh"
+    assert restored.seeder_id == "silk"
+    assert restored.static_meta() == model.static_meta()
+
+
+def test_non_silk_fit_checkpoint_sharded_predict(tmp_path):
+    """Acceptance: a non-SILK Seeder runs end-to-end through fit ->
+    checkpoint -> sharded predict."""
+    d = _dense()
+    est = GEEK(CFG, seeder=KMeansPPSeeder(16))
+    model = est.fit(DenseData(d.x), jax.random.PRNGKey(9))
+    save_model(str(tmp_path), model)
+    mesh = make_mesh()
+    restored = restore_model(str(tmp_path), mesh=mesh)
+    assert restored.seeder_id == "kmeans++"
+    lab, _ = GEEK(CFG).predict(DenseData(d.x), model=restored, mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(lab),
+                                  np.asarray(est.result_.labels))
+
+
+def test_predict_partial_batches_match_full(tmp_path):
+    h = synthetic.geonames_like(KEY, n=1000, k=8)
+    est = GEEK(CFG)
+    est.fit(HeteroData(h.x_num, h.x_cat), FIT_KEY)
+    full, _ = est.predict(HeteroData(h.x_num, h.x_cat))
+    part, _ = est.predict(HeteroData(np.asarray(h.x_num),
+                                     np.asarray(h.x_cat)), batch=300)
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(part))

@@ -1,0 +1,73 @@
+"""Public-API lock (DESIGN.md §11).
+
+The supported surface is `repro` / `repro.core` `__all__`. These
+snapshots fail when the surface grows (or shrinks) accidentally — an
+intentional change must edit BOTH the package `__all__` and the
+snapshot here, which is the point: surface changes become visible in
+review.
+"""
+import repro
+import repro.core
+
+#: the locked top-level surface — keep sorted
+REPRO_ALL = [
+    "DenseData",
+    "GEEK",
+    "GeekConfig",
+    "GeekModel",
+    "GeekResult",
+    "HeteroData",
+    "KMeansPPSeeder",
+    "KernelAssigner",
+    "LSHBucketer",
+    "SILKSeeder",
+    "ScalableKMeansPPSeeder",
+    "SparseData",
+    "predict",
+    "restore_model",
+    "save_model",
+]
+
+#: the locked core surface — keep sorted
+REPRO_CORE_ALL = [
+    "DenseData",
+    "GEEK",
+    "GeekConfig",
+    "GeekModel",
+    "GeekResult",
+    "HeteroData",
+    "HeteroTransform",
+    "IdentityTransform",
+    "KMeansPPSeeder",
+    "KernelAssigner",
+    "LSHBucketer",
+    "NumericDiscretizer",
+    "SILKSeeder",
+    "ScalableKMeansPPSeeder",
+    "SeedPairs",
+    "Seeds",
+    "SparseData",
+    "SparseTransform",
+    "as_dataset",
+    "build_model",
+    "discover",
+    "predict",
+    "silk_seeding",
+]
+
+
+def test_repro_surface_locked():
+    assert sorted(repro.__all__) == sorted(REPRO_ALL)
+    assert repro.__all__ == sorted(repro.__all__), "__all__ must stay sorted"
+
+
+def test_repro_core_surface_locked():
+    assert sorted(repro.core.__all__) == sorted(REPRO_CORE_ALL)
+    assert repro.core.__all__ == sorted(repro.core.__all__)
+
+
+def test_surface_resolves():
+    for name in repro.__all__:
+        assert getattr(repro, name) is not None
+    for name in repro.core.__all__:
+        assert getattr(repro.core, name) is not None
