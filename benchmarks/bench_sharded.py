@@ -2,19 +2,24 @@
 
 Tracks the two multi-device hot paths of DESIGN.md §10 in one report:
 
-  - ``fit_sharded/{dense,hetero,sparse}`` — end-to-end
-    ``GEEK.fit(data, key, mesh=…)`` wall time (reservoir discovery +
-    per-device one-pass assignment), as points/sec;
+  - ``fit_sharded/{dense,hetero,sparse}/g=G`` — end-to-end
+    ``GEEK.fit(data, key, mesh=…)`` wall time (distributed SILK
+    discovery + per-device one-pass assignment) at mesh sizes
+    g ∈ {1, 2, 4} (clamped to the available devices), as points/sec;
+  - ``scaling`` — per data type, the throughput ratio of the largest
+    mesh vs g=1 (the tentpole metric of the sharded-discovery path;
+    note single-core hosts serialize the fake devices, so real scaling
+    needs >= g hardware threads);
   - ``predict_sharded/batch=N`` — ``make_predict_sharded`` serving
-    throughput vs batch size (dense L2 model).
+    throughput vs batch size (dense L2 model, full mesh).
 
-Device count changes the numbers, so the mesh size is part of the
-report ``shape`` (the regression gate refuses to compare mismatched
-shapes). CI pins 2 fake CPU devices via
-``XLA_FLAGS=--xla_force_host_platform_device_count=2``; refresh the
+Device count changes the numbers, so the forced device count is part of
+the report ``shape`` (the regression gate refuses to compare mismatched
+shapes). CI pins 4 fake CPU devices via
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``; refresh the
 committed baseline the same way:
 
-  XLA_FLAGS=--xla_force_host_platform_device_count=2 PYTHONPATH=src \\
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \\
       python -m benchmarks.bench_sharded --quick \\
       --out benchmarks/baselines/BENCH_sharded_quick.json
 
@@ -70,19 +75,30 @@ def run(quick: bool = False, out: str | None = None,
         "hetero": HeteroData(hetero.x_num, hetero.x_cat),
         "sparse": SparseData(sparse.sets, sparse.mask),
     }
+    mesh_sizes = [s for s in (1, 2, 4) if s <= g]
+    meshes = {s: make_mesh(devices=jax.devices()[:s]) for s in mesh_sizes}
     fitted = {}  # capture each warmup's model — no extra untimed fit
+    pps_by_g: dict[str, dict[int, float]] = {}
     for name, dataset in fits.items():
-        est = GEEK(cfg)
-        def call(est=est, d=dataset, name=name):
-            """One timed facade fit; stash the first result's model."""
-            model = est.fit(d, fkey, mesh=mesh)
-            fitted.setdefault(name, model)
-            return est.result_
-        sec = timeit(call, iters=2)
-        pps = n / sec
-        points_per_sec[f"fit_sharded/{name}"] = {str(n): round(pps)}
-        emit(f"fit_sharded/{name}/n={n}", sec, f"{pps:.0f} pts/s")
+        pps_by_g[name] = {}
+        for s in mesh_sizes:
+            est = GEEK(cfg)
+            def call(est=est, d=dataset, name=name, s=s):
+                """One timed facade fit; stash the full-mesh model."""
+                model = est.fit(d, fkey, mesh=meshes[s])
+                if s == g:
+                    fitted.setdefault(name, model)
+                return est.result_
+            sec = timeit(call, iters=2)
+            pps = n / sec
+            pps_by_g[name][s] = pps
+            points_per_sec[f"fit_sharded/{name}/g={s}"] = {str(n): round(pps)}
+            emit(f"fit_sharded/{name}/g={s}/n={n}", sec, f"{pps:.0f} pts/s")
     dense_model = fitted["dense"]
+    g_max = mesh_sizes[-1]
+    scaling = {f"fit_sharded/{name}": round(pps_by_g[name][g_max]
+                                            / pps_by_g[name][1], 3)
+               for name in fits}
 
     # -- sharded serving vs batch size -------------------------------------
     from jax.sharding import NamedSharding, PartitionSpec
@@ -113,6 +129,10 @@ def run(quick: bool = False, out: str | None = None,
         "shape": {**shape, "d": int(dense_model.d), "devices": g},
         "batch_sizes": list(batches),
         "points_per_sec": points_per_sec,
+        # headline ratio: largest-mesh fit throughput vs g=1 — the gate
+        # ignores this key (it only walks points_per_sec), it is for
+        # humans and the scaling acceptance check
+        "scaling": scaling,
     }
     if write_json:
         out = out or os.path.join(os.path.dirname(os.path.dirname(

@@ -1,21 +1,29 @@
 """Benchmark-regression gate for CI (the `bench-quick` job).
 
-Compares a freshly produced benchmark report (``bench_assign --quick`` /
+Compares freshly produced benchmark reports (``bench_assign --quick`` /
 ``bench_predict --smoke``) against a committed baseline and fails on a
 >30% throughput regression in any tracked entry:
 
   PYTHONPATH=src python -m benchmarks.check_regress \\
       BENCH_assign_quick.json benchmarks/baselines/BENCH_assign_quick.json
 
+Several current reports (repeats of the same benchmark run) may be
+passed before the baseline; the gate then compares the per-entry
+MEDIAN across the repeats, which tames shared-runner noise far better
+than a single sample:
+
+  PYTHONPATH=src python -m benchmarks.check_regress \\
+      r1.json r2.json r3.json benchmarks/baselines/BENCH_sharded_quick.json
+
 Understands both report schemas:
   - ``us_per_call``     {name: microseconds}          (lower is better)
   - ``points_per_sec``  {name: {batch: pts/sec}}      (higher is better)
 
 Guard rails:
-  - the two reports must describe the SAME benchmark shape — a shape
-    mismatch means the baseline is stale and must be regenerated with
-    the matching --quick/--smoke flags, so the gate errors out (exit 2)
-    rather than comparing apples to oranges;
+  - every current report must describe the SAME benchmark shape as the
+    baseline — a shape mismatch means the baseline is stale and must be
+    regenerated with the matching --quick/--smoke flags, so the gate
+    errors out (exit 2) rather than comparing apples to oranges;
   - shared-runner noise is real, so the default threshold is generous
     (30%) and tunable via --max-regress;
   - escape hatches: the ``skip-bench-gate`` PR label (checked in the
@@ -45,15 +53,32 @@ def _throughputs(report: dict) -> dict[str, float]:
     return out
 
 
-def compare(current: dict, baseline: dict, max_regress: float
+def _median(vals: list[float]) -> float:
+    """Median of a non-empty list (mean of middle two for even length)."""
+    s = sorted(vals)
+    mid = len(s) // 2
+    return s[mid] if len(s) % 2 else (s[mid - 1] + s[mid]) / 2.0
+
+
+def compare(currents: dict | list[dict], baseline: dict, max_regress: float
             ) -> tuple[list[str], list[str]]:
-    """Returns (report_lines, failures)."""
-    if current.get("shape") != baseline.get("shape"):
-        raise ValueError(
-            f"shape mismatch: current={current.get('shape')} vs "
-            f"baseline={baseline.get('shape')} — regenerate the committed "
-            "baseline with the same --quick/--smoke mode")
-    cur = _throughputs(current)
+    """Returns (report_lines, failures).
+
+    ``currents`` may be a single report dict or a list of repeat reports;
+    repeats are reduced to the per-entry median before comparison.
+    """
+    if isinstance(currents, dict):
+        currents = [currents]
+    for i, current in enumerate(currents):
+        if current.get("shape") != baseline.get("shape"):
+            raise ValueError(
+                f"shape mismatch: current[{i}]={current.get('shape')} vs "
+                f"baseline={baseline.get('shape')} — regenerate the "
+                "committed baseline with the same --quick/--smoke mode")
+    flats = [_throughputs(c) for c in currents]
+    names = set().union(*(f.keys() for f in flats))
+    cur = {name: _median([f[name] for f in flats if name in f])
+           for name in names}
     base = _throughputs(baseline)
     if not base:
         raise ValueError("baseline has no us_per_call/points_per_sec entries")
@@ -73,7 +98,9 @@ def compare(current: dict, baseline: dict, max_regress: float
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("current", help="freshly produced benchmark JSON")
+    ap.add_argument("current", nargs="+",
+                    help="freshly produced benchmark JSON(s) — pass "
+                         "several repeats to gate on their median")
     ap.add_argument("baseline", help="committed baseline JSON")
     ap.add_argument("--max-regress", type=float, default=0.30,
                     help="max tolerated fractional throughput drop "
@@ -86,16 +113,20 @@ def main() -> None:
         return
 
     try:
-        with open(args.current) as f:
-            current = json.load(f)
+        currents = []
+        for path in args.current:
+            with open(path) as f:
+                currents.append(json.load(f))
         with open(args.baseline) as f:
             baseline = json.load(f)
-        lines, failures = compare(current, baseline, args.max_regress)
+        lines, failures = compare(currents, baseline, args.max_regress)
     except (OSError, ValueError) as e:
         print(f"[check_regress] unusable inputs: {e}", file=sys.stderr)
         sys.exit(2)
 
-    print(f"[check_regress] {args.current} vs {args.baseline} "
+    label = (args.current[0] if len(args.current) == 1
+             else f"median of {len(args.current)} runs")
+    print(f"[check_regress] {label} vs {args.baseline} "
           f"(threshold: {args.max_regress:.0%} drop)")
     print("\n".join(lines))
     if failures:

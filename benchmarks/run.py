@@ -37,7 +37,7 @@ def main() -> None:
                                              write_json=not quick),
         # device-count-sensitive: the harness never writes the headline
         # BENCH_sharded.json — refresh it via the module CLI with
-        # XLA_FLAGS=--xla_force_host_platform_device_count=2
+        # XLA_FLAGS=--xla_force_host_platform_device_count=4
         "sharded": lambda: bench_sharded.run(quick=quick, write_json=False),
     }
     print("name,us_per_call,derived")

@@ -494,22 +494,109 @@ def _seed_reservoir(present: tuple, boundaries, key: jax.Array, *,
 
 
 # ---------------------------------------------------------------------------
-# Sharded fit — discovery on an all-gathered reservoir, local assignment
+# Sharded fit — distributed discovery by default, gathered as fallback
 # ---------------------------------------------------------------------------
+
+def _resolve_discovery(discovery: str, seed_cap, n: int, bucketer,
+                       seeder) -> str:
+    """Resolve the ``discovery=`` knob to "sharded" or "gathered".
+
+    "sharded" (the default) runs distributed SILK discovery
+    (``core.distributed.discover_sharded``) — implemented for the stock
+    ``LSHBucketer`` + ``SILKSeeder`` pipeline at full coverage. It falls
+    back to "gathered" when a reservoir is requested (``seed_cap``
+    strictly subsamples), when the seeder does not consume buckets
+    (kmeans++-style seeders need the gathered space itself), or when a
+    custom Bucketer/Seeder is plugged in (their key/bucket semantics are
+    not distributable generically). Explicit "gathered" always gathers.
+    """
+    if discovery not in ("sharded", "gathered"):
+        raise ValueError(f"discovery must be 'sharded' or 'gathered', "
+                         f"got {discovery!r}")
+    if discovery == "gathered":
+        return "gathered"
+    subsampled = seed_cap is not None and seed_cap < n
+    stock = (type(bucketer) is LSHBucketer and type(seeder) is SILKSeeder)
+    return "sharded" if (stock and not subsampled) else "gathered"
+
+
+def _check_gather_bytes(kind: str, parts: tuple, n: int,
+                        cfg: GeekConfig) -> None:
+    """Fail fast when the gathered reservoir would be unreasonably big.
+
+    The gathered-discovery path replicates the full reservoir on every
+    device when ``seed_cap=None``; instead of an opaque device OOM this
+    raises with the estimated bytes and the ways out. Sparse data
+    gathers the (n, doph_m) int32 codes, not the raw sets.
+    """
+    if kind == "sparse":
+        est = n * cfg.doph_m * 4
+    else:
+        est = sum(n * int(np.prod(p.shape[1:], dtype=np.int64))
+                  * p.dtype.itemsize for p in parts if p is not None)
+    if est > cfg.gather_cap_bytes:
+        raise ValueError(
+            f"gathered discovery would replicate a ~{est:,}-byte "
+            f"reservoir per device (cap: GeekConfig.gather_cap_bytes="
+            f"{cfg.gather_cap_bytes:,}); use discovery='sharded' "
+            "(distributed discovery, the default for the stock "
+            "pipeline), pass seed_cap= to subsample the reservoir, or "
+            "raise gather_cap_bytes")
+
 
 @functools.lru_cache(maxsize=None)
 def _build_fit_sharded(mesh, cfg: GeekConfig, kind: str, axis: str,
                        none_pattern: tuple[bool, ...], n: int, nl: int,
-                       stride: int, bucketer, seeder, assigner):
+                       stride: int, bucketer, seeder, assigner,
+                       discovery: str = "gathered"):
     """Compile the per-(shape, mesh, config, pipeline) sharded fit.
 
-    The body is ``discover`` + ``Assigner`` on an all-gathered
-    device-local reservoir (DESIGN.md §10) — ``seed_cap=None`` makes the
-    gathered reservoir the dataset in row order, hence bit-identity with
-    the in-core fit, for any pipeline.
+    With ``discovery="sharded"`` the body is distributed SILK discovery
+    (``core.distributed.discover_sharded``: owned-table bucket building
+    behind one tiled all_to_all each way + hierarchical merge) — seeds,
+    labels, centers, radius bit-identical to the in-core fit, with the
+    per-entry sorting work split g ways. With ``"gathered"`` the body is
+    ``discover`` + ``Assigner`` on an all-gathered device-local
+    reservoir (DESIGN.md §10) — ``seed_cap=None`` makes the gathered
+    reservoir the dataset in row order, hence bit-identity for any
+    pipeline, at replicated-discovery cost.
     """
-    from repro.core.distributed import _gather_rows
+    from repro.core.distributed import (_gather_rows, collect_seed_rows,
+                                        discover_sharded)
     from repro.utils.compat import shard_map
+
+    if discovery == "sharded":
+        def body(key, *present):
+            """Per-device fit body: distributed discovery, local assign."""
+            parts = _reinsert_none(present, none_pattern)
+            transform, space_local, seeds, overflow = discover_sharded(
+                kind, parts, key, cfg, axis, n, bucketer=bucketer)
+            # rebuild the seed-member rows on every device (one-owner
+            # psum) and replay the in-core center math on them: the
+            # segment sums see the same rows in the same order
+            space_sel = collect_seed_rows(space_local, seeds.id,
+                                          seeds.valid, axis)
+            local_seeds = seeds._replace(
+                id=jnp.arange(space_sel.shape[0], dtype=jnp.int32))
+            model = assigner.build(space_sel, local_seeds, cfg,
+                                   metric=bucketer.metric(kind),
+                                   bits=bucketer.code_bits(kind, parts, cfg),
+                                   transform=transform,
+                                   bucketer_id=bucketer.name,
+                                   seeder_id=seeder.name)
+            labels, dists = assigner.assign(model, space_local)
+            radius = jax.lax.pmax(
+                assign_mod.cluster_radius(dists, labels, cfg.k_max), axis)
+            model = dataclasses.replace(model, radius=radius)
+            return labels, dists, model, seeds, overflow
+
+        n_present = sum(1 for absent in none_pattern if not absent)
+        mapped = shard_map(
+            body, mesh=mesh,
+            in_specs=(P(),) + (P(axis, None),) * n_present,
+            out_specs=(P(axis), P(axis), P(), P(), P()),
+            check_vma=False)
+        return jax.jit(mapped)
 
     s = -(-nl // stride)                 # per-device reservoir rows
     keep = n if stride == 1 else None    # exact slice only at stride 1
@@ -630,7 +717,8 @@ class GEEK:
 
     def fit(self, data, key: jax.Array, *, mesh=None, mesh_axis: str = "data",
             chunk: int | None = None, seed_cap: int | None = None,
-            boundaries: str = "reservoir") -> GeekModel:
+            boundaries: str = "reservoir",
+            discovery: str = "sharded") -> GeekModel:
         """Fit the pipeline on one dataset; the ONE entry point.
 
         Parameters
@@ -642,9 +730,9 @@ class GEEK:
             PRNG key (consumed exactly as the legacy ``fit_*`` did).
         mesh : jax.sharding.Mesh or None
             Shard the fit over a 1-axis mesh (``utils.compat.make_mesh``).
-            Without ``chunk`` this is the sharded fit (discovery on the
-            all-gathered reservoir); with ``chunk`` the streamed
-            assignment pass runs sharded.
+            Without ``chunk`` this is the sharded fit (distributed
+            discovery by default — see ``discovery``); with ``chunk``
+            the streamed assignment pass runs sharded.
         mesh_axis : str
             Mesh axis name rows are sharded over.
         chunk : int or None
@@ -657,6 +745,16 @@ class GEEK:
         boundaries : {"reservoir", "exact"}
             Hetero streaming only: where numeric quantile boundaries
             come from (see ``core.streaming``).
+        discovery : {"sharded", "gathered"}
+            Sharded fits only (``mesh=`` without ``chunk=``): "sharded"
+            (default) distributes SILK discovery itself — device-local
+            bucket tables behind a tiled all_to_all exchange plus a
+            hierarchical merge, bit-identical to the in-core fit and
+            scaling with the mesh. Falls back to "gathered" (replicated
+            discovery on the all-gathered reservoir) when ``seed_cap``
+            subsamples, the seeder has ``needs_buckets=False``
+            (kmeans++-style), or a custom Bucketer/Seeder is plugged
+            in. "gathered" forces the reservoir path.
 
         Returns
         -------
@@ -682,7 +780,7 @@ class GEEK:
                                                 boundaries, mesh, mesh_axis)
         elif mesh is not None:
             result, model = self._fit_sharded(data, key, mesh, mesh_axis,
-                                              seed_cap)
+                                              seed_cap, discovery)
         else:
             if seed_cap is not None:
                 raise ValueError("seed_cap needs a bounded-memory mode: "
@@ -731,8 +829,8 @@ class GEEK:
                                         mesh_axis=mesh_axis,
                                         assigner=self.assigner)
 
-    def _fit_sharded(self, data, key, mesh, mesh_axis, seed_cap):
-        """Sharded fit: rows split over the mesh, replicated discovery."""
+    def _fit_sharded(self, data, key, mesh, mesh_axis, seed_cap, discovery):
+        """Sharded fit: rows split over the mesh, discovery per knob."""
         from repro.core.distributed import _pad_and_shard
         cfg, kind, parts = self.cfg, data.kind, data.parts
         none_pattern = tuple(p is None for p in parts)
@@ -741,11 +839,15 @@ class GEEK:
         g = mesh.shape[mesh_axis]
         dev, n = _pad_and_shard([p for p in parts if p is not None],
                                 g, mesh, mesh_axis)
+        mode = _resolve_discovery(discovery, seed_cap, n, self.bucketer,
+                                  self.seeder)
         stride = (1 if seed_cap is None or seed_cap >= n
                   else -(-n // seed_cap))
+        if mode == "gathered" and stride == 1:
+            _check_gather_bytes(kind, parts, n, cfg)
         fn = _build_fit_sharded(mesh, cfg, kind, mesh_axis, none_pattern, n,
                                 -(-n // g), stride, self.bucketer,
-                                self.seeder, self.assigner)
+                                self.seeder, self.assigner, mode)
         labels, dists, model, seeds, overflow = fn(key, *dev)
         result = GeekResult(labels[:n], dists[:n], model.centers,
                             model.center_valid, model.k_star, model.radius,

@@ -23,6 +23,8 @@ from repro.utils.hashing import run_starts
 
 
 class BucketTables(NamedTuple):
+    """T LSH hash tables over the same n objects (see module docstring)."""
+
     ids: jax.Array          # (T, n) int32 — data ids, sorted by bucket within table
     segments: jax.Array     # (T, n) int32 — dense bucket index within table
     num_buckets: jax.Array  # (T,)  int32 — # non-empty buckets per table
@@ -30,14 +32,17 @@ class BucketTables(NamedTuple):
 
     @property
     def num_tables(self) -> int:
+        """Number of hash tables T."""
         return self.ids.shape[0]
 
     @property
     def n(self) -> int:
+        """Number of objects per table."""
         return self.ids.shape[1]
 
     @property
     def total_bucket_cap(self) -> int:
+        """Static cap on global bucket ids: T · buckets_per_table."""
         return self.num_tables * self.buckets_per_table
 
     def flatten(self) -> tuple[jax.Array, jax.Array]:
@@ -87,6 +92,7 @@ def partition_by_signature(sigs: jax.Array) -> BucketTables:
     L, n = sigs.shape
 
     def one_table(sig):
+        """Sort one table's signatures into (ids, segments, n_buckets)."""
         order = jnp.argsort(sig)
         ss = sig[order]
         starts = run_starts(ss)
@@ -95,3 +101,81 @@ def partition_by_signature(sigs: jax.Array) -> BucketTables:
 
     ids, segments, nb = jax.vmap(one_table)(sigs)
     return BucketTables(ids, segments, nb.astype(jnp.int32), n)
+
+
+# ---------------------------------------------------------------------------
+# Owned-table slices — the bucket-id-range partition of the sharded fit
+# ---------------------------------------------------------------------------
+# Global bucket ids are table-major (``flatten``: table·buckets_per_table
+# + local), so giving device j a contiguous block of *tables* IS a
+# contiguous bucket-id-range partition. These helpers run the exact
+# per-table math of ``partition_even`` / ``partition_by_signature`` on an
+# owned slice, and additionally return the inverse map ``b_of_id``
+# (bucket of each object) that the distributed majority vote exchanges
+# back to the id owners (``core.distributed.discover_sharded``).
+
+def rank_partition_slice(h_cols: jax.Array, t: int):
+    """Algorithm 1 on an owned column slice of the QALSH hash matrix.
+
+    Per-column math is identical to ``partition_even`` (stable argsort +
+    even rank cut), so table τ built here from the full column h[:, τ]
+    is bit-identical to table τ of the in-core fit.
+
+    Parameters
+    ----------
+    h_cols : (n, mt) float array
+        The mt owned tables' hash values for ALL n objects.
+    t : int
+        Buckets per table.
+
+    Returns
+    -------
+    (ids, segments, b_of_id, sizes)
+        ``ids``/``segments`` (mt, n) as in ``BucketTables``; ``b_of_id``
+        (mt, n) maps object id -> its bucket in each owned table;
+        ``sizes`` (mt, t) per-bucket entry counts.
+    """
+    n, mt = h_cols.shape
+    order = jnp.argsort(h_cols, axis=0)                 # (n, mt) — ids by rank
+    ranks = jnp.arange(n, dtype=jnp.int32)
+    seg = (ranks * t // n).astype(jnp.int32)            # (n,) even partition
+    ids = order.T.astype(jnp.int32)                     # (mt, n)
+    segments = jnp.broadcast_to(seg, (mt, n))
+    b_of_id = jax.vmap(
+        lambda o: jnp.zeros((n,), jnp.int32).at[o].set(seg))(ids)
+    sizes = jax.ops.segment_sum(jnp.ones((n,), jnp.int32), seg,
+                                num_segments=t)
+    return ids, segments, b_of_id, jnp.broadcast_to(sizes, (mt, t))
+
+
+def signature_partition_slice(sigs: jax.Array):
+    """Algorithms 2 & 3 on an owned row slice of the signature matrix.
+
+    Per-table math is identical to ``partition_by_signature`` (stable
+    argsort of the full signature row + run numbering), so table τ built
+    here is bit-identical to table τ of the in-core fit.
+
+    Parameters
+    ----------
+    sigs : (mt, n) uint32
+        The mt owned tables' MinHash signatures for ALL n objects.
+
+    Returns
+    -------
+    (ids, segments, b_of_id, sizes)
+        As in ``rank_partition_slice``; bucket cap is n per table.
+    """
+    n = sigs.shape[1]
+
+    def one_table(sig):
+        """Per-table signature grouping plus the bucket-of-object map."""
+        order = jnp.argsort(sig)
+        ss = sig[order]
+        starts = run_starts(ss)
+        seg = jnp.cumsum(starts.astype(jnp.int32)) - 1
+        b_of_id = jnp.zeros((n,), jnp.int32).at[order].set(seg)
+        sizes = jax.ops.segment_sum(jnp.ones((n,), jnp.int32), seg,
+                                    num_segments=n)
+        return order.astype(jnp.int32), seg, b_of_id, sizes
+
+    return jax.vmap(one_table)(sigs)

@@ -5,19 +5,32 @@ Two complementary distributed paths live here:
 
 1. **Unified sharded fit** — the peer of the in-core and streaming
    paths, reached through the facade: ``GEEK(cfg).fit(data, key,
-   mesh=…)`` (``repro.core.api``, which owns the sharded fit body and
-   routes it through the same Bucketer/Seeder/Assigner protocols as
+   mesh=…)`` (``repro.core.api``, which owns the sharded fit bodies and
+   routes them through the same Bucketer/Seeder/Assigner protocols as
    every other mode). All three data types run the same program:
    per-device coding through the persisted ``Transform`` pipeline
-   (``model.encode``), discovery on an all-gathered device-local
-   reservoir (bit-identical to the in-core seeds when the reservoir
-   covers all points — the same contract as ``core.streaming``), and a
-   local one-pass assignment through the shared ``predict_*`` dispatch.
-   It returns a canonical ``GeekModel`` that round-trips the checkpoint
-   manager and serves through ``make_predict_sharded``. This module
-   keeps the sharding *machinery* (``_pad_and_shard``,
-   ``_gather_rows``, ``make_predict_sharded``) plus the deprecated
-   ``make_fit_sharded`` shim over the facade.
+   (``model.encode``), discovery, and a local one-pass assignment
+   through the shared ``predict_*`` dispatch. Discovery comes in two
+   modes behind the ``discovery=`` knob (DESIGN.md §10):
+
+   - ``"sharded"`` (default, ``discover_sharded`` below) — DISTRIBUTED
+     SILK discovery: device-local bucket tables after one tiled
+     all_to_all of the hash columns, device-local majority voting on
+     owned rows, hierarchical group merge. Bit-identical to the in-core
+     fit at full coverage, with the heavy per-entry sort work split g
+     ways — fit throughput scales with the mesh.
+   - ``"gathered"`` (fallback for subsampled reservoirs and custom
+     Bucketer/Seeder pipelines) — discovery replicated on an
+     all-gathered device-local reservoir (bit-identical when the
+     reservoir covers all points — the same contract as
+     ``core.streaming``), bounded by ``GeekConfig.gather_cap_bytes``.
+
+   Either way the fit returns a canonical ``GeekModel`` that
+   round-trips the checkpoint manager and serves through
+   ``make_predict_sharded``. This module keeps the sharding *machinery*
+   (``_pad_and_shard``, ``_gather_rows``, the layout exchanges, the
+   distributed-discovery stages, ``make_predict_sharded``) plus the
+   deprecated ``make_fit_sharded`` shim over the facade.
 
 2. **Table-sync dense fit** (``make_fit_dense``) — the paper's MPI
    design mapped onto JAX collectives, stage by stage:
@@ -41,9 +54,12 @@ Two complementary distributed paths live here:
    of the paper carry over verbatim: every device owns m/g complete
    tables (same N_B·D_B), and only C_shared pairs — not bins — cross
    the wire. Discovery here is sharded but *approximate* (sample
-   quantiles, per-device SILK rounds); use ``make_fit_sharded`` when
-   bit-identity with the in-core fit matters more than sharding the
-   discovery phase itself.
+   quantiles, per-device SILK rounds). The unified path's
+   ``discovery="sharded"`` mode supersedes it for exact work: it keeps
+   the same table-ownership layout but rebuilds each table from exact
+   full columns, so it shards discovery WITHOUT giving up bit-identity;
+   ``make_fit_dense`` remains as the paper-faithful approximate
+   benchmark variant.
 
 Mesh/axis conventions (docs/architecture.md): every entry point takes a
 1-axis ``jax.sharding.Mesh`` and the *name* of the data-parallel axis
@@ -112,15 +128,15 @@ def make_fit_sharded(mesh, cfg: GeekConfig, *, kind: str = "dense",
                      axis: str = "data", seed_cap: int | None = None):
     """Deprecated shim: ``GEEK(cfg).fit(data, key, mesh=…)``.
 
-    Builds the unified multi-device fit for one data type: discovery on
-    an all-gathered device-local reservoir (replicated, so seeds are
-    computed once and identically everywhere), then a per-device
-    one-pass assignment through the shared kernel dispatch. With
-    ``seed_cap=None`` the reservoir is the entire dataset and
-    labels/centers are **bit-identical** to the in-core fit — the same
-    contract ``core.streaming`` provides, here with the assignment pass
-    (and its memory) split g ways. The facade form takes the dataset
-    spec instead of ``kind``::
+    Builds the unified multi-device fit for one data type: discovery
+    per the facade's ``discovery=`` resolution (distributed SILK by
+    default, gathered-reservoir fallback — see the module docstring),
+    then a per-device one-pass assignment through the shared kernel
+    dispatch. With ``seed_cap=None`` labels/centers are
+    **bit-identical** to the in-core fit — the same contract
+    ``core.streaming`` provides, here with both the discovery sort work
+    and the assignment pass (and its memory) split g ways. The facade
+    form takes the dataset spec instead of ``kind``::
 
         GEEK(cfg).fit(HeteroData(x_num, x_cat), key, mesh=mesh,
                       mesh_axis=axis, seed_cap=seed_cap)
@@ -157,6 +173,316 @@ def make_fit_sharded(mesh, cfg: GeekConfig, *, kind: str = "dense",
         return est.result_, model
 
     return fit
+
+
+# ---------------------------------------------------------------------------
+# Distributed SILK discovery — the default sharded fit (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+# Device-local bucket tables, one tiled all_to_all per direction, and a
+# hierarchical SILK merge — bit-identical to the in-core fit because every
+# stage either replays the exact in-core math on exactly the in-core
+# inputs (bucket building on full columns, bin formation on the gathered
+# signature vector, the replicated dedup round) or re-partitions work
+# whose result is order-independent (per-object majority rows, exact
+# top-pair_cap merge, integer core-size psum).
+#
+# Layout conventions (g devices, axis "data", n true rows, nl = n_pad/g):
+#   row layout    — (nl, ·) per device, global row id = axis_index·nl + i
+#   table layout  — each device owns a contiguous block of hash tables;
+#                   global bucket ids are table-major (BucketTables.flatten),
+#                   so table ownership IS a bucket-id-range partition
+#   wire          — hash values / signatures cross once (row -> table
+#                   layout), the inverse bucket map crosses once back
+#                   (table -> row layout, narrow ints under
+#                   cfg.compress_collectives); per SILK round only
+#                   bucket-level vectors and the top-pair_cap candidate
+#                   pairs move (all_gather), never per-entry data.
+
+
+def exchange_columns(x_local: jax.Array, axis: str, n: int) -> jax.Array:
+    """Row layout -> column-owner layout: (nl, W) -> (n, W_pad/g).
+
+    Pads the trailing columns to a mesh multiple (owners of pad columns
+    see zeros — callers mask pad tables out downstream) and slices the
+    gathered rows back to the true n, so each device holds FULL columns
+    of its owned slice in global row order.
+    """
+    g = axis_size(axis)
+    w = x_local.shape[1]
+    wp = -(-w // g) * g
+    if wp != w:
+        x_local = jnp.pad(x_local, ((0, 0), (0, wp - w)))
+    cols = jax.lax.all_to_all(x_local, axis, split_axis=1, concat_axis=0,
+                              tiled=True)               # (n_pad, wp/g)
+    return cols[:n]
+
+
+def exchange_rows(x_local: jax.Array, axis: str, n: int) -> jax.Array:
+    """Row layout -> row-owner layout: (R, nl) -> (R_pad/g, n).
+
+    The transpose twin of ``exchange_columns`` for (tables, rows)-shaped
+    payloads (MinHash signature matrices).
+    """
+    g = axis_size(axis)
+    r = x_local.shape[0]
+    rp = -(-r // g) * g
+    if rp != r:
+        x_local = jnp.pad(x_local, ((0, rp - r), (0, 0)))
+    rows = jax.lax.all_to_all(x_local, axis, split_axis=0, concat_axis=1,
+                              tiled=True)               # (rp/g, n_pad)
+    return rows[:, :n]
+
+
+def scatter_table_rows(b_of_id: jax.Array, axis: str, sentinel: int,
+                       compress: bool) -> jax.Array:
+    """Table layout -> row layout: (mt, n) bucket map -> (T_pad, nl).
+
+    The one bulk exchange per fit that goes *back* from table owners to
+    id owners: each device ends up with, for its own rows, the bucket
+    those rows landed in under EVERY table. Pad rows get ``sentinel``.
+    With ``compress`` the payload ships as the narrowest lossless
+    unsigned int (``repro.distributed.compression``) — bucket ids are
+    < sentinel, so this is exact.
+    """
+    g = axis_size(axis)
+    n = b_of_id.shape[1]
+    n_pad = -(-n // g) * g
+    if n_pad != n:
+        b_of_id = jnp.pad(b_of_id, ((0, 0), (0, n_pad - n)),
+                          constant_values=sentinel)
+    if compress:
+        from repro.distributed.compression import narrow_int_all_to_all
+        return narrow_int_all_to_all(b_of_id, axis, sentinel + 1,
+                                     split_axis=1, concat_axis=0)
+    return jax.lax.all_to_all(b_of_id, axis, split_axis=1, concat_axis=0,
+                              tiled=True)               # (mt*g, nl)
+
+
+def collect_seed_rows(space_local: jax.Array, ids: jax.Array,
+                      valid: jax.Array, axis: str) -> jax.Array:
+    """Gather the rows named by global ``ids`` onto every device.
+
+    Each id has exactly one owner (contiguous row ranges partition the
+    padded rows), so a masked-gather + psum reconstructs the rows with
+    one zero-add per non-owner — exact for int codes and, for floats,
+    bitwise except the (-0.0 + 0.0) corner. Invalid lanes come back as
+    zero rows, matching the in-core center math where invalid seed
+    lanes are weighted to zero anyway.
+    """
+    nl = space_local.shape[0]
+    lo = jax.lax.axis_index(axis) * nl
+    own = valid & (ids >= lo) & (ids < lo + nl)
+    rel = jnp.clip(ids - lo, 0, nl - 1)
+    rows = jnp.where(own[:, None], space_local[rel],
+                     jnp.zeros((), space_local.dtype))
+    return jax.lax.psum(rows, axis)
+
+
+def fit_transform_sharded(kind: str, parts: tuple, tkey, cfg: GeekConfig,
+                          axis: str, n: int):
+    """Fit the persistent ``Transform`` from sharded rows, exactly.
+
+    Dense (identity) and sparse (keyed DOPH) transforms are
+    data-independent. The hetero quantile boundaries need global
+    per-column sorts: columns are exchanged to owners
+    (``exchange_columns``), each owner replays the in-core
+    sort + ``quantile_boundaries`` math on its full columns, and the
+    small (d_num, t_cat-1) boundary matrix is all-gathered back — the
+    same boundaries ``NumericDiscretizer.fit`` computes in-core, bit
+    for bit.
+    """
+    from repro.core.geek import make_hetero_transform, make_sparse_transform
+    from repro.core.model import NumericDiscretizer, quantile_boundaries
+    from repro.core.transform import HeteroTransform, IdentityTransform
+    if kind == "dense":
+        return IdentityTransform()
+    if kind == "sparse":
+        return make_sparse_transform(tkey, cfg)
+    x_num = parts[0]
+    if x_num is None or x_num.shape[1] == 0:
+        return make_hetero_transform(x_num, cfg.t_cat)
+    d_num = x_num.shape[1]
+    cols = exchange_columns(x_num, axis, n)              # (n, d_num_pad/g)
+    b_local = quantile_boundaries(jnp.sort(cols, axis=0), cfg.t_cat)
+    b_all = jax.lax.all_gather(b_local, axis)
+    boundaries = b_all.reshape(-1, b_local.shape[1])[:d_num]
+    return HeteroTransform(NumericDiscretizer(boundaries))
+
+
+def silk_seeding_sharded(ids_t, seg_t, sizes, bins_rows, skey,
+                         cfg: GeekConfig, axis: str, *, n: int,
+                         num_tables: int, cap_t: int):
+    """Distributed SILK: device-local voting, hierarchical group merge.
+
+    Per round (L rounds + dedup, same keys as ``silk_seeding``):
+
+    1. each table owner MinHashes its owned buckets; the per-bucket
+       (sig, size) vectors — bucket-level, not entry-level — are
+       all-gathered and sliced to the exact in-core layout;
+    2. bin formation runs replicated via the shared
+       ``silk.bins_from_signatures`` (identical on every device);
+    3. majority voting runs device-locally on each device's own rows
+       (``silk.rowwise_majority`` over the exchanged bucket map) — the
+       heavy per-entry sort, now 1/g per device; per-bin core sizes are
+       an exact integer psum;
+    4. each device compacts its top-``pair_cap`` candidate pairs, the
+       (g, pair_cap) candidates are all-gathered, and one more
+       ``silk.compact_pairs`` yields the exact global top-``pair_cap``
+       (the global prefix is contained in the union of local prefixes);
+       overflow is computed from the psummed true candidate count.
+
+    The dedup round and top-group selection then run replicated on the
+    merged (bounded, n-independent) pairs — literally the in-core
+    ``silk_round`` + ``select_top_groups``.
+
+    Parameters
+    ----------
+    ids_t, seg_t : (mt, n) int32
+        Owned-table bucket entries (``rank_partition_slice`` /
+        ``signature_partition_slice``).
+    sizes : (mt, cap_t) int32
+        Owned-table per-bucket sizes.
+    bins_rows : (T_pad, nl) int32
+        Exchanged bucket map: bucket of each local row under every
+        global table (``scatter_table_rows``; pad slots = ``cap_t``).
+    skey : PRNG key
+        SILK key (replicated).
+    n, num_tables, cap_t : int
+        True row count, true table count, per-table bucket cap.
+
+    Returns
+    -------
+    (seeds, overflow)
+        The ``Seeds`` contract with GLOBAL dataset row ids, plus the
+        total pair-budget overflow — both replicated and bit-identical
+        to ``silk_seeding`` on the in-core bucket tables.
+    """
+    from repro.core.silk import (SeedPairs, bins_from_signatures,
+                                 compact_pairs, rowwise_majority)
+    idx = jax.lax.axis_index(axis)
+    nl = bins_rows.shape[1]
+    nbcap = num_tables * cap_t
+    table_keys = derive_hash_keys(skey, (cfg.silk_l + 1, cfg.silk_k))
+
+    sizes_all = jax.lax.all_gather(sizes, axis)
+    sizes_all = sizes_all.reshape(-1, cap_t)[:num_tables]
+    bucket_valid = (sizes_all > 0).reshape(-1)           # (nbcap,) replicated
+
+    gid = idx * nl + jnp.arange(nl, dtype=jnp.int32)     # global row ids
+    tb = bins_rows.T                                     # (nl, T_pad)
+    goff = (jnp.arange(tb.shape[1], dtype=jnp.int32) * cap_t)[None, :]
+    entry_real = (tb < cap_t) & (gid < n)[:, None]
+    gbucket = jnp.where(entry_real, tb + goff, nbcap)    # sentinel = nbcap
+
+    rounds = []
+    for r in range(cfg.silk_l):
+        # 1. bucket-level signatures: local MinHash, small all_gather
+        sig_t = jax.vmap(
+            lambda i, s: lsh.minhash_over_segments(i, s, cap_t,
+                                                   table_keys[r])
+        )(ids_t, seg_t)
+        sig = jax.lax.all_gather(sig_t, axis)
+        sig = sig.reshape(-1, cap_t)[:num_tables].reshape(-1)
+        # 2. bins, replicated — the shared in-core helper
+        bin_of_bucket, bin_nbuckets = bins_from_signatures(sig, bucket_valid)
+        # 3. device-local majority vote on owned rows
+        ebin = jnp.where(entry_real,
+                         bin_of_bucket[jnp.clip(gbucket, 0, nbcap - 1)],
+                         nbcap)
+        srt, maj = rowwise_majority(ebin, bin_nbuckets, 2)
+        core = jax.ops.segment_sum(
+            maj.astype(jnp.int32).reshape(-1),
+            jnp.where(maj, srt, nbcap).reshape(-1),
+            num_segments=nbcap + 1)[:nbcap]
+        core_size = jax.lax.psum(core, axis)
+        keep_bin = core_size >= cfg.delta
+        new_group_of_bin = jnp.cumsum(keep_bin.astype(jnp.int32)) - 1
+        num_groups = keep_bin.sum().astype(jnp.int32)
+        # 4. local compaction -> all_gather -> exact global top-pair_cap
+        srt_c = jnp.clip(srt, 0, nbcap - 1)
+        out_valid = maj & keep_bin[srt_c]
+        out_group = jnp.where(out_valid, new_group_of_bin[srt_c], -1)
+        out_ids = jnp.broadcast_to(gid[:, None], srt.shape)
+        lg, li, lv, _ = compact_pairs(out_group.reshape(-1),
+                                      out_ids.reshape(-1),
+                                      out_valid.reshape(-1), cfg.pair_cap)
+        mg = jax.lax.all_gather(lg, axis).reshape(-1)
+        mi = jax.lax.all_gather(li, axis).reshape(-1)
+        mv = jax.lax.all_gather(lv, axis).reshape(-1)
+        rg, ri, rv, _ = compact_pairs(mg, mi, mv, cfg.pair_cap)
+        total = jax.lax.psum(out_valid.sum().astype(jnp.int32), axis)
+        overflow_r = jnp.maximum(total - cfg.pair_cap, 0)
+        rounds.append(SeedPairs(rg, ri, rv, num_groups, overflow_r))
+
+    # dedup + selection, replicated on the merged pairs — in-core verbatim
+    offs = (jnp.arange(cfg.silk_l, dtype=jnp.int32) * cfg.pair_cap)[:, None]
+    r_group = jnp.stack([p.group for p in rounds])
+    r_ids = jnp.stack([p.id for p in rounds])
+    r_valid = jnp.stack([p.valid for p in rounds])
+    cat_group = jnp.where(r_valid, r_group + offs, -1).reshape(-1)
+    cat_ids = r_ids.reshape(-1)
+    cat_valid = r_valid.reshape(-1)
+    group_cap = cfg.silk_l * cfg.pair_cap
+    seg = jnp.where(cat_valid, cat_group, group_cap - 1)
+    dedup = silk_round(cat_ids, seg, cat_valid, group_cap,
+                       table_keys[cfg.silk_l], 1, 1, cfg.pair_cap)
+    seeds = select_top_groups(dedup, cfg.pair_cap, cfg.k_max)
+    overflow = sum(p.overflow for p in rounds) + dedup.overflow
+    return seeds, overflow
+
+
+def discover_sharded(kind: str, parts: tuple, key, cfg: GeekConfig,
+                     axis: str, n: int, *, bucketer):
+    """Stage 1 + 2 of the sharded fit with DISTRIBUTED discovery.
+
+    The sharded peer of ``api.discover`` for the stock
+    LSHBucketer + SILKSeeder pipeline: per-device coding, owned-table
+    bucket building after one tiled all_to_all, and hierarchical SILK
+    (``silk_seeding_sharded``). Key consumption routes through
+    ``bucketer.split_key`` — the same anchor as every other mode — so
+    seeds are bit-identical to the in-core fit at full coverage.
+
+    Returns ``(transform, space_local, seeds, overflow)`` with
+    ``space_local`` the device's coded row shard and ``seeds`` carrying
+    global dataset row ids.
+    """
+    from repro.core.buckets import (rank_partition_slice,
+                                    signature_partition_slice)
+    from repro.core.geek import _code_items
+    tkey, bkeys, skey = bucketer.split_key(kind, key)
+    transform = fit_transform_sharded(kind, parts, tkey, cfg, axis, n)
+    space_local = transform(*parts)                      # (nl, d')
+
+    if kind == "dense":
+        (k_proj,) = bkeys
+        a = lsh.qalsh_projections(k_proj, space_local.shape[1], cfg.m,
+                                  dtype=space_local.dtype)
+        h_local = lsh.qalsh_hash(space_local, a)         # (nl, m)
+        h_cols = exchange_columns(h_local, axis, n)      # (n, m_pad/g)
+        ids_t, seg_t, b_of_id, sizes = rank_partition_slice(h_cols, cfg.t)
+        num_tables, cap_t = cfg.m, cfg.t
+    else:
+        k_item, k_sig = bkeys
+        items = _code_items(space_local, k_item)
+        sig_keys = derive_hash_keys(k_sig, (cfg.bucket_l, cfg.bucket_k))
+        sigs = lsh.minhash_signatures(items, jnp.ones_like(items, bool),
+                                      sig_keys)          # (L, nl)
+        sig_rows = exchange_rows(sigs, axis, n)          # (L_pad/g, n)
+        ids_t, seg_t, b_of_id, sizes = signature_partition_slice(sig_rows)
+        num_tables, cap_t = cfg.bucket_l, n
+
+    # mask pad tables before shipping the bucket map back to id owners
+    mt = b_of_id.shape[0]
+    gt = jax.lax.axis_index(axis) * mt + jnp.arange(mt, dtype=jnp.int32)
+    b_of_id = jnp.where((gt < num_tables)[:, None], b_of_id, cap_t)
+    bins_rows = scatter_table_rows(b_of_id, axis, cap_t,
+                                   cfg.compress_collectives)  # (T_pad, nl)
+
+    seeds, overflow = silk_seeding_sharded(ids_t, seg_t, sizes, bins_rows,
+                                           skey, cfg, axis, n=n,
+                                           num_tables=num_tables,
+                                           cap_t=cap_t)
+    return transform, space_local, seeds, overflow
 
 
 # ---------------------------------------------------------------------------

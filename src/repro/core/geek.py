@@ -85,8 +85,15 @@ class GeekConfig:
     # int8-quantized ring all-reduce (repro.distributed.compression) for
     # the refine-sweep (k, d) partial sums — 4x fewer wire bytes; counts
     # stay an exact psum. Approximate: centers move within quantization
-    # error per sweep. Table-sync distributed path only.
+    # error per sweep. Table-sync distributed path only. In the
+    # sharded-discovery fit the same flag narrows the (integer) bucket
+    # map exchange to uint8/uint16 on the wire — lossless, so exact.
     compress_collectives: bool = False
+    # gathered-discovery safety cap: a sharded fit that resolves to
+    # discovery="gathered" with a full reservoir (seed_cap=None) raises
+    # when the estimated gathered-reservoir bytes per device exceed
+    # this, instead of OOMing opaquely (api._check_gather_bytes).
+    gather_cap_bytes: int = 1 << 31
 
 
 class GeekResult(NamedTuple):

@@ -44,13 +44,92 @@ class Seeds(NamedTuple):
     k_max: int             # static budget
 
 
-def _compact_pairs(group, ids, valid, cap: int):
-    """Keep at most ``cap`` pairs, lowest group ids first (deterministic)."""
+def compact_pairs(group, ids, valid, cap: int):
+    """Keep at most ``cap`` pairs, lowest group ids first (deterministic).
+
+    Valid pairs sort ahead of invalid ones by (group, id), so the kept
+    prefix is a pure function of the *set* of valid (group, id) pairs —
+    which is what makes the hierarchical distributed merge exact: the
+    global top-``cap`` is always contained in the union of per-device
+    top-``cap`` prefixes (``core.distributed.silk_seeding_sharded``).
+    Returns ``(group, ids, valid, overflow)`` with ``overflow`` counting
+    valid pairs dropped by the cap.
+    """
     invalid = ~valid
     order = jnp.lexsort((ids, group, invalid))
     overflow = jnp.maximum(valid.sum() - cap, 0)
     take = order[:cap]
     return group[take], ids[take], valid[take], overflow
+
+
+#: deprecated private alias (pre-PR-6 name), kept for external callers
+_compact_pairs = compact_pairs
+
+
+def bins_from_signatures(sig: jax.Array, bucket_valid: jax.Array):
+    """Group buckets with colliding signatures into bins (paper §3.2).
+
+    Bins are numbered in ascending-signature order — a pure function of
+    the signature *values*, never of bucket layout — so in-core and
+    distributed callers that feed the same (sig, valid) vectors get
+    bit-identical bin structure. Invalid buckets sort last and never
+    start or join a bin.
+
+    Parameters
+    ----------
+    sig : (nbcap,) uint32
+        Per-bucket MinHash signature (``lsh.minhash_over_segments``).
+    bucket_valid : (nbcap,) bool
+        True for non-empty buckets.
+
+    Returns
+    -------
+    (bin_of_bucket, bin_nbuckets)
+        ``bin_of_bucket`` maps bucket -> dense bin id (garbage for
+        invalid buckets — never dereference those); ``bin_nbuckets`` is
+        the number of buckets in each bin.
+    """
+    nbcap = sig.shape[0]
+    border = jnp.lexsort((sig, ~bucket_valid))           # valid first, by sig
+    sig_s = sig[border]
+    bval_s = bucket_valid[border]
+    bstarts = run_starts(sig_s, valid=bval_s)
+    bin_id_s = jnp.cumsum(bstarts.astype(jnp.int32)) - 1
+    bin_of_bucket = jnp.zeros((nbcap,), jnp.int32).at[border].set(bin_id_s)
+    bin_nbuckets = jax.ops.segment_sum(bval_s.astype(jnp.int32), bin_id_s,
+                                       num_segments=nbcap)
+    return bin_of_bucket, bin_nbuckets
+
+
+def rowwise_majority(bins_rows: jax.Array, bin_nbuckets: jax.Array,
+                     min_bin_size: int):
+    """Majority voting, re-expressed per object (one row per object).
+
+    ``bins_rows[i, t]`` is the bin that object i's bucket in table t
+    landed in (sentinel ``nbcap`` when the slot is padding). Each object
+    appears exactly once per table, so the multiset of a row's bin
+    values IS the multiset of that object's (bin, id) entries in the
+    flattened layout ``silk_round`` votes over — sorting the row and
+    counting runs yields the same (count·2 > |Bin|) majority verdicts,
+    just partitioned by object instead of globally. This is what lets
+    the distributed path vote on id-sharded rows and reduce only the
+    small per-bin core sizes (``core.distributed``).
+
+    Returns ``(srt, maj)``: the row-sorted bins and a mask that is True
+    at the first entry of each majority run.
+    """
+    nbcap = bin_nbuckets.shape[0]
+    srt = jnp.sort(bins_rows, axis=1)
+    left = jax.vmap(lambda r: jnp.searchsorted(r, r, side="left"))(srt)
+    right = jax.vmap(lambda r: jnp.searchsorted(r, r, side="right"))(srt)
+    cnt = (right - left).astype(jnp.int32)
+    first = jnp.concatenate(
+        [jnp.ones((srt.shape[0], 1), bool), srt[:, 1:] != srt[:, :-1]],
+        axis=1)
+    real = srt < nbcap
+    nb = bin_nbuckets[jnp.clip(srt, 0, nbcap - 1)]
+    maj = first & real & (cnt * 2 > nb) & (nb >= min_bin_size)
+    return srt, maj
 
 
 def silk_round(
@@ -72,15 +151,8 @@ def silk_round(
     sig = minhash_over_segments(flat_ids, flat_seg, nbcap, keys, valid=entry_valid)
     bucket_valid = sizes > 0
 
-    # -- bins: group buckets by signature ----------------------------------
-    border = jnp.lexsort((sig, ~bucket_valid))           # valid first, by sig
-    sig_s = sig[border]
-    bval_s = bucket_valid[border]
-    bstarts = run_starts(sig_s, valid=bval_s)
-    bin_id_s = jnp.cumsum(bstarts.astype(jnp.int32)) - 1
-    bin_of_bucket = jnp.zeros((nbcap,), jnp.int32).at[border].set(bin_id_s)
-    bin_nbuckets = jax.ops.segment_sum(bval_s.astype(jnp.int32), bin_id_s,
-                                       num_segments=nbcap)
+    # -- bins: group buckets by signature (shared with the sharded path) ---
+    bin_of_bucket, bin_nbuckets = bins_from_signatures(sig, bucket_valid)
 
     # -- majority voting over (bin, id) pairs -------------------------------
     ebin = bin_of_bucket[flat_seg]
@@ -103,7 +175,7 @@ def silk_round(
 
     out_valid = maj & keep_bin[eb_s]
     out_group = jnp.where(out_valid, new_group_of_bin[eb_s], -1)
-    g, i, v, overflow = _compact_pairs(out_group, id_s, out_valid, pair_cap)
+    g, i, v, overflow = compact_pairs(out_group, id_s, out_valid, pair_cap)
     return SeedPairs(g, i, v, num_groups, overflow)
 
 

@@ -68,6 +68,41 @@ def compressed_psum(x: jax.Array, axis_name: str):
     return out.reshape(shape).astype(x.dtype), resid.astype(jnp.float32)
 
 
+def narrow_int_all_to_all(x: jax.Array, axis_name: str, num_values: int, *,
+                          split_axis: int, concat_axis: int) -> jax.Array:
+    """Tiled ``all_to_all`` of small non-negative ints, narrow on the wire.
+
+    The *lossless* sibling of ``compressed_psum``: integer payloads whose
+    values fit a narrower width are cast down before the collective and
+    back up after, so the wire moves uint8/uint16 instead of int32 with
+    zero effect on the result. Used by the sharded-discovery bucket
+    exchange (``core.distributed``), whose payload is bucket ids in
+    ``[0, num_values)`` — the float hash exchange there stays f32 because
+    lossy int8 quantization would break the bit-identity contract.
+
+    Parameters
+    ----------
+    x : int array
+        Values in ``[0, num_values)``.
+    axis_name : str
+        Mesh axis to exchange over.
+    num_values : int
+        Static exclusive upper bound on the values (including any
+        sentinel). Chooses uint8 when < 2^8, uint16 when < 2^16,
+        otherwise the payload ships unchanged.
+    split_axis, concat_axis : int
+        As in ``jax.lax.all_to_all`` (tiled).
+    """
+    wire = x
+    for dt, width in ((jnp.uint8, 8), (jnp.uint16, 16)):
+        if num_values <= 1 << width:
+            wire = x.astype(dt)
+            break
+    out = jax.lax.all_to_all(wire, axis_name, split_axis=split_axis,
+                             concat_axis=concat_axis, tiled=True)
+    return out.astype(x.dtype)
+
+
 def compressed_psum_tree(grads, axis_name: str):
     """Tree version; returns (means, residuals)."""
     flat, treedef = jax.tree_util.tree_flatten(grads)

@@ -268,3 +268,58 @@ def test_predict_partial_batches_match_full(tmp_path):
     part, _ = est.predict(HeteroData(np.asarray(h.x_num),
                                      np.asarray(h.x_cat)), batch=300)
     np.testing.assert_array_equal(np.asarray(full), np.asarray(part))
+
+
+# ---------------------------------------------------------------------------
+# discovery= knob (PR 6): routing, validation, and the gather-size guard
+# ---------------------------------------------------------------------------
+
+def test_discovery_knob_validation_and_modes_agree():
+    """Unknown discovery values fail fast; the two valid modes are
+    bit-identical on a 1-device mesh at full coverage."""
+    d = _dense()
+    mesh = make_mesh()
+    with pytest.raises(ValueError, match="discovery"):
+        GEEK(CFG).fit(DenseData(d.x), FIT_KEY, mesh=mesh, discovery="bogus")
+    sh = GEEK(CFG)
+    sh.fit(DenseData(d.x), FIT_KEY, mesh=mesh, discovery="sharded")
+    ga = GEEK(CFG)
+    ga.fit(DenseData(d.x), FIT_KEY, mesh=mesh, discovery="gathered")
+    np.testing.assert_array_equal(np.asarray(sh.result_.labels),
+                                  np.asarray(ga.result_.labels))
+    ic, _ = fit_dense(d.x, FIT_KEY, CFG)
+    np.testing.assert_array_equal(np.asarray(sh.result_.labels),
+                                  np.asarray(ic.labels))
+
+
+def test_discovery_resolution_falls_back_to_gathered():
+    """seed_cap subsampling and non-bucket seeders route to 'gathered';
+    the stock full-coverage pipeline routes to 'sharded'."""
+    from repro.core.api import _resolve_discovery
+    from repro import LSHBucketer, SILKSeeder
+    b, s = LSHBucketer(), SILKSeeder()
+    assert _resolve_discovery("sharded", None, 1000, b, s) == "sharded"
+    assert _resolve_discovery("sharded", 1000, 1000, b, s) == "sharded"
+    assert _resolve_discovery("sharded", 500, 1000, b, s) == "gathered"
+    assert _resolve_discovery("sharded", None, 1000, b,
+                              KMeansPPSeeder(8)) == "gathered"
+    assert _resolve_discovery("gathered", None, 1000, b, s) == "gathered"
+
+
+def test_gathered_reservoir_cap_raises_clear_error():
+    """An over-cap gathered fit raises a sized ValueError instead of an
+    opaque OOM — and the default sharded mode is unaffected by the cap."""
+    import dataclasses
+    d = _dense()
+    mesh = make_mesh()
+    tiny = dataclasses.replace(CFG, gather_cap_bytes=1024)
+    with pytest.raises(ValueError, match="gather_cap_bytes"):
+        GEEK(tiny).fit(DenseData(d.x), FIT_KEY, mesh=mesh,
+                       discovery="gathered")
+    est = GEEK(tiny)   # sharded discovery never gathers the reservoir
+    est.fit(DenseData(d.x), FIT_KEY, mesh=mesh, discovery="sharded")
+    ic, _ = fit_dense(d.x, FIT_KEY, CFG)
+    np.testing.assert_array_equal(np.asarray(est.result_.labels),
+                                  np.asarray(ic.labels))
+    # a seed_cap subsample also stays under the cap (strided reservoir)
+    GEEK(tiny).fit(DenseData(d.x), FIT_KEY, mesh=mesh, seed_cap=4)

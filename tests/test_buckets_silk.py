@@ -161,3 +161,115 @@ def test_silk_seeding_end_to_end_discovers_clusters(rng):
     # are expected — the one-pass assignment corrects them (paper §3.3)
     dominance = np.array(dominance)
     assert (dominance > 0.9).mean() > 0.75, dominance
+
+
+# -- hierarchical distributed merge (core.distributed counterpart) -----------
+
+def _hand_tables(tables: list[list[list[int]]], cap_t: int):
+    """Flatten hand-built per-table bucket partitions into silk_round's
+    global layout plus the per-object bucket map the sharded path votes
+    over. Every object must appear in exactly one bucket per table."""
+    flat_ids, flat_seg = [], []
+    n = 1 + max(i for t in tables for b in t for i in b)
+    b_of_id = np.zeros((len(tables), n), np.int32)
+    for t, bks in enumerate(tables):
+        for b, members in enumerate(bks):
+            for i in members:
+                flat_ids.append(i)
+                flat_seg.append(t * cap_t + b)   # global, table-major
+                b_of_id[t, i] = b
+    return (jnp.asarray(flat_ids, jnp.int32),
+            jnp.asarray(flat_seg, jnp.int32), b_of_id, n)
+
+
+def _merge_two_halves(tables, cap_t, keys, delta, pair_cap):
+    """Simulate the sharded path's per-round merge with pure functions:
+    two 'devices' each vote on their own half of the rows, core sizes
+    are summed (the psum), each half compacts its top-pair_cap pairs,
+    and one more compact_pairs merges them (the all_gather + merge)."""
+    from repro.core.lsh import minhash_over_segments
+    from repro.core.silk import (bins_from_signatures, compact_pairs,
+                                 rowwise_majority)
+    flat_ids, flat_seg, b_of_id, n = _hand_tables(tables, cap_t)
+    nbcap = len(tables) * cap_t
+    # replicated stage: signatures + bins (identical on every device)
+    sizes = jax.ops.segment_sum(jnp.ones_like(flat_ids), flat_seg,
+                                num_segments=nbcap)
+    sig = minhash_over_segments(flat_ids, flat_seg, nbcap, keys)
+    bin_of_bucket, bin_nbuckets = bins_from_signatures(sig, sizes > 0)
+    # device-local stage: majority vote on each half's rows
+    goff = np.arange(len(tables), dtype=np.int32)[:, None] * cap_t
+    ebin_all = np.array(bin_of_bucket)[b_of_id + goff].T      # (n, T)
+    halves = [np.arange(0, n // 2), np.arange(n // 2, n)]
+    cores, locals_ = [], []
+    for rows in halves:
+        srt, maj = rowwise_majority(jnp.asarray(ebin_all[rows]),
+                                    bin_nbuckets, 2)
+        cores.append(jax.ops.segment_sum(
+            maj.astype(jnp.int32).reshape(-1),
+            jnp.where(maj, srt, nbcap).reshape(-1),
+            num_segments=nbcap + 1)[:nbcap])
+        locals_.append((rows, srt, maj))
+    core_size = cores[0] + cores[1]                           # the psum
+    keep_bin = core_size >= delta
+    new_group_of_bin = jnp.cumsum(keep_bin.astype(jnp.int32)) - 1
+    # per-device compaction, then the exact global merge
+    parts = []
+    total = 0
+    for rows, srt, maj in locals_:
+        out_valid = maj & keep_bin[jnp.clip(srt, 0, nbcap - 1)]
+        out_group = jnp.where(out_valid,
+                              new_group_of_bin[jnp.clip(srt, 0, nbcap - 1)],
+                              -1)
+        out_ids = jnp.broadcast_to(
+            jnp.asarray(rows, jnp.int32)[:, None], srt.shape)
+        total += int(out_valid.sum())
+        parts.append(compact_pairs(out_group.reshape(-1),
+                                   out_ids.reshape(-1),
+                                   out_valid.reshape(-1), pair_cap))
+    mg = jnp.concatenate([p[0] for p in parts])
+    mi = jnp.concatenate([p[1] for p in parts])
+    mv = jnp.concatenate([p[2] for p in parts])
+    g, i, v, _ = compact_pairs(mg, mi, mv, pair_cap)
+    overflow = max(total - pair_cap, 0)
+    return (g, i, v, overflow,
+            int(keep_bin.sum()), flat_ids, flat_seg, nbcap)
+
+
+def test_hierarchical_merge_matches_silk_round():
+    """The sharded path's hierarchical merge (per-half rowwise majority,
+    summed core sizes, per-half top-pair_cap compaction, one more
+    compact_pairs) is bit-identical to the in-core silk_round on
+    hand-built bucket tables whose seed groups span both halves."""
+    # identical member sets collide under bucket MinHash -> bins:
+    # {0,1,6,7} (t0,t1) and {2,3,4,5} (t0,t2) and {10,11} (t0,t1,t2)
+    # become cores; {0,1,6,7} spans the device boundary at n/2 = 6.
+    tables = [
+        [[0, 1, 6, 7], [2, 3, 4, 5], [8, 9], [10, 11]],
+        [[0, 1, 6, 7], [2, 3, 4], [5, 8, 9], [10, 11]],
+        [[0, 1, 6], [2, 3, 4, 5], [7, 8, 9], [10, 11]],
+    ]
+    cap_t, delta = 4, 2
+    keys = derive_hash_keys(jax.random.PRNGKey(3), (1, 4))[0]
+    for pair_cap in (64, 5):   # uncapped, and capped below the 10 true pairs
+        g, i, v, ovf, ngroups, flat_ids, flat_seg, nbcap = _merge_two_halves(
+            tables, cap_t, keys, delta, pair_cap)
+        ref = silk_round(flat_ids, flat_seg,
+                         jnp.ones_like(flat_ids, bool), nbcap, keys,
+                         delta, 2, pair_cap)
+        assert ngroups == int(ref.num_groups) == 3
+        np.testing.assert_array_equal(np.array(v), np.array(ref.valid))
+        np.testing.assert_array_equal(np.array(g)[np.array(v)],
+                                      np.array(ref.group)[np.array(ref.valid)])
+        np.testing.assert_array_equal(np.array(i)[np.array(v)],
+                                      np.array(ref.id)[np.array(ref.valid)])
+        assert ovf == int(ref.overflow)
+    # sanity: the expected cores really are the three constructed ones
+    g, i, v, _, _, _, _, _ = _merge_two_halves(tables, cap_t, keys, delta, 64)
+    members = {}
+    for gg, ii, vv in zip(np.array(g), np.array(i), np.array(v)):
+        if vv:
+            members.setdefault(int(gg), set()).add(int(ii))
+    assert set(map(frozenset, members.values())) == {
+        frozenset({0, 1, 6, 7}), frozenset({2, 3, 4, 5}),
+        frozenset({10, 11})}

@@ -401,11 +401,42 @@ def test_distributed_geek_compressed_refinement():
     """, timeout=600))
 
 
+def test_sharded_discovery_compressed_wire_bit_identical():
+    """compress_collectives=True narrows the bucket-map all_to_all to
+    uint8/uint16 on the wire — losslessly, so the distributed-discovery
+    fit stays bit-identical to the in-core fit."""
+    print(run_with_devices("""
+        import jax, numpy as np
+        from repro.core.distributed import make_fit_sharded
+        from repro.core.geek import GeekConfig, fit_dense, fit_sparse
+        from repro.data.synthetic import sift_like, url_like
+        from repro.utils.compat import make_mesh
+
+        mesh = make_mesh()
+        cfg = GeekConfig(m=16, t=32, silk_l=4, delta=5, k_max=64,
+                         pair_cap=8192, compress_collectives=True)
+        key = jax.random.PRNGKey(1)
+        d = sift_like(jax.random.PRNGKey(0), n=2048, k=16)
+        res0, m0 = fit_dense(d.x, key, cfg)
+        res1, m1 = make_fit_sharded(mesh, cfg, kind="dense")(d.x, key=key)
+        assert (np.asarray(res0.labels) == np.asarray(res1.labels)).all()
+        assert (np.asarray(m0.centers) == np.asarray(m1.centers)).all()
+        s = url_like(jax.random.PRNGKey(0), n=1100, k=8)  # cap_t = n > 2^8
+        res2, m2 = fit_sparse(s.sets, s.mask, key, cfg)
+        res3, m3 = make_fit_sharded(mesh, cfg, kind="sparse")(
+            s.sets, s.mask, key=key)
+        assert (np.asarray(res2.labels) == np.asarray(res3.labels)).all()
+        assert (np.asarray(m2.centers) == np.asarray(m3.centers)).all()
+        print("ok compressed wire bit-identical")
+    """, n=4, timeout=600))
+
+
 def test_property_sharded_permutation_and_mesh_invariance():
-    """Hypothesis property: for seed_cap=None the sharded fit is
-    equivariant to permutations across shard boundaries (any re-sharding
-    of the rows reproduces the in-core fit on those rows bit-for-bit)
-    and invariant to the mesh size. Runs hypothesis inside the
+    """Hypothesis property: for seed_cap=None the sharded fit — now the
+    distributed-discovery path by default — is equivariant to
+    permutations across shard boundaries (any re-sharding of the rows
+    reproduces the in-core fit on those rows bit-for-bit) and invariant
+    to the mesh size across g in {1, 2, 4}. Runs hypothesis inside the
     multi-device subprocess; skips when hypothesis or a second device
     is unavailable."""
     out = run_with_devices("""
@@ -432,7 +463,7 @@ def test_property_sharded_permutation_and_mesh_invariance():
         fits = {g: {n: make_fit_sharded(
                         make_mesh(devices=jax.devices()[:g]), cfg,
                         kind="dense") for n in data}
-                for g in (2, 4)}
+                for g in (1, 2, 4)}
 
         @settings(max_examples=8, deadline=None, derandomize=True)
         @given(st.integers(0, 2**31 - 1), st.sampled_from([96, 130]))
@@ -440,12 +471,12 @@ def test_property_sharded_permutation_and_mesh_invariance():
             rng = np.random.default_rng(seed)
             xp = data[n][rng.permutation(n)]   # re-shard rows arbitrarily
             res0, m0 = fit_dense(jax.numpy.asarray(xp), key, cfg)
-            res2, m2 = fits[2][n](xp, key=key)
-            assert (np.asarray(res0.labels) == np.asarray(res2.labels)).all()
-            assert (np.asarray(m0.centers) == np.asarray(m2.centers)).all()
-            res4, m4 = fits[4][n](xp, key=key)
-            assert (np.asarray(res2.labels) == np.asarray(res4.labels)).all()
-            assert (np.asarray(m2.centers) == np.asarray(m4.centers)).all()
+            prev = (np.asarray(res0.labels), np.asarray(m0.centers))
+            for g in (1, 2, 4):
+                res_g, m_g = fits[g][n](xp, key=key)
+                assert (prev[0] == np.asarray(res_g.labels)).all(), g
+                assert (prev[1] == np.asarray(m_g.centers)).all(), g
+                prev = (np.asarray(res_g.labels), np.asarray(m_g.centers))
 
         prop()
         print("ok property held")
