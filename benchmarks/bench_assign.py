@@ -20,12 +20,11 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import platform
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, host_info, timeit
 from repro.core import assign as A
 from repro.kernels import pack
 
@@ -118,12 +117,7 @@ def run(quick: bool = False, out: str | None = None,
     seeding = _seeding_comparison(quick)
 
     report = {
-        "host": {
-            "backend": jax.default_backend(),
-            "device": str(jax.devices()[0]),
-            "platform": platform.platform(),
-            "jax": jax.__version__,
-        },
+        "host": host_info(),
         "shape": {**shape, "bits": bits, "block": block},
         "us_per_call": {k_: round(v, 1) for k_, v in results.items()},
         "speedup_vs_equality": {

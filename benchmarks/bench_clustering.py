@@ -10,9 +10,15 @@ import jax
 
 from benchmarks.common import emit, mean_radius, timeit
 from repro.core import baselines
-from repro.core.geek import GeekConfig, fit_dense, fit_hetero, fit_sparse, \
-    hetero_codes
+from repro.core.api import GEEK, DenseData, HeteroData, SparseData
+from repro.core.geek import GeekConfig, hetero_codes
 from repro.data import synthetic
+
+
+def _fit(dataset, key):
+    est = GEEK(CFG)
+    est.fit(dataset, key)
+    return est.result_
 
 # tuned per the paper's grid-search protocol (Fig 4 sweep; see bench_params)
 CFG = GeekConfig(m=40, t=128, bucket_k=2, bucket_l=16, silk_l=8, delta=5,
@@ -25,9 +31,9 @@ def run(quick: bool = True, n: int = 8192) -> None:
 
     # -- dense ---------------------------------------------------------------
     data = synthetic.sift_like(key, n=n, k=64)
-    res, _ = fit_dense(data.x, jax.random.PRNGKey(1), CFG)
+    res = _fit(DenseData(data.x), jax.random.PRNGKey(1))
     k = int(res.k_star)
-    sec = timeit(lambda: fit_dense(data.x, jax.random.PRNGKey(1), CFG),
+    sec = timeit(lambda: _fit(DenseData(data.x), jax.random.PRNGKey(1)),
                  iters=iters)
     emit("fig5/dense/geek", sec,
          f"k*={k};radius={mean_radius(res.radius, res.center_valid):.4f}")
@@ -47,10 +53,10 @@ def run(quick: bool = True, n: int = 8192) -> None:
 
     # -- heterogeneous --------------------------------------------------------
     h = synthetic.geonames_like(key, n=n // 2, k=32)
-    resh, _ = fit_hetero(h.x_num, h.x_cat, jax.random.PRNGKey(1), CFG)
+    resh = _fit(HeteroData(h.x_num, h.x_cat), jax.random.PRNGKey(1))
     kh = int(resh.k_star)
-    sec = timeit(lambda: fit_hetero(h.x_num, h.x_cat, jax.random.PRNGKey(1),
-                                    CFG), iters=iters)
+    sec = timeit(lambda: _fit(HeteroData(h.x_num, h.x_cat),
+                              jax.random.PRNGKey(1)), iters=iters)
     emit("fig5/hetero/geek", sec,
          f"k*={kh};radius={mean_radius(resh.radius, resh.center_valid):.4f}")
     codes = hetero_codes(h.x_num, h.x_cat, CFG.t_cat)
@@ -62,9 +68,9 @@ def run(quick: bool = True, n: int = 8192) -> None:
 
     # -- sparse ---------------------------------------------------------------
     s = synthetic.url_like(key, n=n // 2, k=32)
-    ress, _ = fit_sparse(s.sets, s.mask, jax.random.PRNGKey(1), CFG)
-    sec = timeit(lambda: fit_sparse(s.sets, s.mask, jax.random.PRNGKey(1),
-                                    CFG), iters=iters)
+    ress = _fit(SparseData(s.sets, s.mask), jax.random.PRNGKey(1))
+    sec = timeit(lambda: _fit(SparseData(s.sets, s.mask),
+                              jax.random.PRNGKey(1)), iters=iters)
     emit("fig5/sparse/geek", sec,
          f"k*={int(ress.k_star)};"
          f"radius={mean_radius(ress.radius, ress.center_valid):.4f}")

@@ -8,8 +8,13 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit, timeit
-from repro.core.geek import GeekConfig, fit_dense
+from repro.core.api import GEEK, DenseData
+from repro.core.geek import GeekConfig
 from repro.data.synthetic import sift_like
+
+
+def _fit(x, key, cfg):
+    GEEK(cfg).fit(DenseData(x), key)
 
 BASE = GeekConfig(m=16, t=32, silk_l=4, delta=10, k_max=128, pair_cap=1 << 14)
 
@@ -22,7 +27,7 @@ def run(quick: bool = True, base_n: int = 2048) -> None:
     times = []
     for n in ns:
         data = sift_like(jax.random.PRNGKey(0), n=n, k=32)
-        sec = timeit(lambda: fit_dense(data.x, key, BASE),
+        sec = timeit(lambda: _fit(data.x, key, BASE),
                      iters=1 if quick else 3)
         times.append(sec)
         emit(f"table1/n={n}", sec, "")
@@ -33,7 +38,7 @@ def run(quick: bool = True, base_n: int = 2048) -> None:
     data = sift_like(jax.random.PRNGKey(0), n=2 * base_n, k=64)
     for kk in ([64, 512] if quick else [64, 256, 1024]):
         cfg = dataclasses.replace(BASE, k_max=kk)
-        sec = timeit(lambda: fit_dense(data.x, key, cfg),
+        sec = timeit(lambda: _fit(data.x, key, cfg),
                      iters=1 if quick else 3)
         emit(f"table1/k_max={kk}", sec, "")
 

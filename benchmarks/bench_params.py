@@ -12,7 +12,8 @@ import dataclasses
 import jax
 
 from benchmarks.common import emit, mean_radius, timeit
-from repro.core.geek import GeekConfig, fit_dense
+from repro.core.api import GEEK, DenseData
+from repro.core.geek import GeekConfig
 from repro.data.synthetic import sift_like
 
 BASE = GeekConfig(m=16, t=32, silk_k=3, silk_l=4, delta=10, k_max=256,
@@ -33,9 +34,14 @@ def run(quick: bool = True, n: int = 8192) -> None:
     for field, values in sweeps.items():
         for v in values:
             cfg = dataclasses.replace(BASE, **{field: v})
-            fn = lambda: fit_dense(data.x, key, cfg)
+
+            def fn(cfg=cfg):
+                est = GEEK(cfg)
+                est.fit(DenseData(data.x), key)
+                return est.result_
+
             sec = timeit(fn, warmup=1, iters=1 if quick else 3)
-            res, _ = fn()
+            res = fn()
             emit(f"fig4/{field}={v}", sec,
                  f"k*={int(res.k_star)};radius="
                  f"{mean_radius(res.radius, res.center_valid):.4f}")

@@ -6,6 +6,18 @@ scale with batch size, per metric path — L2 plus all three Hamming
 implementations (equality / packed / one-hot), centers pre-packed at
 model build exactly as in production.
 
+Since the center index landed (DESIGN.md §12), the full run also
+records the **recall-vs-throughput curve** of the probed path: L2 at
+k in {1024, 16384, 100000} and probes in {None, 1, 2, 4}, clustered
+queries, batch 16384. ``probes=None`` is the exact full scan (the
+1.0-recall anchor); each probed row reports its throughput multiple
+over exact and its label recall vs the exact scan. The headline claim
+— sub-linear predict beats the full scan by >= 5x at k = 1e5 while
+holding recall >= 0.95 — is read straight off this table.
+
+Both modes time one probed entry with its recall; CI gates that
+recall against the committed ``recall_floor`` (check_regress).
+
   PYTHONPATH=src python -m benchmarks.bench_predict [--smoke] [--out PATH]
 
 Writes ``BENCH_predict.json`` (diffable across PRs, uploaded by CI).
@@ -15,12 +27,12 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import platform
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, host_info, timeit
 from repro.core.model import build_model, predict
 from repro.kernels import pack
 
@@ -28,6 +40,16 @@ SHAPE = dict(d=64, k=1024, card=16)
 BATCHES = (4096, 16384, 65536)
 SMOKE_SHAPE = dict(d=64, k=128, card=16)
 SMOKE_BATCHES = (512, 2048, 8192)
+
+# recall-vs-throughput curve (full mode only): L2, clustered queries
+CURVE_KS = (1024, 16384, 100_000)
+CURVE_PROBES = (1, 2, 4)
+CURVE_BATCH = 16384
+
+#: committed floor for the gated probed entry — CI fails if the probed
+#: smoke recall drops below this (silent recall regressions are the
+#: probed path's failure mode, not latency)
+RECALL_FLOOR = 0.95
 
 
 def _models(d: int, k: int, card: int):
@@ -50,6 +72,73 @@ def _models(d: int, k: int, card: int):
         "hamming_onehot": mk(code_cents, metric="hamming", impl="onehot",
                              code_bits=bits),
     }
+
+
+def _clustered_queries(model, n: int, key) -> jax.Array:
+    """Serving-shaped L2 queries: each point near a random center.
+
+    Probed recall is only meaningful on queries that HAVE a nearby
+    center — uniform noise equidistant from everything measures
+    tie-breaking, not the index.
+    """
+    k, d = model.centers.shape
+    pick = jax.random.randint(key, (n,), 0, k)
+    noise = 0.05 * jax.random.normal(jax.random.fold_in(key, 1), (n, d))
+    return jax.block_until_ready(model.centers[pick] + noise)
+
+
+def _probed_entry(model, n: int, probes: int):
+    """(points/sec, recall-vs-exact) of ``predict(..., probes=)`` on
+    clustered queries — the gated smoke/full probed sample."""
+    x = _clustered_queries(model, n, jax.random.PRNGKey(13))
+    sec = timeit(lambda m, xq: predict(m, xq, probes=probes), model, x)
+    lab0, _ = predict(model, x)
+    lab1, _ = predict(model, x, probes=probes)
+    recall = float((np.asarray(lab0) == np.asarray(lab1)).mean())
+    return n / sec, sec, recall
+
+
+def recall_curve() -> list[dict]:
+    """The probed-predict recall/throughput table (full mode).
+
+    One L2 model per k (default index: 8 tables x bucket 32), clustered
+    queries, fixed batch. Centers are drawn well-separated (8x the
+    within-cluster sigma=0.05) — the regime where an LSH center index
+    is the right tool and the one `test_probed_recall_on_sublinear_window`
+    pins; rank-window recall on heavily overlapping clusters is lower
+    (raise `probes` or serve exact). ``probes=None`` rows are the
+    exact-scan anchor; timing uses a single iteration at k = 1e5, where
+    one exact scan is ~1e11 MACs and the median-of-3 protocol would
+    triple a number that large for no extra signal.
+    """
+    rows = []
+    d, n = SHAPE["d"], CURVE_BATCH
+    for k in CURVE_KS:
+        key = jax.random.PRNGKey(11)
+        centers = jax.random.normal(key, (k, d)) * 8.0
+        model = build_model(centers, jnp.ones((k,), bool), jnp.int32(k),
+                            jnp.zeros((k,), jnp.float32), metric="l2",
+                            assign_block=1024)
+        x = _clustered_queries(model, n, jax.random.fold_in(key, 1))
+        iters = 1 if k >= 50_000 else 3
+        sec0 = timeit(predict, model, x, iters=iters)
+        exact_pps = n / sec0
+        lab0, _ = predict(model, x)
+        rows.append(dict(k=k, probes=None, points_per_sec=round(exact_pps),
+                         recall=1.0, speedup_vs_exact=1.0))
+        emit(f"predict_curve/k={k}/exact", sec0, f"{exact_pps:.0f} pts/s")
+        for p in CURVE_PROBES:
+            sec = timeit(lambda m, xq: predict(m, xq, probes=p), model, x,
+                         iters=iters)
+            pps = n / sec
+            lab, _ = predict(model, x, probes=p)
+            rec = float((np.asarray(lab) == np.asarray(lab0)).mean())
+            rows.append(dict(k=k, probes=p, points_per_sec=round(pps),
+                             recall=round(rec, 4),
+                             speedup_vs_exact=round(pps / exact_pps, 2)))
+            emit(f"predict_curve/k={k}/probes={p}", sec,
+                 f"{pps:.0f} pts/s recall={rec:.3f}")
+    return rows
 
 
 def run(smoke: bool = False, out: str | None = None,
@@ -76,17 +165,26 @@ def run(smoke: bool = False, out: str | None = None,
             emit(f"predict/{name}/batch={n}", sec, f"{pps:.0f} pts/s")
         points_per_sec[name] = per_batch
 
+    # gated probed entry: L2 model, largest batch, probes=1, clustered
+    # queries — throughput tracked like any other entry, recall gated
+    # against the committed floor
+    n = batches[-1]
+    pps, sec, rec = _probed_entry(models["l2"], n, probes=1)
+    pname = "l2_probes1"
+    points_per_sec[pname] = {str(n): round(pps)}
+    emit(f"predict/{pname}/batch={n}", sec,
+         f"{pps:.0f} pts/s recall={rec:.3f}")
+
     report = {
-        "host": {
-            "backend": jax.default_backend(),
-            "device": str(jax.devices()[0]),
-            "platform": platform.platform(),
-            "jax": jax.__version__,
-        },
+        "host": host_info(),
         "shape": {**shape, "bits": pack.bits_for_cardinality(card)},
         "batch_sizes": list(batches),
         "points_per_sec": points_per_sec,
+        "recall": {f"{pname}/batch={n}": round(rec, 4)},
+        "recall_floor": {f"{pname}/batch={n}": RECALL_FLOOR},
     }
+    if not smoke:
+        report["probed_curve"] = recall_curve()
     if write_json:
         out = out or os.path.join(os.path.dirname(os.path.dirname(
             os.path.abspath(__file__))), "BENCH_predict.json")

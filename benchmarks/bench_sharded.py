@@ -31,11 +31,10 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import platform
 
 import jax
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, host_info, timeit
 from repro.core.api import GEEK, DenseData, HeteroData, SparseData
 from repro.core.distributed import make_predict_sharded
 from repro.core.geek import GeekConfig
@@ -120,12 +119,7 @@ def run(quick: bool = False, out: str | None = None,
     points_per_sec["predict_sharded"] = per_batch
 
     report = {
-        "host": {
-            "backend": jax.default_backend(),
-            "device": str(jax.devices()[0]),
-            "platform": platform.platform(),
-            "jax": jax.__version__,
-        },
+        "host": host_info(),
         "shape": {**shape, "d": int(dense_model.d), "devices": g},
         "batch_sizes": list(batches),
         "points_per_sec": points_per_sec,

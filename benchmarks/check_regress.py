@@ -19,11 +19,22 @@ Understands both report schemas:
   - ``us_per_call``     {name: microseconds}          (lower is better)
   - ``points_per_sec``  {name: {batch: pts/sec}}      (higher is better)
 
+Reports may additionally carry quality entries; those are gated
+against an ABSOLUTE floor, not a relative drop:
+  - ``recall``          {name: fraction}  in the current report(s)
+  - ``recall_floor``    {name: floor}     in the baseline
+
 Guard rails:
   - every current report must describe the SAME benchmark shape as the
     baseline — a shape mismatch means the baseline is stale and must be
     regenerated with the matching --quick/--smoke flags, so the gate
     errors out (exit 2) rather than comparing apples to oranges;
+  - throughput is only comparable within a host class
+    (``host.host_class``: GitHub-hosted runner vs developer machine).
+    On a class mismatch the gate SKIPS with a loud notice (exit 0) —
+    the baseline must be regenerated on the matching host class — or
+    errors out (exit 2) under ``--strict-host``. Recall floors are
+    host-independent and are still enforced before the skip;
   - shared-runner noise is real, so the default threshold is generous
     (30%) and tunable via --max-regress;
   - escape hatches: the ``skip-bench-gate`` PR label (checked in the
@@ -60,12 +71,15 @@ def _median(vals: list[float]) -> float:
     return s[mid] if len(s) % 2 else (s[mid - 1] + s[mid]) / 2.0
 
 
-def compare(currents: dict | list[dict], baseline: dict, max_regress: float
-            ) -> tuple[list[str], list[str]]:
+def compare(currents: dict | list[dict], baseline: dict, max_regress: float,
+            *, gate_throughput: bool = True) -> tuple[list[str], list[str]]:
     """Returns (report_lines, failures).
 
     ``currents`` may be a single report dict or a list of repeat reports;
     repeats are reduced to the per-entry median before comparison.
+    ``gate_throughput=False`` skips the relative throughput comparison
+    (host-class mismatch) but still enforces the baseline's absolute
+    ``recall_floor`` entries, which do not depend on the machine.
     """
     if isinstance(currents, dict):
         currents = [currents]
@@ -75,24 +89,44 @@ def compare(currents: dict | list[dict], baseline: dict, max_regress: float
                 f"shape mismatch: current[{i}]={current.get('shape')} vs "
                 f"baseline={baseline.get('shape')} — regenerate the "
                 "committed baseline with the same --quick/--smoke mode")
-    flats = [_throughputs(c) for c in currents]
-    names = set().union(*(f.keys() for f in flats))
-    cur = {name: _median([f[name] for f in flats if name in f])
-           for name in names}
-    base = _throughputs(baseline)
-    if not base:
-        raise ValueError("baseline has no us_per_call/points_per_sec entries")
     lines, failures = [], []
-    for name in sorted(base):
-        if name not in cur:
-            failures.append(f"{name}: missing from current report")
+    if gate_throughput:
+        flats = [_throughputs(c) for c in currents]
+        names = set().union(*(f.keys() for f in flats))
+        cur = {name: _median([f[name] for f in flats if name in f])
+               for name in names}
+        base = _throughputs(baseline)
+        if not base:
+            raise ValueError(
+                "baseline has no us_per_call/points_per_sec entries")
+        for name in sorted(base):
+            if name not in cur:
+                failures.append(f"{name}: missing from current report")
+                continue
+            ratio = cur[name] / base[name]
+            flag = "" if ratio >= 1.0 - max_regress else "  <-- REGRESSION"
+            lines.append(f"  {name:40s} {ratio:6.2f}x of baseline{flag}")
+            if flag:
+                failures.append(f"{name}: {ratio:.2f}x of baseline "
+                                f"(allowed >= {1.0 - max_regress:.2f}x)")
+    # absolute quality floors (probed-predict recall): a baseline refresh
+    # can never quietly lower recall — the floor is committed explicitly
+    rec_flats = [c.get("recall", {}) for c in currents]
+    rec_names = set().union(*(r.keys() for r in rec_flats))
+    cur_rec = {name: _median([r[name] for r in rec_flats if name in r])
+               for name in rec_names}
+    for name in sorted(baseline.get("recall_floor", {})):
+        floor = float(baseline["recall_floor"][name])
+        if name not in cur_rec:
+            failures.append(f"{name}: recall missing from current report")
             continue
-        ratio = cur[name] / base[name]
-        flag = "" if ratio >= 1.0 - max_regress else "  <-- REGRESSION"
-        lines.append(f"  {name:40s} {ratio:6.2f}x of baseline{flag}")
-        if flag:
-            failures.append(f"{name}: {ratio:.2f}x of baseline "
-                            f"(allowed >= {1.0 - max_regress:.2f}x)")
+        ok = cur_rec[name] >= floor
+        flag = "" if ok else "  <-- RECALL BELOW FLOOR"
+        lines.append(f"  {name:40s} recall {cur_rec[name]:.3f} "
+                     f"(floor {floor:.2f}){flag}")
+        if not ok:
+            failures.append(f"{name}: recall {cur_rec[name]:.3f} < "
+                            f"floor {floor:.2f}")
     return lines, failures
 
 
@@ -105,6 +139,9 @@ def main() -> None:
     ap.add_argument("--max-regress", type=float, default=0.30,
                     help="max tolerated fractional throughput drop "
                          "(default 0.30)")
+    ap.add_argument("--strict-host", action="store_true",
+                    help="error out (exit 2) on a host-class mismatch "
+                         "instead of skipping the throughput gate")
     args = ap.parse_args()
 
     if os.environ.get("SKIP_BENCH_GATE", "").lower() not in ("", "0",
@@ -119,7 +156,21 @@ def main() -> None:
                 currents.append(json.load(f))
         with open(args.baseline) as f:
             baseline = json.load(f)
-        lines, failures = compare(currents, baseline, args.max_regress)
+        # throughput baselines only transfer within a host class; an
+        # old-schema report without host_class is exempt (no provenance
+        # to disagree with)
+        base_hc = baseline.get("host", {}).get("host_class")
+        cur_hc = sorted({hc for hc in (c.get("host", {}).get("host_class")
+                                       for c in currents) if hc is not None})
+        hc_mismatch = base_hc is not None and any(hc != base_hc
+                                                  for hc in cur_hc)
+        if hc_mismatch and args.strict_host:
+            raise ValueError(
+                f"host-class mismatch: current={cur_hc} vs baseline="
+                f"{base_hc!r} — regenerate the committed baseline on the "
+                "matching host class (--strict-host)")
+        lines, failures = compare(currents, baseline, args.max_regress,
+                                  gate_throughput=not hc_mismatch)
     except (OSError, ValueError) as e:
         print(f"[check_regress] unusable inputs: {e}", file=sys.stderr)
         sys.exit(2)
@@ -128,6 +179,13 @@ def main() -> None:
              else f"median of {len(args.current)} runs")
     print(f"[check_regress] {label} vs {args.baseline} "
           f"(threshold: {args.max_regress:.0%} drop)")
+    if hc_mismatch:
+        print(f"[check_regress] NOTICE: host-class mismatch — current="
+              f"{cur_hc} vs baseline={base_hc!r}. Throughput gate "
+              "SKIPPED (numbers are not comparable across host classes); "
+              "recall floors still enforced. Regenerate "
+              "benchmarks/baselines/ on the matching host class to "
+              "re-arm the gate.")
     print("\n".join(lines))
     if failures:
         print(f"[check_regress] FAILED — {len(failures)} regression(s):",

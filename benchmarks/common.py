@@ -1,11 +1,39 @@
-"""Shared benchmark utilities: timing protocol + result rows."""
+"""Shared benchmark utilities: timing protocol, host provenance, rows."""
 from __future__ import annotations
 
+import os
+import platform
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def host_class() -> str:
+    """Coarse provenance class of the machine producing a report.
+
+    Benchmark numbers are only comparable within a class — throughput
+    recorded on a GitHub-hosted runner says nothing about a developer
+    workstation. ``check_regress`` refuses to gate across classes
+    (soft-skip with a notice by default, hard error with
+    ``--strict-host``), so a baseline regenerated on the wrong machine
+    fails loudly instead of producing phantom regressions.
+    """
+    if os.environ.get("GITHUB_ACTIONS"):
+        return "github-hosted-runner"
+    return f"dev/{platform.machine()}"
+
+
+def host_info() -> dict:
+    """The ``host`` provenance block shared by every benchmark report."""
+    return {
+        "backend": jax.default_backend(),
+        "device": str(jax.devices()[0]),
+        "platform": platform.platform(),
+        "jax": jax.__version__,
+        "host_class": host_class(),
+    }
 
 
 def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:

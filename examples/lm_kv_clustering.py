@@ -17,7 +17,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
-from repro.core.geek import GeekConfig, fit_dense
+from repro.core.api import GEEK, DenseData
+from repro.core.geek import GeekConfig
 from repro.models import init_params
 from repro.models import model as MODEL
 from repro.models import transformer as T
@@ -45,7 +46,9 @@ def main():
                       pair_cap=8192)
 
     def compress(keys, vals, tag):
-        res, _ = fit_dense(keys, jax.random.PRNGKey(2), gcfg)
+        est = GEEK(gcfg)
+        est.fit(DenseData(keys), jax.random.PRNGKey(2))
+        res = est.result_
         k_star = int(res.k_star)
         labels = np.array(res.labels)
         cent_k = np.array(res.centers)[:k_star]

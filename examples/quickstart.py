@@ -76,6 +76,12 @@ def main():
         labels, _ = predict(served, d.x[:256])   # one-pass assignment only
         agree = float((np.array(labels) == dense_labels[:256]).mean())
         print(f"  restored-model labels match fit labels: {agree:.3f}")
+        # large-k serving knob: probes=p scans only the LSH center-index
+        # candidates per query instead of all k centers (DESIGN.md §12);
+        # probes=None (the default) stays the exact scan
+        plabels, _ = predict(served, d.x[:256], probes=2)
+        pagree = float((np.array(plabels) == np.array(labels)).mean())
+        print(f"  probed (probes=2) labels match exact: {pagree:.3f}")
 
     print("== hetero model: save -> restore -> predict RAW traffic ==")
     # the checkpoint carries the fit-time transform (numeric quantile

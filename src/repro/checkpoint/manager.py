@@ -147,11 +147,12 @@ class CheckpointManager:
 # Only the canonical arrays (model.ARRAY_FIELDS) plus the fit-time
 # transform's arrays (quantile boundaries / DOPH key, "transform_"-prefixed
 # leaves) are written; the static dispatch + transform metadata goes into
-# the manifest's `extra` blob and the packed center caches are re-derived
-# on restore via build_model — deterministic, so the restored fast path
-# (and the restored coding of new traffic) is bit-identical to the fitted
-# one. Like every checkpoint here, the files are topology-free: restore
-# onto any mesh by passing `shardings`.
+# the manifest's `extra` blob and the packed center caches AND the center
+# index are re-derived on restore via build_model — deterministic (the
+# index hashes with a fixed fold seed), so the restored fast path, probed
+# path, and coding of new traffic are bit-identical to the fitted ones.
+# Like every checkpoint here, the files are topology-free: restore onto
+# any mesh by passing `shardings`.
 
 def save_model(directory: str, model, *, step: int = 0,
                wait: bool = True) -> None:
@@ -224,4 +225,9 @@ def restore_model(directory: str, *, step: int | None = None,
         use_pallas=meta["use_pallas"], transform=transform,
         # pipeline provenance (facade-era manifests; "" for older ones)
         bucketer_id=meta.get("bucketer_id", ""),
-        seeder_id=meta.get("seeder_id", ""))
+        seeder_id=meta.get("seeder_id", ""),
+        # center-index rebuild knobs (pre-index manifests get the
+        # defaults — the index is deterministic from the centers, so
+        # old checkpoints gain a working index on restore)
+        index_tables=meta.get("index_tables", 8),
+        index_bucket=meta.get("index_bucket", 32))

@@ -3,8 +3,8 @@
 The supported surface is the facade (``repro.core.api``) plus the
 shared config/result/model types; it is locked by
 ``tests/test_api_surface.py`` (``__all__`` below) so accidental surface
-growth fails CI. The legacy ``fit_*`` entry points are deprecated shims
-over the facade and are intentionally NOT part of ``__all__``.
+growth fails CI. (The legacy ``fit_*`` shims were removed in PR 7 per
+the DESIGN.md §11 deprecation clock.)
 """
 from repro.core.api import (  # noqa: F401
     GEEK,
@@ -22,24 +22,20 @@ from repro.core.api import (  # noqa: F401
 from repro.core.geek import (  # noqa: F401
     GeekConfig,
     GeekResult,
-    fit_dense,
-    fit_hetero,
-    fit_sparse,
     hetero_codes,
     sparse_codes,
 )
 from repro.core.model import (  # noqa: F401
+    CenterIndex,
     GeekModel,
     NumericDiscretizer,
+    build_center_index,
     build_model,
+    patch_probed_fallback,
     predict,
+    predict_probed,
 )
 from repro.core.silk import SeedPairs, Seeds, silk_seeding  # noqa: F401
-from repro.core.streaming import (  # noqa: F401
-    fit_dense_streaming,
-    fit_hetero_streaming,
-    fit_sparse_streaming,
-)
 from repro.core.transform import (  # noqa: F401
     HeteroTransform,
     IdentityTransform,
@@ -48,6 +44,7 @@ from repro.core.transform import (  # noqa: F401
 
 #: the supported public surface (sorted; locked by tests/test_api_surface.py)
 __all__ = [
+    "CenterIndex",
     "DenseData",
     "GEEK",
     "GeekConfig",
@@ -67,8 +64,11 @@ __all__ = [
     "SparseData",
     "SparseTransform",
     "as_dataset",
+    "build_center_index",
     "build_model",
     "discover",
+    "patch_probed_fallback",
     "predict",
+    "predict_probed",
     "silk_seeding",
 ]

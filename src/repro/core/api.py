@@ -3,9 +3,9 @@
 The paper's claim is that GEEK is *generic*: any data type becomes
 buckets, any seeding method can sit behind the bucket layer, and
 assignment is one pass. This module is that claim as an API. Instead of
-a kind × mode matrix of entry points (``fit_dense`` /
-``fit_hetero_streaming`` / ``make_fit_sharded`` …), there is ONE
-estimator::
+a kind × mode matrix of entry points (the pre-PR-5 ``fit_dense`` /
+``fit_hetero_streaming`` / ``make_fit_sharded``, removed in PR 7),
+there is ONE estimator::
 
     from repro import GEEK, DenseData, GeekConfig
 
@@ -39,9 +39,10 @@ frozen (hence jit-static) strategy objects:
 All execution modes route through the same ``discover`` +
 ``Assigner`` calls, so the bit-identity matrix (in-core ≡ streaming ≡
 sharded at ``seed_cap=None``; fit ≡ predict on the fit data) holds
-structurally for ANY protocol combination, not just the defaults. The
-legacy ``fit_*`` entry points remain as deprecated shims over this
-facade (DESIGN.md §11, deprecation policy).
+structurally for ANY protocol combination, not just the defaults.
+This facade is the only fit surface — the pre-facade ``fit_*`` shims
+finished their deprecation cycle and were removed in PR 7 (DESIGN.md
+§11, deprecation policy).
 """
 from __future__ import annotations
 
@@ -230,9 +231,9 @@ class LSHBucketer:
     def split_key(self, kind: str, key: jax.Array):
         """Split the fit key into (transform, bucket-keys, seeder) parts.
 
-        Consumption per kind matches the legacy ``fit_*`` entry points
-        exactly — this is where the facade's bit-identity with them is
-        anchored.
+        Consumption per kind matches the pre-facade ``fit_*`` entry
+        points exactly — what anchored the facade's bit-identity with
+        the (now removed) shims, and keeps old fits reproducible.
         """
         if kind == "dense":
             k_proj, k_silk = jax.random.split(key)
@@ -497,27 +498,48 @@ def _seed_reservoir(present: tuple, boundaries, key: jax.Array, *,
 # Sharded fit — distributed discovery by default, gathered as fallback
 # ---------------------------------------------------------------------------
 
-def _resolve_discovery(discovery: str, seed_cap, n: int, bucketer,
+def _resolve_discovery(discovery: str | None, seed_cap, n: int, bucketer,
                        seeder) -> str:
     """Resolve the ``discovery=`` knob to "sharded" or "gathered".
 
-    "sharded" (the default) runs distributed SILK discovery
-    (``core.distributed.discover_sharded``) — implemented for the stock
-    ``LSHBucketer`` + ``SILKSeeder`` pipeline at full coverage. It falls
-    back to "gathered" when a reservoir is requested (``seed_cap``
-    strictly subsamples), when the seeder does not consume buckets
-    (kmeans++-style seeders need the gathered space itself), or when a
-    custom Bucketer/Seeder is plugged in (their key/bucket semantics are
-    not distributable generically). Explicit "gathered" always gathers.
+    ``None`` (the default) means *auto*: distributed SILK discovery
+    (``core.distributed.discover_sharded``) when the stock
+    ``LSHBucketer`` + ``SILKSeeder`` pipeline runs at full coverage,
+    silently falling back to "gathered" when a reservoir is requested
+    (``seed_cap`` strictly subsamples) or a custom/bucket-free
+    Bucketer/Seeder is plugged in (their key/bucket semantics are not
+    distributable generically).
+
+    An *explicit* ``"sharded"`` is a promise about execution and memory
+    behavior, so the same conditions raise instead of silently handing
+    back a plan that replicates the reservoir on every device. Explicit
+    ``"gathered"`` always gathers.
     """
-    if discovery not in ("sharded", "gathered"):
-        raise ValueError(f"discovery must be 'sharded' or 'gathered', "
-                         f"got {discovery!r}")
+    if discovery not in (None, "sharded", "gathered"):
+        raise ValueError(f"discovery must be None (auto), 'sharded' or "
+                         f"'gathered', got {discovery!r}")
     if discovery == "gathered":
         return "gathered"
-    subsampled = seed_cap is not None and seed_cap < n
-    stock = (type(bucketer) is LSHBucketer and type(seeder) is SILKSeeder)
-    return "sharded" if (stock and not subsampled) else "gathered"
+    reasons = []
+    if seed_cap is not None and seed_cap < n:
+        reasons.append(f"seed_cap={seed_cap} subsamples the reservoir "
+                       f"(n={n})")
+    if type(bucketer) is not LSHBucketer:
+        bname = getattr(bucketer, "name", type(bucketer).__name__)
+        reasons.append(f"custom bucketer {bname!r} is not distributable")
+    if type(seeder) is not SILKSeeder:
+        sname = getattr(seeder, "name", type(seeder).__name__)
+        reasons.append(f"seeder {sname!r} does not consume distributed "
+                       "bucket tables")
+    if not reasons:
+        return "sharded"
+    if discovery == "sharded":
+        raise ValueError(
+            "discovery='sharded' was requested explicitly but distributed "
+            "discovery cannot run: " + "; ".join(reasons) + ". Pass "
+            "discovery='gathered' (replicated-reservoir discovery) or "
+            "leave discovery=None to let the fit fall back automatically")
+    return "gathered"
 
 
 def _check_gather_bytes(kind: str, parts: tuple, n: int,
@@ -662,6 +684,17 @@ def _encode_predict(model: GeekModel, *parts):
     return predict(model, model.encode(*parts))
 
 
+@functools.partial(jax.jit, static_argnames=("probes",))
+def _encode_predict_probed(model: GeekModel, *parts, probes: int):
+    """One probed serving step: coding + center-index assignment.
+
+    Returns the raw (labels, dists, empty) triple; the caller patches
+    empty-probe rows via ``model.patch_probed_fallback`` on the host.
+    """
+    from repro.core.model import predict_probed
+    return predict_probed(model, model.encode(*parts), probes)
+
+
 class GEEK:
     """The one GEEK estimator: any data kind, any mode, any pipeline.
 
@@ -718,7 +751,7 @@ class GEEK:
     def fit(self, data, key: jax.Array, *, mesh=None, mesh_axis: str = "data",
             chunk: int | None = None, seed_cap: int | None = None,
             boundaries: str = "reservoir",
-            discovery: str = "sharded") -> GeekModel:
+            discovery: str | None = None) -> GeekModel:
         """Fit the pipeline on one dataset; the ONE entry point.
 
         Parameters
@@ -727,7 +760,7 @@ class GEEK:
             ``DenseData`` / ``HeteroData`` / ``SparseData`` (a bare 2-D
             array means dense).
         key : jax.Array
-            PRNG key (consumed exactly as the legacy ``fit_*`` did).
+            PRNG key (consumed exactly as the pre-facade ``fit_*`` did).
         mesh : jax.sharding.Mesh or None
             Shard the fit over a 1-axis mesh (``utils.compat.make_mesh``).
             Without ``chunk`` this is the sharded fit (distributed
@@ -745,16 +778,19 @@ class GEEK:
         boundaries : {"reservoir", "exact"}
             Hetero streaming only: where numeric quantile boundaries
             come from (see ``core.streaming``).
-        discovery : {"sharded", "gathered"}
-            Sharded fits only (``mesh=`` without ``chunk=``): "sharded"
-            (default) distributes SILK discovery itself — device-local
-            bucket tables behind a tiled all_to_all exchange plus a
-            hierarchical merge, bit-identical to the in-core fit and
-            scaling with the mesh. Falls back to "gathered" (replicated
-            discovery on the all-gathered reservoir) when ``seed_cap``
-            subsamples, the seeder has ``needs_buckets=False``
-            (kmeans++-style), or a custom Bucketer/Seeder is plugged
-            in. "gathered" forces the reservoir path.
+        discovery : {None, "sharded", "gathered"}
+            Sharded fits only (``mesh=`` without ``chunk=``): ``None``
+            (default, auto) distributes SILK discovery itself —
+            device-local bucket tables behind a tiled all_to_all
+            exchange plus a hierarchical merge, bit-identical to the
+            in-core fit and scaling with the mesh — and silently falls
+            back to "gathered" (replicated discovery on the
+            all-gathered reservoir) when ``seed_cap`` subsamples or a
+            custom/bucket-free Bucketer/Seeder is plugged in. An
+            explicit ``"sharded"`` raises in those cases instead of
+            switching execution plans behind your back
+            (``_resolve_discovery``); ``"gathered"`` forces the
+            reservoir path.
 
         Returns
         -------
@@ -857,7 +893,8 @@ class GEEK:
     # -- serving ------------------------------------------------------------
 
     def predict(self, data, *, model: GeekModel | None = None, mesh=None,
-                mesh_axis: str = "data", batch: int | None = None):
+                mesh_axis: str = "data", batch: int | None = None,
+                probes: int | None = None):
         """Assign new raw traffic with the fitted (or given) model.
 
         Parameters
@@ -879,6 +916,12 @@ class GEEK:
             slicing; the ragged tail is sentinel-padded so every step
             reuses one compiled shape). Labels are row-independent, so
             batching never changes them.
+        probes : int or None
+            ``None`` (default): exact O(k) scan, bit-identical to the
+            historical path. ``p >= 0``: probe the model's center index
+            (sub-linear in k) with exact-path fallback for empty-probe
+            rows — see ``core.model.predict``. Composes with ``batch=``
+            and ``mesh=``.
 
         Returns
         -------
@@ -892,13 +935,23 @@ class GEEK:
         parts = as_dataset(data).parts
         if batch is not None:
             return self._predict_batched(model, parts, batch, mesh,
-                                         mesh_axis)
+                                         mesh_axis, probes)
         if mesh is not None:
             from repro.core.distributed import make_predict_sharded
-            return make_predict_sharded(mesh, axis=mesh_axis)(model, *parts)
-        return _encode_predict(model, *parts)
+            return make_predict_sharded(mesh, axis=mesh_axis,
+                                        probes=probes)(model, *parts)
+        if probes is None:
+            return _encode_predict(model, *parts)
+        from repro.core.model import patch_probed_fallback
+        labels, dists, empty = _encode_predict_probed(model, *parts,
+                                                      probes=int(probes))
+        return patch_probed_fallback(
+            labels, dists, empty,
+            lambda idx: _encode_predict(
+                model, *(None if p is None else jnp.asarray(p)[idx]
+                         for p in parts)))
 
-    def _predict_batched(self, model, parts, batch, mesh, mesh_axis):
+    def _predict_batched(self, model, parts, batch, mesh, mesh_axis, probes):
         """Partial-batch serving loop (one compiled shape, padded tail)."""
         from repro.core.streaming import _pad_rows
         n = next(p.shape[0] for p in parts if p is not None)
@@ -913,7 +966,7 @@ class GEEK:
                            for p in sl)
             lab, dst = self.predict(self._wrap_parts(model, sl),
                                     model=model, mesh=mesh,
-                                    mesh_axis=mesh_axis)
+                                    mesh_axis=mesh_axis, probes=probes)
             labels[off:off + m] = np.asarray(lab)[:m]
             dists[off:off + m] = np.asarray(dst)[:m]
         return labels, dists

@@ -29,8 +29,7 @@ Two complementary distributed paths live here:
    round-trips the checkpoint manager and serves through
    ``make_predict_sharded``. This module keeps the sharding *machinery*
    (``_pad_and_shard``, ``_gather_rows``, the layout exchanges, the
-   distributed-discovery stages, ``make_predict_sharded``) plus the
-   deprecated ``make_fit_sharded`` shim over the facade.
+   distributed-discovery stages, ``make_predict_sharded``).
 
 2. **Table-sync dense fit** (``make_fit_dense``) — the paper's MPI
    design mapped onto JAX collectives, stage by stage:
@@ -79,9 +78,9 @@ from jax.sharding import PartitionSpec as P
 from repro.core import assign as assign_mod
 from repro.core import lsh
 from repro.core.buckets import BucketTables
-from repro.core.geek import (N_PARTS, GeekConfig, _reinsert_none,
-                             _warn_deprecated)
-from repro.core.model import GeekModel, predict
+from repro.core.geek import GeekConfig, _reinsert_none
+from repro.core.model import (GeekModel, patch_probed_fallback, predict,
+                              predict_probed)
 from repro.core.silk import select_top_groups, silk_round
 from repro.utils.compat import axis_size, shard_map
 from repro.utils.hashing import derive_hash_keys
@@ -108,7 +107,7 @@ def _pad_and_shard(present: list, g: int, mesh, axis: str):
 
 
 # ---------------------------------------------------------------------------
-# Unified sharded fit — machinery + the deprecated entry-point shim
+# Unified sharded fit — sharding machinery (bodies live in core.api)
 # ---------------------------------------------------------------------------
 
 def _gather_rows(a_local: jax.Array, axis: str, keep: int | None) -> jax.Array:
@@ -122,57 +121,6 @@ def _gather_rows(a_local: jax.Array, axis: str, keep: int | None) -> jax.Array:
     g = jax.lax.all_gather(a_local, axis)          # (g, s, d)
     out = g.reshape(-1, a_local.shape[1])
     return out if keep is None else out[:keep]
-
-
-def make_fit_sharded(mesh, cfg: GeekConfig, *, kind: str = "dense",
-                     axis: str = "data", seed_cap: int | None = None):
-    """Deprecated shim: ``GEEK(cfg).fit(data, key, mesh=…)``.
-
-    Builds the unified multi-device fit for one data type: discovery
-    per the facade's ``discovery=`` resolution (distributed SILK by
-    default, gathered-reservoir fallback — see the module docstring),
-    then a per-device one-pass assignment through the shared kernel
-    dispatch. With ``seed_cap=None`` labels/centers are
-    **bit-identical** to the in-core fit — the same contract
-    ``core.streaming`` provides, here with both the discovery sort work
-    and the assignment pass (and its memory) split g ways. The facade
-    form takes the dataset spec instead of ``kind``::
-
-        GEEK(cfg).fit(HeteroData(x_num, x_cat), key, mesh=mesh,
-                      mesh_axis=axis, seed_cap=seed_cap)
-
-    Returns
-    -------
-    fit : callable
-        ``fit(*parts, key) -> (GeekResult, GeekModel)`` where ``parts``
-        is ``(x,)`` / ``(x_num, x_cat)`` / ``(sets, mask)`` of global
-        (n, d_i) arrays (host or device). Rows are padded to a multiple
-        of the mesh size with cyclic copies of the leading rows (pure
-        duplicates — they cannot perturb radii) and sharded
-        ``P(axis, None)``; outputs are sliced back to n. The model and
-        result arrays come back replicated. Emits one
-        ``DeprecationWarning`` when called.
-    """
-    from repro.core import api
-    if kind not in N_PARTS:
-        raise ValueError(f"unknown kind {kind!r}; expected one of "
-                         f"{sorted(N_PARTS)}")
-    spec = {"dense": api.DenseData, "hetero": api.HeteroData,
-            "sparse": api.SparseData}[kind]
-
-    def fit(*parts, key):
-        """Wrap the parts in a Dataset, fit via the facade."""
-        _warn_deprecated("make_fit_sharded",
-                         "GEEK(cfg).fit(data, key, mesh=...)")
-        if len(parts) != N_PARTS[kind]:
-            raise ValueError(f"{kind} fit takes {N_PARTS[kind]} part(s), "
-                             f"got {len(parts)}")
-        est = api.GEEK(cfg)
-        model = est.fit(spec(*parts), key, mesh=mesh, mesh_axis=axis,
-                        seed_cap=seed_cap)
-        return est.result_, model
-
-    return fit
 
 
 # ---------------------------------------------------------------------------
@@ -490,23 +438,38 @@ def discover_sharded(kind: str, parts: tuple, key, cfg: GeekConfig,
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=None)
-def _build_predict_sharded(mesh, axis: str, none_pattern: tuple[bool, ...]):
-    """Compile the sharded encode+predict step for one None pattern."""
-    def body(model, *present):
-        """Per-device serving body: encode + predict the row shard."""
-        parts = _reinsert_none(present, none_pattern)
-        return predict(model, model.encode(*parts))
+def _build_predict_sharded(mesh, axis: str, none_pattern: tuple[bool, ...],
+                           probes: int | None = None):
+    """Compile the sharded encode+predict step for one None pattern.
+
+    ``probes=None`` is the exact 2-output body; an int probes the
+    model's center index and returns the 3-output (labels, dists,
+    empty) triple for the caller's host-side fallback patch.
+    """
+    if probes is None:
+        def body(model, *present):
+            """Per-device serving body: encode + predict the row shard."""
+            parts = _reinsert_none(present, none_pattern)
+            return predict(model, model.encode(*parts))
+        n_out = 2
+    else:
+        def body(model, *present):
+            """Per-device probed serving body: encode + index probe."""
+            parts = _reinsert_none(present, none_pattern)
+            return predict_probed(model, model.encode(*parts), probes)
+        n_out = 3
 
     n_present = sum(1 for absent in none_pattern if not absent)
     mapped = shard_map(
         body, mesh=mesh,
         in_specs=(P(),) + (P(axis, None),) * n_present,
-        out_specs=(P(axis), P(axis)),
+        out_specs=(P(axis),) * n_out,
         check_vma=False)
     return jax.jit(mapped)
 
 
-def make_predict_sharded(mesh, *, axis: str = "data"):
+def make_predict_sharded(mesh, *, axis: str = "data",
+                         probes: int | None = None):
     """Build the multi-device serving counterpart of ``model.predict``.
 
     Each device codes and assigns its row shard with the model's
@@ -521,6 +484,12 @@ def make_predict_sharded(mesh, *, axis: str = "data"):
         1-axis device mesh.
     axis : str
         Mesh axis name to shard batch rows over.
+    probes : int or None
+        ``None``: exact scan. ``p >= 0``: each device probes the
+        model's center index (sub-linear in k); empty-probe rows are
+        then patched on the host through the exact sharded path
+        (``model.patch_probed_fallback``), exactly like single-device
+        ``predict(model, x, probes=p)``.
 
     Returns
     -------
@@ -541,9 +510,17 @@ def make_predict_sharded(mesh, *, axis: str = "data"):
             raise ValueError("every query part is None")
         dev, n = _pad_and_shard([p for p in parts if p is not None],
                                 g, mesh, axis)
-        fn = _build_predict_sharded(mesh, axis, none_pattern)
-        labels, dists = fn(model, *dev)
-        return labels[:n], dists[:n]
+        fn = _build_predict_sharded(mesh, axis, none_pattern, probes)
+        if probes is None:
+            labels, dists = fn(model, *dev)
+            return labels[:n], dists[:n]
+        labels, dists, empty = fn(model, *dev)
+        exact = make_predict_sharded(mesh, axis=axis)
+        return patch_probed_fallback(
+            labels[:n], dists[:n], empty[:n],
+            lambda idx: exact(model,
+                              *(None if p is None else jnp.asarray(p)[idx]
+                                for p in parts)))
 
     return predict_fn
 
@@ -617,8 +594,8 @@ def fit_dense_sharded(x_local: jax.Array, key: jax.Array, cfg: GeekConfig,
     Call via shard_map (see ``make_fit_dense``). Discovery itself is
     sharded (per-device SILK on all_to_all-synchronized hash tables),
     which makes it approximate versus the in-core fit — sample-quantile
-    bucket boundaries and per-device SILK rounds; ``make_fit_sharded``
-    is the exact-reservoir alternative.
+    bucket boundaries and per-device SILK rounds; the facade's sharded
+    fit (``GEEK(cfg).fit(data, key, mesh=…)``) is the exact alternative.
 
     Parameters
     ----------
@@ -743,7 +720,8 @@ def make_fit_dense(mesh, cfg: GeekConfig, *, axis: str = "data"):
         returns ``(labels, centers, center_valid, k_star, radius,
         overflow)`` — labels sharded, the rest replicated. Raw arrays,
         not a ``GeekModel`` — this is the paper-faithful benchmark
-        path; ``make_fit_sharded`` is the model-producing one.
+        path; ``GEEK(cfg).fit(data, key, mesh=…)`` is the
+        model-producing one.
     """
     fn = functools.partial(fit_dense_sharded, cfg=cfg, axis=axis)
 

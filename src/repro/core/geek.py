@@ -8,34 +8,28 @@ The pipeline itself lives behind the ``repro.core.api`` facade
 (``GEEK(cfg).fit(DenseData(x) | HeteroData(...) | SparseData(...),
 key)``) as three pluggable protocols — Bucketer, Seeder, Assigner
 (DESIGN.md §11). This module keeps the shared configuration
-(``GeekConfig``), the per-run result type (``GeekResult``), the
-kind-specific helpers the protocols are built from, and the legacy
-per-type entry points as **deprecated shims** over the facade:
-
-  - fit_dense(x)              == GEEK(cfg).fit(DenseData(x), key)
-  - fit_hetero(x_num, x_cat)  == GEEK(cfg).fit(HeteroData(...), key)
-  - fit_sparse(sets, mask)    == GEEK(cfg).fit(SparseData(...), key)
-
-Each shim returns ``(GeekResult, GeekModel)`` bit-identically to the
-facade (it IS the facade) and emits one ``DeprecationWarning`` per
-call.
+(``GeekConfig``), the per-run result type (``GeekResult``), and the
+kind-specific helpers the protocols are built from. The legacy
+per-type entry points (``fit_dense`` / ``fit_hetero`` / ``fit_sparse``
+and their streaming/sharded twins) were deprecation-shimmed in PR 5
+and removed in PR 7 per the DESIGN.md §11 clock — the facade is the
+only fit surface.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import assign as assign_mod
+from repro.core.lsh import code_items as lsh_code_items
 from repro.core.model import (GeekModel, NumericDiscretizer, build_model)
 from repro.core.silk import Seeds
 from repro.core.transform import (HeteroTransform, IdentityTransform,
                                   SparseTransform)
 from repro.kernels.pack import bits_for_cardinality
-from repro.utils.hashing import combine2_u32, derive_hash_keys
 
 #: data-type kind -> number of raw input parts:
 #: dense = (x,), hetero = (x_num, x_cat), sparse = (sets, mask)
@@ -46,12 +40,6 @@ def _reinsert_none(present: tuple, none_pattern: tuple[bool, ...]) -> tuple:
     """Re-expand a filtered part tuple to its static None pattern."""
     it = iter(present)
     return tuple(None if absent else next(it) for absent in none_pattern)
-
-
-def _warn_deprecated(old: str, new: str) -> None:
-    """One DeprecationWarning per legacy entry-point call (DESIGN.md §11)."""
-    warnings.warn(f"{old} is deprecated; use {new} (repro.core.api, "
-                  "DESIGN.md §11)", DeprecationWarning, stacklevel=3)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -158,20 +146,6 @@ def _seed_codes(codes, seeds: Seeds, cfg: GeekConfig, *, bits: int,
 
 
 # ---------------------------------------------------------------------------
-# Homogeneous dense (Algorithm 1)
-# ---------------------------------------------------------------------------
-
-def fit_dense(x: jax.Array, key: jax.Array,
-              cfg: GeekConfig) -> tuple[GeekResult, GeekModel]:
-    """Deprecated shim: ``GEEK(cfg).fit(DenseData(x), key)``."""
-    from repro.core import api
-    _warn_deprecated("fit_dense", "GEEK(cfg).fit(DenseData(x), key)")
-    est = api.GEEK(cfg)
-    model = est.fit(api.DenseData(x), key)
-    return est.result_, model
-
-
-# ---------------------------------------------------------------------------
 # Heterogeneous dense (Algorithm 2)
 # ---------------------------------------------------------------------------
 
@@ -208,11 +182,9 @@ def hetero_codes(x_num: jax.Array, x_cat: jax.Array, t_cat: int, *,
     return transform(x_num, x_cat)
 
 
-def _code_items(codes: jax.Array, key: jax.Array) -> jax.Array:
-    """Attribute-value pairs as hashed set items: item_j = H(j, code_j)."""
-    (hk,) = derive_hash_keys(key, (1,))
-    dims = jnp.arange(codes.shape[1], dtype=jnp.int32)[None, :]
-    return combine2_u32(jnp.broadcast_to(dims, codes.shape), codes, hk[0], hk[1])
+#: re-export: the canonical implementation lives in ``core.lsh`` so the
+#: center index (``core.model``) can share it without importing this module
+_code_items = lsh_code_items
 
 
 def hetero_code_bits(cfg: GeekConfig, x_cat: jax.Array | None) -> int:
@@ -237,24 +209,13 @@ def hetero_code_bits(cfg: GeekConfig, x_cat: jax.Array | None) -> int:
     return bits
 
 
-def fit_hetero(x_num: jax.Array, x_cat: jax.Array, key: jax.Array,
-               cfg: GeekConfig) -> tuple[GeekResult, GeekModel]:
-    """Deprecated shim: ``GEEK(cfg).fit(HeteroData(x_num, x_cat), key)``."""
-    from repro.core import api
-    _warn_deprecated("fit_hetero",
-                     "GEEK(cfg).fit(HeteroData(x_num, x_cat), key)")
-    est = api.GEEK(cfg)
-    model = est.fit(api.HeteroData(x_num, x_cat), key)
-    return est.result_, model
-
-
 # ---------------------------------------------------------------------------
 # Sparse (Algorithm 3)
 # ---------------------------------------------------------------------------
 
 def make_sparse_transform(key: jax.Array, cfg: GeekConfig) -> SparseTransform:
     """The persistent sparse transform, deriving the DOPH key from the
-    fit key exactly as ``fit_sparse`` does. The key rides in the model
+    fit key exactly as the sparse fit does. The key rides in the model
     (and its checkpoints), so a serving process codes new traffic without
     ever seeing the original fit key."""
     return SparseTransform(jax.random.split(key, 4)[0], cfg.doph_m)
@@ -262,27 +223,10 @@ def make_sparse_transform(key: jax.Array, cfg: GeekConfig) -> SparseTransform:
 
 def sparse_codes(sets: jax.Array, mask: jax.Array, key: jax.Array,
                  cfg: GeekConfig) -> jax.Array:
-    """16-bit DOPH codes exactly as fit_sparse derives them from ``key``.
+    """16-bit DOPH codes exactly as the sparse fit derives them from ``key``.
 
     The serving path needs this coding: new sparse points must land in
     the model's code space — prefer ``model.encode(sets, mask)``, which
     uses the persisted fit-time key.
     """
     return make_sparse_transform(key, cfg)(sets, mask)
-
-
-def fit_sparse(sets: jax.Array, mask: jax.Array, key: jax.Array,
-               cfg: GeekConfig) -> tuple[GeekResult, GeekModel]:
-    """Deprecated shim: ``GEEK(cfg).fit(SparseData(sets, mask), key)``.
-
-    DOPH codes are truncated to 16 bits — always packable 2:1.
-    ``cfg.code_bits`` describes *hetero* codes, so the facade ignores it
-    for sparse data: a narrower width would silently mask DOPH codes
-    during packing.
-    """
-    from repro.core import api
-    _warn_deprecated("fit_sparse",
-                     "GEEK(cfg).fit(SparseData(sets, mask), key)")
-    est = api.GEEK(cfg)
-    model = est.fit(api.SparseData(sets, mask), key)
-    return est.result_, model

@@ -11,7 +11,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.utils.hashing import UMAX32, derive_hash_keys, hash_u32, mix_u32
+from repro.utils.hashing import (UMAX32, combine2_u32, derive_hash_keys,
+                                 hash_u32, mix_u32)
 
 
 # ---------------------------------------------------------------------------
@@ -52,6 +53,20 @@ def minhash_signatures(
         return sig
 
     return jax.vmap(one_table)(keys)  # (L, n)
+
+
+def code_items(codes: jax.Array, key: jax.Array) -> jax.Array:
+    """Attribute-value pairs as hashed set items: item_j = H(j, code_j).
+
+    Turns an (n, d) categorical-code matrix into an (n, d) uint32 item-set
+    view, so Jaccard over the items approximates normalized Hamming over
+    the codes. Shared by the hetero bucketing pipeline and the center
+    index (``model.build_center_index``).
+    """
+    (hk,) = derive_hash_keys(key, (1,))
+    dims = jnp.arange(codes.shape[1], dtype=jnp.int32)[None, :]
+    return combine2_u32(jnp.broadcast_to(dims, codes.shape), codes,
+                        hk[0], hk[1])
 
 
 def minhash_over_segments(

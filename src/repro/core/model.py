@@ -1,6 +1,6 @@
 """GeekModel — the persistent fitted state of a GEEK run (DESIGN.md §9).
 
-Every ``fit_*`` entry point pays the expensive discovery phase (LSH
+Every ``GEEK.fit`` pays the expensive discovery phase (LSH
 transformation + SILK seeding) once and returns, alongside the per-run
 ``GeekResult``, a small reusable model: the central vectors plus the
 metric/packing metadata needed to assign *new* points with the same
@@ -19,12 +19,24 @@ Centers are pre-packed once at model-build time (bit-packed words for the
 packed path, bf16 one-hot for the MXU path), so a predict call packs only
 the incoming batch — the (k, d) side rides along for free.
 
+The model also carries a **center index** (DESIGN.md §12): at build
+time the k centers are hashed into the model's own LSH bucket tables
+(QALSH projections for l2, MinHash signatures over hashed (dim, code)
+items for code spaces) and kept sorted per table. ``predict(model, x,
+probes=p)`` then scans only the centers whose table positions fall in
+the query's bucket ± p multi-probe neighbors — sub-linear in k — and
+falls back to the exact full scan for any query whose probe set comes
+up empty, so every point always gets a label. ``probes=None`` (the
+default) bypasses the index entirely and is bit-identical to the
+historical exact path.
+
 The model is a pytree whose aux data carries the static dispatch fields,
 so it passes through ``jax.jit``, ``jax.device_put``, and the checkpoint
 manager unchanged. Serialization keeps only the canonical arrays
 (centers / center_valid / k_star / radius) plus the transform's arrays
-(quantile boundaries / DOPH key); the packed caches are re-derived on
-restore (see ``checkpoint.manager.save_model``).
+(quantile boundaries / DOPH key); the packed caches AND the center
+index are re-derived on restore (the index is a deterministic function
+of the centers — see ``checkpoint.manager.save_model``).
 """
 from __future__ import annotations
 
@@ -35,7 +47,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.pack import onehot_codes, pack_codes
+from repro.kernels.pack import field_mismatch_count, onehot_codes, pack_codes
+from repro.utils.hashing import UMAX32, derive_hash_keys
 
 #: canonical fields persisted by the checkpoint manager, in manifest order
 #: (the transform's arrays ride along under a "transform_" prefix)
@@ -138,6 +151,184 @@ class NumericDiscretizer:
         return codes.astype(jnp.int32)
 
 
+# ---------------------------------------------------------------------------
+# Center index — the model's own LSH tables over its k centers
+# ---------------------------------------------------------------------------
+
+#: fold seed for the index's PRNG key. A fixed constant makes the index a
+#: pure function of (centers, center_valid, metric, tables, bucket), which
+#: is what lets checkpoint restore REBUILD it instead of serializing it —
+#: the restored index is bit-identical to the fitted one by construction.
+_INDEX_SEED = 0x6EEC
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CenterIndex:
+    """Per-table sorted LSH keys over the model's centers (DESIGN.md §12).
+
+    One row per hash table: ``sorted_keys[t]`` holds the t-th table's
+    hash of every center in ascending order, ``sorted_ids[t]`` the
+    matching center rows. A query is hashed with the same ``hashers``
+    and probed by *position*: ``searchsorted`` finds its rank in each
+    table and a ± window of ``bucket``-sized multi-probe neighbors
+    around that rank forms the candidate set. Invalid centers are keyed
+    to +inf / UMAX32 so they sort to the tail; candidates are
+    additionally masked by ``center_valid`` at probe time.
+
+    A registered pytree (arrays as children, metric/bucket as aux), so
+    it rides inside ``GeekModel`` through jit/shard_map/device_put.
+    """
+
+    hashers: tuple            # l2: (proj (d, T),)
+                              # hamming: (item_key, sig_keys (T, K, 2))
+    sorted_keys: jax.Array    # (T, k_max) float32 (l2) / uint32 (hamming)
+    sorted_ids: jax.Array     # (T, k_max) int32 center rows, key-ascending
+    n_valid: jax.Array        # () int32 — number of live centers
+    metric: str = "l2"
+    bucket: int = 32          # multi-probe step: positions per probe hop
+
+    def tree_flatten(self):
+        """Pytree protocol: hash state as children, dispatch as aux."""
+        return ((self.hashers, self.sorted_keys, self.sorted_ids,
+                 self.n_valid), (self.metric, self.bucket))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        """Pytree protocol: rebuild from (children, aux)."""
+        return cls(*children, *aux)
+
+    @property
+    def num_tables(self) -> int:
+        """Number of hash tables (rows of ``sorted_keys``)."""
+        return self.sorted_keys.shape[0]
+
+    def query_keys(self, x: jax.Array) -> jax.Array:
+        """Hash a query batch with the index's own functions: (T, n)."""
+        from repro.core import lsh
+        if self.metric == "l2":
+            (proj,) = self.hashers
+            return lsh.qalsh_hash(x, proj).T
+        item_key, sig_keys = self.hashers
+        items = lsh.code_items(x.astype(jnp.int32), item_key)
+        return lsh.minhash_signatures(
+            items, jnp.ones(items.shape, bool), sig_keys)
+
+
+def build_center_index(centers: jax.Array, center_valid: jax.Array, *,
+                       metric: str, tables: int = 8,
+                       bucket: int = 32) -> CenterIndex:
+    """Hash the centers into per-table sorted LSH keys.
+
+    Uses the paper's own families over *centers* instead of data points:
+    QALSH projections (Eq. 3) for l2, MinHash signatures over hashed
+    (dim, code) items (Eq. 2) for code spaces. The PRNG key is a fixed
+    constant (``_INDEX_SEED``), so the index is a deterministic function
+    of its inputs and checkpoint restore rebuilds it exactly.
+
+    Parameters
+    ----------
+    centers : (k_max, d) jax.Array
+        Centroids (l2) or mode codes (hamming).
+    center_valid : (k_max,) bool jax.Array
+        Which center rows are live; dead rows sort to the key tail.
+    metric : {"l2", "hamming"}
+        Selects the hash family.
+    tables : int
+        Number of independent hash tables T.
+    bucket : int
+        Multi-probe step in sorted positions (the probe window is
+        ``O(probes * bucket)`` per table).
+
+    Returns
+    -------
+    CenterIndex
+        With (T, k_max) sorted keys/ids on the same device as centers.
+    """
+    from repro.core import lsh
+    key = jax.random.PRNGKey(_INDEX_SEED)
+    if metric == "l2":
+        proj = lsh.qalsh_projections(key, int(centers.shape[1]), tables)
+        hashed = lsh.qalsh_hash(centers.astype(jnp.float32), proj)   # (k, T)
+        keys = jnp.where(center_valid[:, None], hashed, jnp.inf).T   # (T, k)
+        hashers = (proj,)
+    else:
+        item_key, sig_key = jax.random.split(key)
+        sig_keys = derive_hash_keys(sig_key, (tables, 2))            # (T, 2, 2)
+        items = lsh.code_items(centers.astype(jnp.int32), item_key)
+        sigs = lsh.minhash_signatures(
+            items, jnp.ones(items.shape, bool), sig_keys)            # (T, k)
+        keys = jnp.where(center_valid[None, :], sigs, UMAX32)
+        hashers = (item_key, sig_keys)
+    order = jnp.argsort(keys, axis=1).astype(jnp.int32)
+    skeys = jnp.take_along_axis(keys, order, axis=1)
+    return CenterIndex(hashers, skeys, order,
+                       jnp.sum(center_valid).astype(jnp.int32),
+                       metric, int(bucket))
+
+
+def _probe_width(index: CenterIndex, probes: int) -> int:
+    """Static candidate-window width per table for a probe count.
+
+    l2 probes by rank: the window is the query's position ± probes
+    bucket-hops (odd multiple, centered). Hamming probes by signature
+    run: the exact-match run plus probes bucket-hops each side — at
+    ``probes=0`` a non-matching signature yields a genuinely empty
+    window (the fallback path).
+    """
+    k = index.sorted_keys.shape[1]
+    bw = max(int(index.bucket), 1)
+    if index.metric == "l2":
+        return min((2 * probes + 1) * bw, k)
+    return min((2 * probes + 2) * bw, k)
+
+
+def probe_candidates(index: CenterIndex, x: jax.Array,
+                     probes: int) -> tuple[jax.Array, jax.Array]:
+    """Candidate center rows for each query via positional multi-probe.
+
+    Parameters
+    ----------
+    index : CenterIndex
+        The model's center index.
+    x : (n, d) jax.Array
+        Queries in the model's assignment space (floats for l2, int32
+        codes for hamming).
+    probes : int
+        Multi-probe radius; window width is ``_probe_width`` positions
+        per table (static, so the call jits with fixed shapes).
+
+    Returns
+    -------
+    (cand, mask)
+        (n, T*width) int32 candidate center rows and a bool mask of
+        which entries are real probe hits (the rest are positional
+        padding and must be ignored).
+    """
+    T, k = index.sorted_keys.shape
+    width = _probe_width(index, probes)
+    bw = max(int(index.bucket), 1)
+    qk = index.query_keys(x)                                     # (T, n)
+    if index.metric == "l2":
+        pos = jax.vmap(jnp.searchsorted)(index.sorted_keys, qk)
+        lo = pos - width // 2
+        hi = lo + width
+    else:
+        lo = jax.vmap(functools.partial(jnp.searchsorted, side="left"))(
+            index.sorted_keys, qk) - probes * bw
+        hi = jax.vmap(functools.partial(jnp.searchsorted, side="right"))(
+            index.sorted_keys, qk) + probes * bw
+    start = jnp.maximum(lo, 0)                                   # (T, n)
+    grid = start[:, :, None] + jnp.arange(width, dtype=jnp.int32)
+    limit = jnp.minimum(hi, index.n_valid)                       # (T, n)
+    mask = grid < limit[:, :, None]                              # (T, n, w)
+    ids = jnp.take_along_axis(index.sorted_ids,
+                              jnp.clip(grid, 0, k - 1).reshape(T, -1),
+                              axis=1).reshape(T, x.shape[0], width)
+    cand = jnp.moveaxis(ids, 0, 1).reshape(x.shape[0], T * width)
+    return cand, jnp.moveaxis(mask, 0, 1).reshape(x.shape[0], T * width)
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class GeekModel:
@@ -159,6 +350,8 @@ class GeekModel:
     # -- derived packed caches (rebuilt on restore, not serialized) ---------
     packed_centers: jax.Array | None   # (k_max, w) uint32, impl == "packed"
     onehot_centers: jax.Array | None   # (k_max, d*card) bf16, impl == "onehot"
+    # -- center index (deterministic from centers; rebuilt on restore) ------
+    center_index: CenterIndex | None = None
     # -- fit-time transform (repro.core.transform; serialized) --------------
     transform: object | None = None    # Transform pytree; None = caller
                                        # supplies pre-transformed codes
@@ -175,15 +368,21 @@ class GeekModel:
     # manifest so a serving process can report HOW its seeds were made.
     bucketer_id: str = ""
     seeder_id: str = ""
+    # center-index shape knobs (rebuild parameters; persisted in the
+    # checkpoint manifest so restore rebuilds the same index)
+    index_tables: int = 8     # hash tables T; 0 disables the index
+    index_bucket: int = 32    # multi-probe step in sorted positions
 
     def tree_flatten(self):
         """Pytree protocol: arrays (+ transform) as children, static
         dispatch metadata as aux — the model jits/device_puts whole."""
         children = (self.centers, self.center_valid, self.k_star, self.radius,
-                    self.packed_centers, self.onehot_centers, self.transform)
+                    self.packed_centers, self.onehot_centers,
+                    self.center_index, self.transform)
         aux = (self.metric, self.impl, self.code_bits, self.d,
                self.assign_block, self.use_pallas,
-               self.bucketer_id, self.seeder_id)
+               self.bucketer_id, self.seeder_id,
+               self.index_tables, self.index_bucket)
         return children, aux
 
     @classmethod
@@ -228,7 +427,9 @@ class GeekModel:
                 "assign_block": self.assign_block,
                 "use_pallas": self.use_pallas,
                 "bucketer_id": self.bucketer_id,
-                "seeder_id": self.seeder_id}
+                "seeder_id": self.seeder_id,
+                "index_tables": self.index_tables,
+                "index_bucket": self.index_bucket}
 
 
 def build_model(centers: jax.Array, center_valid: jax.Array,
@@ -237,10 +438,11 @@ def build_model(centers: jax.Array, center_valid: jax.Array,
                 assign_block: int = 4096,
                 use_pallas: bool = False,
                 transform=None, bucketer_id: str = "",
-                seeder_id: str = "") -> GeekModel:
+                seeder_id: str = "", index_tables: int = 8,
+                index_bucket: int = 32) -> GeekModel:
     """Construct a GeekModel, pre-packing centers for the chosen impl.
 
-    This is the single constructor used by the ``fit_*`` paths *and* by
+    This is the single constructor used by every fit path *and* by
     checkpoint restore — packing here (not per predict call) is what makes
     the restored model's fast path identical to the freshly fitted one.
 
@@ -272,12 +474,17 @@ def build_model(centers: jax.Array, center_valid: jax.Array,
     bucketer_id, seeder_id : str
         Provenance: the ``repro.core.api`` protocol names of the stages
         that fitted this model ("" when not fitted via the facade).
+    index_tables : int
+        Hash tables for the center index (``build_center_index``);
+        0 disables the index (``predict(probes=...)`` then raises).
+    index_bucket : int
+        Multi-probe step of the center index, in sorted positions.
 
     Returns
     -------
     GeekModel
-        With packed/one-hot center caches derived once, on the same
-        device(s) as ``centers``.
+        With packed/one-hot center caches AND the center index derived
+        once, on the same device(s) as ``centers``.
     """
     if metric not in ("l2", "hamming"):
         raise ValueError(f"unknown metric {metric!r}")
@@ -292,10 +499,16 @@ def build_model(centers: jax.Array, center_valid: jax.Array,
     if transform is None and metric == "l2":
         from repro.core.transform import IdentityTransform
         transform = IdentityTransform()
+    index = None
+    if index_tables > 0:
+        index = build_center_index(centers, center_valid, metric=metric,
+                                   tables=index_tables, bucket=index_bucket)
     return GeekModel(centers, center_valid, k_star, radius, packed, onehot,
-                     transform, metric, impl if metric == "hamming" else "",
+                     index, transform, metric,
+                     impl if metric == "hamming" else "",
                      code_bits, int(centers.shape[1]), assign_block,
-                     use_pallas, bucketer_id, seeder_id)
+                     use_pallas, bucketer_id, seeder_id,
+                     int(index_tables), int(index_bucket))
 
 
 def predict_l2(model: GeekModel, x: jax.Array):
@@ -375,7 +588,147 @@ def predict_hamming(model: GeekModel, codes: jax.Array):
 
 
 @jax.jit
-def predict(model: GeekModel, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+def _predict_exact(model: GeekModel, x: jax.Array
+                   ) -> tuple[jax.Array, jax.Array]:
+    """The exact O(k) full-scan assignment (the historical ``predict``)."""
+    if x.ndim != 2 or x.shape[1] != model.d:
+        raise ValueError(f"expected (n, {model.d}) input, got {x.shape}")
+    if model.metric == "l2":
+        return predict_l2(model, x)
+    return predict_hamming(model, x.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("probes",))
+def predict_probed(model: GeekModel, x: jax.Array, probes: int
+                   ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Index-probed assignment core: sub-linear in k, jit/shard_map safe.
+
+    Scans only the centers in each query's probe windows (``O(T * probes
+    * bucket)`` candidates instead of k). Rows whose probe set comes up
+    empty get ``labels=0, dists=inf, empty=True`` and MUST be patched by
+    the caller via the exact path (``patch_probed_fallback`` — the
+    module-level ``predict(probes=...)`` does this for you). Whenever a
+    query's probe windows contain its true argmin center, the probed
+    label equals the exact label (ties break toward the smallest center
+    row on both paths).
+
+    Parameters
+    ----------
+    model : GeekModel
+        Fitted model with a center index (``index_tables > 0``).
+    x : (n, d) jax.Array
+        Queries in the model's assignment space (see ``predict``).
+    probes : int
+        Static multi-probe radius, >= 0.
+
+    Returns
+    -------
+    (labels, dists, empty)
+        (n,) int32 labels, (n,) float32 distances (same normalization
+        as ``predict``), (n,) bool empty-probe markers.
+    """
+    if x.ndim != 2 or x.shape[1] != model.d:
+        raise ValueError(f"expected (n, {model.d}) input, got {x.shape}")
+    index = model.center_index
+    if index is None:
+        raise ValueError("model has no center index (built with "
+                         "index_tables=0); predict with probes=None")
+    probes = int(probes)
+    if probes < 0:
+        raise ValueError(f"probes must be >= 0, got {probes}")
+    if model.metric != "l2":
+        x = x.astype(jnp.int32)
+    width = _probe_width(index, probes)
+    n_cand = index.num_tables * width
+    # bound the (block, n_cand, d) gather to ~32M elements per step
+    block = max(1, min(model.assign_block,
+                       (1 << 25) // max(n_cand * model.d, 1)))
+    # center norms once per call (one k*d pass), gathered per candidate —
+    # NOT recomputed per candidate, which would double the hot-loop flops
+    cnorms = (jnp.sum(model.centers * model.centers, axis=-1)
+              if model.metric == "l2" else None)
+
+    def block_fn(xb):
+        """Probe + candidate-only distance/argmin for one query block."""
+        cand, mask = probe_candidates(index, xb, probes)
+        mask = mask & jnp.take(model.center_valid, cand)
+        if model.metric == "l2":
+            cc = jnp.take(model.centers, cand, axis=0)       # (B, C, d)
+            dist = (jnp.sum(xb * xb, axis=-1)[:, None]
+                    - 2.0 * jnp.einsum("bd,bcd->bc", xb, cc)
+                    + jnp.take(cnorms, cand))
+        elif model.impl == "packed":
+            xp = pack_codes(xb, model.code_bits)
+            cp = jnp.take(model.packed_centers, cand, axis=0)
+            dist = jnp.sum(field_mismatch_count(cp ^ xp[:, None, :],
+                                                model.code_bits),
+                           axis=-1).astype(jnp.float32)
+        else:
+            cc = jnp.take(model.centers, cand, axis=0).astype(jnp.int32)
+            dist = jnp.sum(cc != xb[:, None, :], axis=-1).astype(jnp.float32)
+        dist = jnp.where(mask, dist, jnp.inf)
+        mind = jnp.min(dist, axis=1)
+        empty = ~jnp.any(mask, axis=1)
+        # tie-break toward the smallest center row, like exact argmin
+        tie = jnp.where(mask & (dist == mind[:, None]), cand,
+                        jnp.int32(model.k_max))
+        labels = jnp.where(empty, 0, jnp.min(tie, axis=1)).astype(jnp.int32)
+        if model.metric == "l2":
+            out = jnp.sqrt(jnp.maximum(mind, 0.0))
+        else:
+            out = mind / model.d
+        return labels, jnp.where(empty, jnp.inf, out).astype(jnp.float32), \
+            empty
+
+    n = x.shape[0]
+    if n <= block:
+        return block_fn(x)
+    pad = (-n) % block
+    xp_ = jnp.pad(x, ((0, pad), (0, 0)))
+    labels, dists, empty = jax.lax.map(
+        block_fn, xp_.reshape(-1, block, x.shape[1]))
+    return (labels.reshape(-1)[:n], dists.reshape(-1)[:n],
+            empty.reshape(-1)[:n])
+
+
+def patch_probed_fallback(labels, dists, empty, exact_fn):
+    """Host-side exact fallback for empty-probe rows (DESIGN.md §12).
+
+    Every serving surface shares this repair step: gather the rows
+    ``predict_probed`` marked empty, pad their count to a power of two
+    (cyclically, to bound jit recompiles to O(log n) shapes), rerun the
+    exact path on just those rows, and scatter the results back.
+
+    Parameters
+    ----------
+    labels, dists, empty : jax.Array
+        Concrete (non-traced) outputs of ``predict_probed``.
+    exact_fn : callable
+        ``exact_fn(row_idx) -> (labels, dists)`` running the exact scan
+        on the given row indices of the original query batch.
+
+    Returns
+    -------
+    (labels, dists)
+        With every empty-probe row replaced by its exact assignment.
+    """
+    if isinstance(empty, jax.core.Tracer):
+        raise ValueError(
+            "predict(probes=...) is a host-level API; inside jit/shard_map "
+            "call predict_probed and patch empty rows outside the trace")
+    hits = np.asarray(empty)
+    if not hits.any():
+        return labels, dists
+    idx = np.flatnonzero(hits)
+    m = 1 << max(4, (len(idx) - 1).bit_length())
+    pidx = np.resize(idx, m)  # cyclic pad: one compiled shape per pow2
+    lab, dst = exact_fn(jnp.asarray(pidx))
+    return (labels.at[idx].set(lab[:len(idx)]),
+            dists.at[idx].set(dst[:len(idx)]))
+
+
+def predict(model: GeekModel, x: jax.Array,
+            probes: int | None = None) -> tuple[jax.Array, jax.Array]:
     """One-pass assignment of new points against a fitted model.
 
     Parameters
@@ -390,15 +743,26 @@ def predict(model: GeekModel, x: jax.Array) -> tuple[jax.Array, jax.Array]:
         key) on raw traffic. Single-device; for row-sharded
         multi-device serving use
         ``core.distributed.make_predict_sharded``.
+    probes : int or None
+        ``None`` (default): the exact O(k) full scan — bit-identical to
+        the historical path. ``p >= 0``: probe the model's center index
+        (sub-linear in k, ``O(index_tables * (2p+1) * index_bucket)``
+        candidates per point); rows whose probes come up empty fall
+        back to the exact scan on the host, so every point always gets
+        a label. With probes the call must run outside jit (the
+        fallback is host-side) — in-trace callers use
+        ``predict_probed`` + ``patch_probed_fallback``.
 
     Returns
     -------
     (labels, dists)
         With the same semantics as ``GeekResult`` — on the fit data the
-        labels are bit-identical to the fit-time assignment.
+        labels are bit-identical to the fit-time assignment when
+        ``probes is None``.
     """
-    if x.ndim != 2 or x.shape[1] != model.d:
-        raise ValueError(f"expected (n, {model.d}) input, got {x.shape}")
-    if model.metric == "l2":
-        return predict_l2(model, x)
-    return predict_hamming(model, x.astype(jnp.int32))
+    if probes is None:
+        return _predict_exact(model, x)
+    labels, dists, empty = predict_probed(model, x, int(probes))
+    return patch_probed_fallback(
+        labels, dists, empty,
+        lambda idx: _predict_exact(model, jnp.asarray(x)[idx]))

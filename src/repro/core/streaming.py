@@ -30,20 +30,15 @@ discovery on the reservoir through its Bucketer/Seeder protocols and
 hands this module the chunked assignment pass (``_streamed_fit``).
 This module owns the *execution machinery* only: host-side chunk
 normalization, the stride-sampled reservoir, and the donated-buffer
-streamed assignment loop. The legacy per-type drivers remain as
-deprecated shims over the facade (DESIGN.md §9):
-
-  - ``fit_dense_streaming(x_or_iter, …)``
-  - ``fit_hetero_streaming((x_num, x_cat) or iter of pairs, …)`` — the
-    chunked MinHash path; numeric quantile boundaries are estimated from
-    the reservoir, or from the full data with ``boundaries="exact"``
-    (a second host pass over the numeric columns only)
-  - ``fit_sparse_streaming((sets, mask) or iter of pairs, …)`` — the
-    chunked DOPH path
+streamed assignment loop. (The legacy ``fit_*_streaming`` shims were
+removed in PR 7 per the DESIGN.md §11 deprecation clock.)
 
 ``data`` may be arrays (numpy/JAX; chunks are sliced from them) or an
 iterator of host chunks (materialized chunk-by-chunk into host RAM — n
-is bounded by host memory, never by HBM).
+is bounded by host memory, never by HBM). Hetero numeric quantile
+boundaries are estimated from the reservoir, or from the full data
+with ``boundaries="exact"`` (a second host pass over the numeric
+columns only).
 
 Every driver also takes ``mesh=`` (docs/architecture.md): with a 1-axis
 ``jax.sharding.Mesh`` the streamed assignment pass runs **sharded** —
@@ -66,7 +61,7 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core import assign as assign_mod
-from repro.core.geek import GeekConfig, GeekResult, _warn_deprecated
+from repro.core.geek import GeekConfig, GeekResult
 from repro.core.model import GeekModel
 
 
@@ -305,76 +300,3 @@ def _collect(data, nparts: int, chunk: int):
     if not chunks:
         raise ValueError("streaming fit: empty input")
     return chunks, sum(_rows(c) for c in chunks), whole
-
-
-# ---------------------------------------------------------------------------
-# Deprecated per-type drivers — thin shims over the facade
-# ---------------------------------------------------------------------------
-
-def fit_dense_streaming(data, key: jax.Array, cfg: GeekConfig, *,
-                        chunk: int = 8192, seed_cap: int | None = None,
-                        mesh=None, mesh_axis: str = "data"
-                        ) -> tuple[GeekResult, GeekModel]:
-    """Deprecated shim: ``GEEK(cfg).fit(DenseData(x), key, chunk=…)``.
-
-    ``data`` may be a (n, d) array or an iterator of (m_i, d) host
-    chunks; with ``seed_cap=None`` labels/centers are bit-identical to
-    the in-core fit for any chunk size. See ``api.GEEK.fit``.
-    """
-    from repro.core import api
-    _warn_deprecated("fit_dense_streaming",
-                     "GEEK(cfg).fit(DenseData(x), key, chunk=...)")
-    est = api.GEEK(cfg)
-    spec = (api.DenseData(data) if hasattr(data, "shape")
-            and getattr(data, "ndim", 0) == 2 else api.DenseData(chunks=data))
-    model = est.fit(spec, key, chunk=chunk, seed_cap=seed_cap, mesh=mesh,
-                    mesh_axis=mesh_axis)
-    return est.result_, model
-
-
-def _pair_spec(cls, data):
-    """Wrap legacy (p1, p2)-or-iterator streaming input in a Dataset."""
-    if isinstance(data, (tuple, list)):
-        return cls(*data)
-    return cls(chunks=data)
-
-
-def fit_hetero_streaming(data, key: jax.Array, cfg: GeekConfig, *,
-                         chunk: int = 8192, seed_cap: int | None = None,
-                         boundaries: str = "reservoir",
-                         mesh=None, mesh_axis: str = "data"
-                         ) -> tuple[GeekResult, GeekModel]:
-    """Deprecated shim: ``GEEK(cfg).fit(HeteroData(...), key, chunk=…)``.
-
-    ``data`` is a (x_num, x_cat) pair or an iterator of such pairs;
-    ``boundaries="exact"`` makes a dedicated host pass over the numeric
-    columns so a subsampled reservoir still yields the in-core
-    discretizer. See ``api.GEEK.fit``.
-    """
-    from repro.core import api
-    _warn_deprecated("fit_hetero_streaming",
-                     "GEEK(cfg).fit(HeteroData(x_num, x_cat), key, "
-                     "chunk=...)")
-    est = api.GEEK(cfg)
-    model = est.fit(_pair_spec(api.HeteroData, data), key, chunk=chunk,
-                    seed_cap=seed_cap, boundaries=boundaries, mesh=mesh,
-                    mesh_axis=mesh_axis)
-    return est.result_, model
-
-
-def fit_sparse_streaming(data, key: jax.Array, cfg: GeekConfig, *,
-                         chunk: int = 8192, seed_cap: int | None = None,
-                         mesh=None, mesh_axis: str = "data"
-                         ) -> tuple[GeekResult, GeekModel]:
-    """Deprecated shim: ``GEEK(cfg).fit(SparseData(...), key, chunk=…)``.
-
-    ``data`` is a (sets, mask) pair or an iterator of such pairs. See
-    ``api.GEEK.fit``.
-    """
-    from repro.core import api
-    _warn_deprecated("fit_sparse_streaming",
-                     "GEEK(cfg).fit(SparseData(sets, mask), key, chunk=...)")
-    est = api.GEEK(cfg)
-    model = est.fit(_pair_spec(api.SparseData, data), key, chunk=chunk,
-                    seed_cap=seed_cap, mesh=mesh, mesh_axis=mesh_axis)
-    return est.result_, model

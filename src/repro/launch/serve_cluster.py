@@ -22,6 +22,7 @@ batches and report steady-state points/sec.
 from __future__ import annotations
 
 import argparse
+import functools
 import time
 
 import jax
@@ -31,7 +32,7 @@ from repro.checkpoint.manager import restore_model, save_model
 from repro.core.api import GEEK, DenseData, HeteroData, SparseData
 from repro.core.distributed import make_predict_sharded
 from repro.core.geek import GeekConfig
-from repro.core.model import predict
+from repro.core.model import patch_probed_fallback, predict, predict_probed
 from repro.data import synthetic
 from repro.utils.compat import make_mesh
 
@@ -45,6 +46,27 @@ def _serve(model, *parts):
     """One serving step: fit-time coding + one-pass assignment, jitted
     as a single program (the transform rides inside the model pytree)."""
     return predict(model, model.encode(*parts))
+
+
+@functools.partial(jax.jit, static_argnames=("probes",))
+def _serve_probed(model, *parts, probes: int):
+    """One probed serving step: coding + center-index assignment."""
+    return predict_probed(model, model.encode(*parts), probes)
+
+
+def _make_serve(probes: int | None):
+    """Single-device serving fn for the probes knob (None = exact)."""
+    if probes is None:
+        return _serve
+
+    def serve(model, *parts):
+        """Probed step + host-side exact patch for empty-probe rows."""
+        labels, dists, empty = _serve_probed(model, *parts, probes=probes)
+        return patch_probed_fallback(
+            labels, dists, empty,
+            lambda idx: _serve(model, *(p[idx] for p in parts)))
+
+    return serve
 
 
 def _fit(args, cfg):
@@ -95,6 +117,11 @@ def main() -> None:
     ap.add_argument("--mesh", action="store_true",
                     help="serve row-sharded over all local devices "
                          "(model replicated; labels bit-identical)")
+    ap.add_argument("--probes", type=int, default=None,
+                    help="probe the model's center index with this "
+                         "multi-probe radius (sub-linear in k; empty "
+                         "probes fall back to the exact scan). Default: "
+                         "exact full scan")
     ap.add_argument("--smoke", action="store_true")
     args = ap.parse_args()
     if args.metric is not None:
@@ -139,7 +166,8 @@ def main() -> None:
     # --mesh: each batch is row-sharded over the mesh, the model is
     # replicated, and the shard_map-wrapped encode+predict produces the
     # same labels as the single-device path (rows are independent)
-    serve = make_predict_sharded(mesh) if mesh is not None else _serve
+    serve = (make_predict_sharded(mesh, probes=args.probes)
+             if mesh is not None else _make_serve(args.probes))
     warm = _traffic(args, -1)
     jax.block_until_ready(serve(model, *warm))             # compile
     total, t_serve = 0, 0.0
@@ -163,6 +191,8 @@ def main() -> None:
     pps = total / max(t_serve, 1e-9)
     hot = int(occupancy.argmax())
     tag = f" x{len(jax.devices())} devices" if mesh is not None else ""
+    if args.probes is not None:
+        tag += f" probes={args.probes}"
     print(f"[serve{tag}] {args.steps} batches x {args.batch}: "
           f"{pps:,.0f} points/s (coding + assignment), "
           f"hottest cluster {hot} got {int(occupancy[hot])} points")

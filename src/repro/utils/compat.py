@@ -37,8 +37,9 @@ def make_mesh(axis: str = "data", devices=None) -> "jax.sharding.Mesh":
     Returns
     -------
     jax.sharding.Mesh
-        The mesh accepted by ``core.distributed.make_fit_sharded``,
-        ``make_predict_sharded``, and the ``mesh=`` streaming drivers.
+        The mesh accepted by ``GEEK.fit(..., mesh=)``,
+        ``core.distributed.make_predict_sharded``, and the ``mesh=``
+        streaming path.
     """
     from jax.sharding import Mesh
     return Mesh(np.array(devices if devices is not None

@@ -1,18 +1,22 @@
 """Facade + protocol tests (DESIGN.md §11).
 
-Covers the ISSUE-5 acceptance criteria:
-- shim-vs-facade bit-identity + exactly one DeprecationWarning per call
-- the facade reproduces the execution-mode bit-identity matrix
+Covers:
+- the facade's execution-mode bit-identity matrix (in-core ≡ streamed
+  ≡ sharded ≡ predict-on-fit-data)
 - KMeansPPSeeder parity with baselines.seed_then_assign on a fixed key
 - checkpoint round-trip of the bucketer/seeder manifest fields
 - a non-SILK Seeder end-to-end: fit -> checkpoint -> sharded predict
+- the discovery= knob: explicit "sharded" raises with a named reason
+  when distributed discovery can't run; the default (None) silently
+  falls back to "gathered" (PR 7 satellite)
 
-Multi-device sharding is covered by tests/test_distributed.py (whose
-shims now route through the facade); here sharded paths run on a
-1-device mesh, which exercises the same shard_map code.
+The legacy fit_*/fit_*_streaming/make_fit_sharded shims (and their
+identity tests) were removed in PR 7 per the DESIGN.md §11 clock.
+
+Multi-device sharding is covered by tests/test_distributed.py; here
+sharded paths run on a 1-device mesh, which exercises the same
+shard_map code.
 """
-import warnings
-
 import jax
 import numpy as np
 import pytest
@@ -21,9 +25,6 @@ from repro import (GEEK, DenseData, GeekConfig, HeteroData, KMeansPPSeeder,
                    ScalableKMeansPPSeeder, SparseData, restore_model,
                    save_model)
 from repro.core import baselines
-from repro.core.geek import fit_dense, fit_hetero, fit_sparse
-from repro.core.streaming import (fit_dense_streaming, fit_hetero_streaming,
-                                  fit_sparse_streaming)
 from repro.data import synthetic
 from repro.utils.compat import make_mesh
 
@@ -42,81 +43,10 @@ def _datasets():
     h = synthetic.geonames_like(KEY, n=1200, k=8)
     s = synthetic.url_like(KEY, n=800, k=8)
     return {
-        "dense": (DenseData(d.x), fit_dense, (d.x,)),
-        "hetero": (HeteroData(h.x_num, h.x_cat), fit_hetero,
-                   (h.x_num, h.x_cat)),
-        "sparse": (SparseData(s.sets, s.mask), fit_sparse, (s.sets, s.mask)),
+        "dense": (DenseData(d.x), (d.x,)),
+        "hetero": (HeteroData(h.x_num, h.x_cat), (h.x_num, h.x_cat)),
+        "sparse": (SparseData(s.sets, s.mask), (s.sets, s.mask)),
     }
-
-
-# ---------------------------------------------------------------------------
-# Shim-vs-facade bit-identity + deprecation warnings
-# ---------------------------------------------------------------------------
-
-@pytest.mark.parametrize("kind", ["dense", "hetero", "sparse"])
-def test_shim_matches_facade_and_warns_once(kind):
-    spec, shim, parts = _datasets()[kind]
-    est = GEEK(CFG)
-    model = est.fit(spec, FIT_KEY)
-    res = est.result_
-
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        res2, model2 = shim(*parts, FIT_KEY, CFG)
-    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
-    assert len(dep) == 1, f"expected exactly 1 DeprecationWarning, got {dep}"
-
-    np.testing.assert_array_equal(np.asarray(res.labels),
-                                  np.asarray(res2.labels))
-    np.testing.assert_array_equal(np.asarray(res.dists),
-                                  np.asarray(res2.dists))
-    np.testing.assert_array_equal(np.asarray(model.centers),
-                                  np.asarray(model2.centers))
-    assert model.bucketer_id == model2.bucketer_id == "lsh"
-    assert model.seeder_id == model2.seeder_id == "silk"
-
-
-def test_streaming_shims_match_facade_and_warn_once():
-    d = _dense()
-    est = GEEK(CFG)
-    est.fit(DenseData(np.asarray(d.x)), FIT_KEY, chunk=400)
-    ref = est.result_
-
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        res, _ = fit_dense_streaming(np.asarray(d.x), FIT_KEY, CFG, chunk=400)
-    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
-    assert len(dep) == 1
-    np.testing.assert_array_equal(res.labels, ref.labels)
-
-    h = synthetic.geonames_like(KEY, n=900, k=8)
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        fit_hetero_streaming((np.asarray(h.x_num), np.asarray(h.x_cat)),
-                             FIT_KEY, CFG, chunk=300)
-    assert sum(issubclass(w.category, DeprecationWarning) for w in rec) == 1
-
-    s = synthetic.url_like(KEY, n=600, k=8)
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        fit_sparse_streaming((np.asarray(s.sets), np.asarray(s.mask)),
-                             FIT_KEY, CFG, chunk=250)
-    assert sum(issubclass(w.category, DeprecationWarning) for w in rec) == 1
-
-
-def test_make_fit_sharded_shim_warns_once():
-    from repro.core.distributed import make_fit_sharded
-    d = _dense()
-    mesh = make_mesh()
-    fit = make_fit_sharded(mesh, CFG, kind="dense")
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        res, model = fit(d.x, key=FIT_KEY)
-    assert sum(issubclass(w.category, DeprecationWarning) for w in rec) == 1
-    est = GEEK(CFG)
-    est.fit(DenseData(d.x), FIT_KEY, mesh=mesh)
-    np.testing.assert_array_equal(np.asarray(res.labels),
-                                  np.asarray(est.result_.labels))
 
 
 # ---------------------------------------------------------------------------
@@ -125,7 +55,7 @@ def test_make_fit_sharded_shim_warns_once():
 
 @pytest.mark.parametrize("kind", ["dense", "hetero", "sparse"])
 def test_facade_mode_matrix_bit_identity(kind):
-    spec, _, parts = _datasets()[kind]
+    spec, parts = _datasets()[kind]
     base = GEEK(CFG)
     base.fit(spec, FIT_KEY)
     ref = np.asarray(base.result_.labels)
@@ -287,23 +217,51 @@ def test_discovery_knob_validation_and_modes_agree():
     ga.fit(DenseData(d.x), FIT_KEY, mesh=mesh, discovery="gathered")
     np.testing.assert_array_equal(np.asarray(sh.result_.labels),
                                   np.asarray(ga.result_.labels))
-    ic, _ = fit_dense(d.x, FIT_KEY, CFG)
+    ic = GEEK(CFG)
+    ic.fit(DenseData(d.x), FIT_KEY)
     np.testing.assert_array_equal(np.asarray(sh.result_.labels),
-                                  np.asarray(ic.labels))
+                                  np.asarray(ic.result_.labels))
 
 
-def test_discovery_resolution_falls_back_to_gathered():
-    """seed_cap subsampling and non-bucket seeders route to 'gathered';
-    the stock full-coverage pipeline routes to 'sharded'."""
+def test_discovery_resolution_default_falls_back_silently():
+    """The default (discovery=None) routes the stock full-coverage
+    pipeline to 'sharded' and silently falls back to 'gathered' when a
+    reservoir subsamples or a non-bucket seeder is plugged in."""
+    from repro.core.api import _resolve_discovery
+    from repro import LSHBucketer, SILKSeeder
+    b, s = LSHBucketer(), SILKSeeder()
+    assert _resolve_discovery(None, None, 1000, b, s) == "sharded"
+    assert _resolve_discovery(None, 1000, 1000, b, s) == "sharded"
+    assert _resolve_discovery(None, 500, 1000, b, s) == "gathered"
+    assert _resolve_discovery(None, None, 1000, b,
+                              KMeansPPSeeder(8)) == "gathered"
+    assert _resolve_discovery("gathered", None, 1000, b, s) == "gathered"
+
+
+def test_discovery_explicit_sharded_raises_with_named_reason():
+    """An explicit discovery="sharded" that cannot be honored is a
+    ValueError naming every blocking reason — never a silent fallback
+    (PR 7 bugfix; the pre-fix behavior replicated the reservoir on
+    every device while claiming to shard)."""
     from repro.core.api import _resolve_discovery
     from repro import LSHBucketer, SILKSeeder
     b, s = LSHBucketer(), SILKSeeder()
     assert _resolve_discovery("sharded", None, 1000, b, s) == "sharded"
     assert _resolve_discovery("sharded", 1000, 1000, b, s) == "sharded"
-    assert _resolve_discovery("sharded", 500, 1000, b, s) == "gathered"
-    assert _resolve_discovery("sharded", None, 1000, b,
-                              KMeansPPSeeder(8)) == "gathered"
-    assert _resolve_discovery("gathered", None, 1000, b, s) == "gathered"
+    with pytest.raises(ValueError, match="seed_cap=500"):
+        _resolve_discovery("sharded", 500, 1000, b, s)
+    with pytest.raises(ValueError, match="seeder"):
+        _resolve_discovery("sharded", None, 1000, b, KMeansPPSeeder(8))
+    # both reasons at once -> both named
+    with pytest.raises(ValueError, match="seed_cap") as ei:
+        _resolve_discovery("sharded", 500, 1000, b, KMeansPPSeeder(8))
+    assert "seeder" in str(ei.value)
+    # and the end-to-end path: an explicit sharded fit with seed_cap
+    # raises instead of silently gathering
+    d = _dense(500)
+    with pytest.raises(ValueError, match="sharded"):
+        GEEK(CFG).fit(DenseData(d.x), FIT_KEY, mesh=make_mesh(),
+                      seed_cap=100, discovery="sharded")
 
 
 def test_gathered_reservoir_cap_raises_clear_error():
@@ -318,8 +276,9 @@ def test_gathered_reservoir_cap_raises_clear_error():
                        discovery="gathered")
     est = GEEK(tiny)   # sharded discovery never gathers the reservoir
     est.fit(DenseData(d.x), FIT_KEY, mesh=mesh, discovery="sharded")
-    ic, _ = fit_dense(d.x, FIT_KEY, CFG)
+    ic = GEEK(CFG)
+    ic.fit(DenseData(d.x), FIT_KEY)
     np.testing.assert_array_equal(np.asarray(est.result_.labels),
-                                  np.asarray(ic.labels))
+                                  np.asarray(ic.result_.labels))
     # a seed_cap subsample also stays under the cap (strided reservoir)
     GEEK(tiny).fit(DenseData(d.x), FIT_KEY, mesh=mesh, seed_cap=4)

@@ -30,6 +30,7 @@ REPRO_ALL = [
 
 #: the locked core surface — keep sorted
 REPRO_CORE_ALL = [
+    "CenterIndex",
     "DenseData",
     "GEEK",
     "GeekConfig",
@@ -49,9 +50,12 @@ REPRO_CORE_ALL = [
     "SparseData",
     "SparseTransform",
     "as_dataset",
+    "build_center_index",
     "build_model",
     "discover",
+    "patch_probed_fallback",
     "predict",
+    "predict_probed",
     "silk_seeding",
 ]
 

@@ -1,0 +1,241 @@
+"""Center index + probed predict (DESIGN.md §12, PR 7 tentpole).
+
+Contract under test:
+- ``probes=None`` is bit-identical to the historical exact scan on all
+  four metric implementations (l2 / equality / packed / onehot), before
+  AND after a checkpoint round-trip (the index is rebuilt, never
+  serialized).
+- Whenever a query's probe windows contain its true argmin center, the
+  probed label equals the exact label (hypothesis property).
+- Empty-probe rows are flagged, never silently mislabeled, and the
+  host-side fallback patches them with the exact assignment — so
+  ``predict(model, x, probes=p)`` always returns a real label for every
+  row.
+- The probed path flows through every serving surface: module-level
+  ``predict``, ``make_predict_sharded``, and ``GEEK.predict`` with
+  ``batch=`` / ``mesh=``.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from repro.checkpoint.manager import restore_model, save_model
+from repro.core.api import GEEK, DenseData, HeteroData
+from repro.core.geek import GeekConfig
+from repro.core.model import (build_center_index, build_model,
+                              patch_probed_fallback, predict, predict_probed,
+                              probe_candidates)
+from repro.data import synthetic
+
+IMPLS = ("l2", "equality", "packed", "onehot")
+
+
+def _model_and_queries(impl, n, seed=0, d=16, k=64, card=16, *,
+                       index_tables=4, index_bucket=4):
+    """A synthetic model with a deliberately narrow probe window
+    (bucket=4 on k=64 centers), so partial windows and empty probes
+    actually occur."""
+    key = jax.random.PRNGKey(seed)
+    valid = jnp.arange(k) < (k - 2)          # two invalid centers in the mix
+    radius = jnp.zeros((k,), jnp.float32)
+    if impl == "l2":
+        model = build_model(jax.random.normal(key, (k, d)), valid,
+                            jnp.int32(k - 2), radius, metric="l2",
+                            assign_block=64, index_tables=index_tables,
+                            index_bucket=index_bucket)
+        x = jax.random.normal(jax.random.fold_in(key, 1), (n, d))
+    else:
+        cents = jax.random.randint(key, (k, d), 0, card, jnp.int32)
+        model = build_model(cents, valid, jnp.int32(k - 2), radius,
+                            metric="hamming", impl=impl, code_bits=4,
+                            assign_block=64, index_tables=index_tables,
+                            index_bucket=index_bucket)
+        x = jax.random.randint(jax.random.fold_in(key, 1), (n, d), 0, card,
+                               jnp.int32)
+    return model, x
+
+
+# ---------------------------------------------------------------------------
+# probes=None: bit-identical to the exact scan, incl. checkpoint restore
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_probes_none_bit_identical_incl_checkpoint(impl, tmp_path):
+    """probes=None is the exact path on every metric implementation,
+    and a restored model (index REBUILT from the centers) reproduces
+    both the exact and the probed outputs bit-for-bit."""
+    model, x = _model_and_queries(impl, 300)
+    lab0, dst0 = predict(model, x)
+    lab1, dst1 = predict(model, x, probes=None)
+    np.testing.assert_array_equal(np.asarray(lab0), np.asarray(lab1))
+    np.testing.assert_array_equal(np.asarray(dst0), np.asarray(dst1))
+
+    plab0, pdst0 = predict(model, x, probes=2)
+    save_model(str(tmp_path), model)
+    restored = restore_model(str(tmp_path))
+    # the rebuilt index is the same deterministic function of the centers
+    assert restored.index_tables == model.index_tables
+    assert restored.index_bucket == model.index_bucket
+    np.testing.assert_array_equal(
+        np.asarray(restored.center_index.sorted_keys),
+        np.asarray(model.center_index.sorted_keys))
+    np.testing.assert_array_equal(
+        np.asarray(restored.center_index.sorted_ids),
+        np.asarray(model.center_index.sorted_ids))
+    rlab, rdst = predict(restored, x, probes=None)
+    np.testing.assert_array_equal(np.asarray(rlab), np.asarray(lab0))
+    np.testing.assert_array_equal(np.asarray(rdst), np.asarray(dst0))
+    plab1, pdst1 = predict(restored, x, probes=2)
+    np.testing.assert_array_equal(np.asarray(plab0), np.asarray(plab1))
+    np.testing.assert_array_equal(np.asarray(pdst0), np.asarray(pdst1))
+
+
+# ---------------------------------------------------------------------------
+# Property: probed == exact whenever the probe set contains the argmin
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from(IMPLS),
+       st.integers(0, 2))
+def test_probed_label_matches_exact_when_argmin_in_probe_set(seed, impl,
+                                                             probes):
+    """For every row whose probe windows contain its true argmin center,
+    the probed label equals the exact label (same lowest-row
+    tie-breaking); rows with no valid candidates are flagged empty."""
+    model, x = _model_and_queries(impl, 64, seed=seed % 7)
+    exact_lab, exact_dst = predict(model, x)
+    lab, dst, empty = predict_probed(model, x, probes)
+    cand, mask = probe_candidates(model.center_index, x, probes)
+    mask = np.asarray(mask & jnp.take(model.center_valid, cand))
+    hit = ((np.asarray(cand) == np.asarray(exact_lab)[:, None])
+           & mask).any(1)
+    np.testing.assert_array_equal(np.asarray(lab)[hit],
+                                  np.asarray(exact_lab)[hit])
+    if impl == "l2":   # einsum vs blocked-matmul rounding: labels exact,
+        np.testing.assert_allclose(np.asarray(dst)[hit],   # dists close
+                                   np.asarray(exact_dst)[hit],
+                                   rtol=1e-3, atol=1e-3)
+    else:
+        np.testing.assert_array_equal(np.asarray(dst)[hit],
+                                      np.asarray(exact_dst)[hit])
+    # a row with its argmin probed is by construction not empty
+    assert not (np.asarray(empty) & hit).any()
+    # empty rows carry the sentinel the fallback keys on
+    np.testing.assert_array_equal(np.asarray(dst)[np.asarray(empty)],
+                                  np.inf)
+
+
+# ---------------------------------------------------------------------------
+# Fallback: empty probes are patched with the exact assignment
+# ---------------------------------------------------------------------------
+
+def test_empty_probe_rows_fall_back_to_exact():
+    """Hamming probes=0 on queries matching no center signature: every
+    probe window is empty, and predict() patches every row with the
+    exact scan — labels identical to the full scan."""
+    model, _ = _model_and_queries("equality", 8)
+    xq = jnp.full((37, 16), 99, jnp.int32)   # matches no center code
+    _, _, empty = predict_probed(model, xq, 0)
+    assert bool(np.asarray(empty).all())
+    lab, dst = predict(model, xq, probes=0)
+    lab0, dst0 = predict(model, xq)
+    np.testing.assert_array_equal(np.asarray(lab), np.asarray(lab0))
+    np.testing.assert_array_equal(np.asarray(dst), np.asarray(dst0))
+
+
+def test_predict_probed_end_to_end_matches_exact_everywhere():
+    """With the fallback in the loop, mixed probed/empty batches always
+    match the exact labels when the window covers all live centers
+    (width >= k): the probed path degrades to exact, never to garbage."""
+    model, x = _model_and_queries("l2", 500, index_tables=8,
+                                  index_bucket=64)  # width 64 >= k=64
+    lab, _ = predict(model, x, probes=0)
+    lab0, _ = predict(model, x)
+    np.testing.assert_array_equal(np.asarray(lab), np.asarray(lab0))
+
+
+def test_probed_validation_errors():
+    model, x = _model_and_queries("l2", 16)
+    with pytest.raises(ValueError, match="probes"):
+        predict_probed(model, x, -1)
+    noidx, _ = _model_and_queries("l2", 16, index_tables=0)
+    assert noidx.center_index is None
+    with pytest.raises(ValueError, match="center index"):
+        predict(noidx, x, probes=1)
+    # in-trace use of the host-level API is refused, not miscompiled
+    with pytest.raises(ValueError, match="host-level"):
+        jax.jit(lambda m, xq: predict(m, xq, probes=1))(model, x)
+
+
+# ---------------------------------------------------------------------------
+# Serving surfaces: facade (batch=), sharded, fitted-model recall
+# ---------------------------------------------------------------------------
+
+CFG = GeekConfig(m=8, t=16, silk_l=3, delta=3, k_max=32, pair_cap=4096,
+                 t_cat=8, bucket_k=2, bucket_l=8)
+
+
+def test_facade_probed_predict_dense_and_batched():
+    """GEEK.predict(probes=) on a fitted dense model: recall vs the
+    exact scan stays high (the l2 window is rank-centered, so perfect
+    recall is not guaranteed), and batching never changes a probed
+    label — the ragged-tail padding and per-batch fallback compose."""
+    d = synthetic.sift_like(jax.random.PRNGKey(0), n=1200, k=8)
+    est = GEEK(CFG)
+    est.fit(DenseData(d.x), jax.random.PRNGKey(1))
+    lab0, _ = est.predict(DenseData(d.x))
+    lab1, _ = est.predict(DenseData(d.x), probes=1)
+    recall = float((np.asarray(lab0) == np.asarray(lab1)).mean())
+    assert recall >= 0.99, recall
+    lab2, _ = est.predict(DenseData(np.asarray(d.x)), probes=1, batch=500)
+    np.testing.assert_array_equal(np.asarray(lab1), np.asarray(lab2))
+
+
+def test_facade_probed_predict_hetero():
+    h = synthetic.geonames_like(jax.random.PRNGKey(0), n=800, k=8)
+    est = GEEK(CFG)
+    est.fit(HeteroData(h.x_num, h.x_cat), jax.random.PRNGKey(1))
+    lab0, _ = est.predict(HeteroData(h.x_num, h.x_cat))
+    lab1, _ = est.predict(HeteroData(h.x_num, h.x_cat), probes=2)
+    np.testing.assert_array_equal(np.asarray(lab0), np.asarray(lab1))
+
+
+def test_sharded_probed_predict_matches_single_device():
+    """make_predict_sharded(probes=) on a 1-device mesh (same shard_map
+    code path as multi-device) equals the single-device probed path."""
+    from repro.core.distributed import make_predict_sharded
+    from repro.utils.compat import make_mesh
+    d = synthetic.sift_like(jax.random.PRNGKey(0), n=1024, k=8)
+    est = GEEK(CFG)
+    model = est.fit(DenseData(d.x), jax.random.PRNGKey(1))
+    mesh = make_mesh()
+    lab_s, dst_s = make_predict_sharded(mesh, probes=1)(model, d.x)
+    lab_1, dst_1 = predict(model, model.encode(d.x), probes=1)
+    np.testing.assert_array_equal(np.asarray(lab_s), np.asarray(lab_1))
+    np.testing.assert_array_equal(np.asarray(dst_s), np.asarray(dst_1))
+
+
+def test_probed_recall_on_sublinear_window():
+    """A genuinely sub-linear configuration (window < k): recall of the
+    probed labels vs exact on clustered queries stays high, and every
+    row still gets a finite distance (fallback patched)."""
+    k, ddim = 256, 16
+    key = jax.random.PRNGKey(3)
+    centers = jax.random.normal(key, (k, ddim)) * 8.0
+    valid = jnp.ones((k,), bool)
+    model = build_model(centers, valid, jnp.int32(k),
+                        jnp.zeros((k,), jnp.float32), metric="l2",
+                        assign_block=256, index_tables=8, index_bucket=8)
+    pick = jax.random.randint(jax.random.fold_in(key, 1), (2048,), 0, k)
+    noise = 0.05 * jax.random.normal(jax.random.fold_in(key, 2),
+                                     (2048, ddim))
+    x = centers[pick] + noise
+    lab0, _ = predict(model, x)
+    lab, dst = predict(model, x, probes=2)
+    recall = float((np.asarray(lab) == np.asarray(lab0)).mean())
+    assert recall >= 0.95, recall
+    assert np.isfinite(np.asarray(dst)).all()

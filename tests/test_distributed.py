@@ -231,10 +231,10 @@ def test_distributed_geek_pallas_refinement():
 
 
 # ---------------------------------------------------------------------------
-# Unified sharded path (core/distributed.py make_fit_sharded /
-# make_predict_sharded, DESIGN.md §10): bit-identity with the in-core
-# fits on 1/2/4-device CPU meshes, checkpoint round-trip, sharded
-# streaming, and the permutation/mesh-size property test.
+# Unified sharded path (GEEK.fit(mesh=) / make_predict_sharded,
+# DESIGN.md §10): bit-identity with the in-core fits on 1/2/4-device
+# CPU meshes, checkpoint round-trip, sharded streaming, and the
+# permutation/mesh-size property test.
 # ---------------------------------------------------------------------------
 
 def test_fit_sharded_matches_incore_all_types():
@@ -243,30 +243,33 @@ def test_fit_sharded_matches_incore_all_types():
     on 1-, 2-, and 4-device meshes built from 4 forced CPU devices."""
     print(run_with_devices("""
         import jax, numpy as np
-        from repro.core.distributed import make_fit_sharded
-        from repro.core.geek import GeekConfig, fit_dense, fit_hetero, fit_sparse
+        from repro.core.api import GEEK, DenseData, HeteroData, SparseData
+        from repro.core.geek import GeekConfig
         from repro.data.synthetic import sift_like, geonames_like, url_like
         from repro.utils.compat import make_mesh
+
+        def fit(dataset, key, cfg, **kw):
+            est = GEEK(cfg)
+            model = est.fit(dataset, key, **kw)
+            return est.result_, model
 
         cfg = GeekConfig(m=16, t=32, silk_l=4, delta=5, k_max=64,
                          pair_cap=8192)
         key = jax.random.PRNGKey(1)
         dkey = jax.random.PRNGKey(0)
+        d0 = sift_like(dkey, n=2048, k=16)
+        h0 = geonames_like(dkey, n=2048, k=16)
+        s0 = url_like(dkey, n=2048, k=16)
         cases = {
-            "dense": (sift_like(dkey, n=2048, k=16),
-                      lambda d: (d.x,), fit_dense),
-            "hetero": (geonames_like(dkey, n=2048, k=16),
-                       lambda d: (d.x_num, d.x_cat), fit_hetero),
-            "sparse": (url_like(dkey, n=2048, k=16),
-                       lambda d: (d.sets, d.mask), fit_sparse),
+            "dense": DenseData(d0.x),
+            "hetero": HeteroData(h0.x_num, h0.x_cat),
+            "sparse": SparseData(s0.sets, s0.mask),
         }
-        for kind, (data, parts_of, fit_incore) in cases.items():
-            parts = parts_of(data)
-            res0, m0 = fit_incore(*parts, key, cfg)
+        for kind, dataset in cases.items():
+            res0, m0 = fit(dataset, key, cfg)
             for g in (1, 2, 4):
                 mesh = make_mesh(devices=jax.devices()[:g])
-                res1, m1 = make_fit_sharded(mesh, cfg, kind=kind)(
-                    *parts, key=key)
+                res1, m1 = fit(dataset, key, cfg, mesh=mesh)
                 assert (np.asarray(res0.labels)
                         == np.asarray(res1.labels)).all(), (kind, g)
                 assert (np.asarray(m0.centers)
@@ -283,24 +286,28 @@ def test_fit_sharded_ragged_rows_match_incore():
     centers, and radii bit-identical to the in-core fit."""
     print(run_with_devices("""
         import jax, numpy as np
-        from repro.core.distributed import make_fit_sharded
-        from repro.core.geek import GeekConfig, fit_dense
+        from repro.core.api import GEEK, DenseData
+        from repro.core.geek import GeekConfig
         from repro.data.synthetic import sift_like
         from repro.utils.compat import make_mesh
+
+        def fit(dataset, key, cfg, **kw):
+            est = GEEK(cfg)
+            model = est.fit(dataset, key, **kw)
+            return est.result_, model
 
         cfg = GeekConfig(m=16, t=32, silk_l=4, delta=5, k_max=64,
                          pair_cap=8192)
         data = sift_like(jax.random.PRNGKey(0), n=1537, k=12)  # 1537 % 4 != 0
         key = jax.random.PRNGKey(1)
-        res0, m0 = fit_dense(data.x, key, cfg)
-        res1, m1 = make_fit_sharded(make_mesh(), cfg, kind="dense")(
-            data.x, key=key)
+        res0, m0 = fit(DenseData(data.x), key, cfg)
+        res1, m1 = fit(DenseData(data.x), key, cfg, mesh=make_mesh())
         assert res1.labels.shape == (1537,)
         assert (np.asarray(res0.labels) == np.asarray(res1.labels)).all()
         assert (np.asarray(m0.radius) == np.asarray(m1.radius)).all()
         # seed ids must stay inside the real dataset even with seed_cap
-        res2, _ = make_fit_sharded(make_mesh(), cfg, kind="dense",
-                                   seed_cap=500)(data.x, key=key)
+        res2, _ = fit(DenseData(data.x), key, cfg, mesh=make_mesh(),
+                      seed_cap=500)
         ids = np.asarray(res2.seeds.id)[np.asarray(res2.seeds.valid)]
         assert ids.min() >= 0 and ids.max() < 1537, (ids.min(), ids.max())
         print("ok ragged + seed_cap")
@@ -314,7 +321,8 @@ def test_sharded_model_checkpoint_roundtrip_serves():
     print(run_with_devices("""
         import jax, numpy as np, tempfile
         from repro.checkpoint.manager import restore_model, save_model
-        from repro.core.distributed import make_fit_sharded, make_predict_sharded
+        from repro.core.api import GEEK, HeteroData
+        from repro.core.distributed import make_predict_sharded
         from repro.core.geek import GeekConfig
         from repro.core.model import predict
         from repro.data.synthetic import geonames_like
@@ -324,8 +332,10 @@ def test_sharded_model_checkpoint_roundtrip_serves():
         cfg = GeekConfig(m=16, t=32, silk_l=4, delta=5, k_max=64,
                          pair_cap=8192)
         data = geonames_like(jax.random.PRNGKey(0), n=2048, k=16)
-        res, model = make_fit_sharded(mesh, cfg, kind="hetero")(
-            data.x_num, data.x_cat, key=jax.random.PRNGKey(1))
+        est = GEEK(cfg)
+        model = est.fit(HeteroData(data.x_num, data.x_cat),
+                        jax.random.PRNGKey(1), mesh=mesh)
+        res = est.result_
         with tempfile.TemporaryDirectory() as ckpt:
             save_model(ckpt, model)
             restored = restore_model(ckpt, mesh=mesh)
@@ -341,34 +351,38 @@ def test_sharded_model_checkpoint_roundtrip_serves():
 
 
 def test_sharded_streaming_matches_incore():
-    """fit_*_streaming(mesh=...) — the sharded chunked assignment pass
+    """GEEK.fit(chunk=, mesh=) — the sharded chunked assignment pass
     (donated per-device buffers, sentinel-padded ragged tail) stays
     bit-identical to the in-core fit."""
     print(run_with_devices("""
         import jax, numpy as np
-        from repro.core.geek import GeekConfig, fit_dense, fit_sparse
-        from repro.core.streaming import fit_dense_streaming, fit_sparse_streaming
+        from repro.core.api import GEEK, DenseData, SparseData
+        from repro.core.geek import GeekConfig
         from repro.data.synthetic import sift_like, url_like
         from repro.utils.compat import make_mesh
+
+        def fit(dataset, key, cfg, **kw):
+            est = GEEK(cfg)
+            est.fit(dataset, key, **kw)
+            return est.result_
 
         mesh = make_mesh()
         cfg = GeekConfig(m=16, t=32, silk_l=4, delta=5, k_max=64,
                          pair_cap=8192)
         key = jax.random.PRNGKey(1)
         d = sift_like(jax.random.PRNGKey(0), n=1900, k=12)  # ragged tail
-        res0, _ = fit_dense(d.x, key, cfg)
-        res1, _ = fit_dense_streaming(np.asarray(d.x), key, cfg,
-                                      chunk=512, mesh=mesh)
+        res0 = fit(DenseData(d.x), key, cfg)
+        res1 = fit(DenseData(np.asarray(d.x)), key, cfg,
+                   chunk=512, mesh=mesh)
         assert (np.asarray(res0.labels) == res1.labels).all()
         s = url_like(jax.random.PRNGKey(0), n=1900, k=12)
-        res2, _ = fit_sparse(s.sets, s.mask, key, cfg)
-        res3, _ = fit_sparse_streaming(
-            (np.asarray(s.sets), np.asarray(s.mask)), key, cfg,
-            chunk=512, mesh=mesh)
+        res2 = fit(SparseData(s.sets, s.mask), key, cfg)
+        res3 = fit(SparseData(np.asarray(s.sets), np.asarray(s.mask)),
+                   key, cfg, chunk=512, mesh=mesh)
         assert (np.asarray(res2.labels) == res3.labels).all()
         try:
-            fit_dense_streaming(np.asarray(d.x), key, cfg, chunk=511,
-                                mesh=mesh)
+            fit(DenseData(np.asarray(d.x)), key, cfg, chunk=511,
+                mesh=mesh)
             raise AssertionError("chunk % g validation missing")
         except ValueError:
             pass
@@ -407,24 +421,28 @@ def test_sharded_discovery_compressed_wire_bit_identical():
     fit stays bit-identical to the in-core fit."""
     print(run_with_devices("""
         import jax, numpy as np
-        from repro.core.distributed import make_fit_sharded
-        from repro.core.geek import GeekConfig, fit_dense, fit_sparse
+        from repro.core.api import GEEK, DenseData, SparseData
+        from repro.core.geek import GeekConfig
         from repro.data.synthetic import sift_like, url_like
         from repro.utils.compat import make_mesh
+
+        def fit(dataset, key, cfg, **kw):
+            est = GEEK(cfg)
+            model = est.fit(dataset, key, **kw)
+            return est.result_, model
 
         mesh = make_mesh()
         cfg = GeekConfig(m=16, t=32, silk_l=4, delta=5, k_max=64,
                          pair_cap=8192, compress_collectives=True)
         key = jax.random.PRNGKey(1)
         d = sift_like(jax.random.PRNGKey(0), n=2048, k=16)
-        res0, m0 = fit_dense(d.x, key, cfg)
-        res1, m1 = make_fit_sharded(mesh, cfg, kind="dense")(d.x, key=key)
+        res0, m0 = fit(DenseData(d.x), key, cfg)
+        res1, m1 = fit(DenseData(d.x), key, cfg, mesh=mesh)
         assert (np.asarray(res0.labels) == np.asarray(res1.labels)).all()
         assert (np.asarray(m0.centers) == np.asarray(m1.centers)).all()
         s = url_like(jax.random.PRNGKey(0), n=1100, k=8)  # cap_t = n > 2^8
-        res2, m2 = fit_sparse(s.sets, s.mask, key, cfg)
-        res3, m3 = make_fit_sharded(mesh, cfg, kind="sparse")(
-            s.sets, s.mask, key=key)
+        res2, m2 = fit(SparseData(s.sets, s.mask), key, cfg)
+        res3, m3 = fit(SparseData(s.sets, s.mask), key, cfg, mesh=mesh)
         assert (np.asarray(res2.labels) == np.asarray(res3.labels)).all()
         assert (np.asarray(m2.centers) == np.asarray(m3.centers)).all()
         print("ok compressed wire bit-identical")
@@ -446,8 +464,8 @@ def test_property_sharded_permutation_and_mesh_invariance():
         except ImportError:
             print("NO_HYPOTHESIS"); sys.exit(0)
         import jax, numpy as np
-        from repro.core.distributed import make_fit_sharded
-        from repro.core.geek import GeekConfig, fit_dense
+        from repro.core.api import GEEK, DenseData
+        from repro.core.geek import GeekConfig
         from repro.data.synthetic import sift_like
         from repro.utils.compat import make_mesh
 
@@ -456,24 +474,28 @@ def test_property_sharded_permutation_and_mesh_invariance():
         cfg = GeekConfig(m=8, t=16, silk_l=3, delta=4, k_max=32,
                          pair_cap=4096)
         key = jax.random.PRNGKey(1)
+
+        def fit(dataset, **kw):
+            est = GEEK(cfg)
+            model = est.fit(dataset, key, **kw)
+            return est.result_, model
+
         # two fixed row counts so jit/compile caches amortize across
         # examples; the drawn seed varies the permutation
         data = {n: np.asarray(sift_like(jax.random.PRNGKey(0), n=n,
                                         k=8).x) for n in (96, 130)}
-        fits = {g: {n: make_fit_sharded(
-                        make_mesh(devices=jax.devices()[:g]), cfg,
-                        kind="dense") for n in data}
-                for g in (1, 2, 4)}
+        meshes = {g: make_mesh(devices=jax.devices()[:g])
+                  for g in (1, 2, 4)}
 
         @settings(max_examples=8, deadline=None, derandomize=True)
         @given(st.integers(0, 2**31 - 1), st.sampled_from([96, 130]))
         def prop(seed, n):
             rng = np.random.default_rng(seed)
             xp = data[n][rng.permutation(n)]   # re-shard rows arbitrarily
-            res0, m0 = fit_dense(jax.numpy.asarray(xp), key, cfg)
+            res0, m0 = fit(DenseData(jax.numpy.asarray(xp)))
             prev = (np.asarray(res0.labels), np.asarray(m0.centers))
             for g in (1, 2, 4):
-                res_g, m_g = fits[g][n](xp, key=key)
+                res_g, m_g = fit(DenseData(xp), mesh=meshes[g])
                 assert (prev[0] == np.asarray(res_g.labels)).all(), g
                 assert (prev[1] == np.asarray(m_g.centers)).all(), g
                 prev = (np.asarray(res_g.labels), np.asarray(m_g.centers))

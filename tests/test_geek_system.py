@@ -7,8 +7,15 @@ import numpy as np
 import pytest
 
 from repro.core import baselines
-from repro.core.geek import GeekConfig, fit_dense, fit_hetero, fit_sparse
+from repro.core.api import GEEK, DenseData, HeteroData, SparseData
+from repro.core.geek import GeekConfig
 from repro.data import synthetic
+
+
+def _fit(dataset, key, cfg=None):
+    est = GEEK(cfg or CFG)
+    est.fit(dataset, key)
+    return est.result_
 
 
 def purity(labels, true):
@@ -23,7 +30,7 @@ CFG = GeekConfig(m=16, t=32, bucket_k=2, bucket_l=12, silk_l=4, delta=5,
 
 def test_geek_dense_recovers_blobs(rng):
     data = synthetic.sift_like(rng, n=2000, k=20)
-    res, _ = fit_dense(data.x, jax.random.PRNGKey(1), CFG)
+    res = _fit(DenseData(data.x), jax.random.PRNGKey(1))
     assert int(res.k_star) >= 20
     assert purity(res.labels, data.true_labels) > 0.95
     assert int(res.overflow) == 0
@@ -31,14 +38,14 @@ def test_geek_dense_recovers_blobs(rng):
 
 def test_geek_hetero_recovers_blobs(rng):
     data = synthetic.geonames_like(rng, n=2000, k=16)
-    res, _ = fit_hetero(data.x_num, data.x_cat, jax.random.PRNGKey(1), CFG)
+    res = _fit(HeteroData(data.x_num, data.x_cat), jax.random.PRNGKey(1))
     assert int(res.k_star) >= 16
     assert purity(res.labels, data.true_labels) > 0.9
 
 
 def test_geek_sparse_recovers_blobs(rng):
     data = synthetic.url_like(rng, n=1500, k=16)
-    res, _ = fit_sparse(data.sets, data.mask, jax.random.PRNGKey(1), CFG)
+    res = _fit(SparseData(data.sets, data.mask), jax.random.PRNGKey(1))
     assert int(res.k_star) >= 12
     assert purity(res.labels, data.true_labels) > 0.8
 
@@ -50,7 +57,7 @@ def test_geek_k_star_discovered_not_prespecified(rng):
     clusters (purity) — finer-than-true granularity is a feature."""
     for k in (8, 32):
         d = synthetic.dense_blobs(rng, n=1500, d=32, k=k)
-        r, _ = fit_dense(d.x, jax.random.PRNGKey(1), CFG)
+        r = _fit(DenseData(d.x), jax.random.PRNGKey(1))
         sizes = np.bincount(np.array(r.labels), minlength=CFG.k_max)
         assert int((sizes > 0).sum()) >= k          # structure covered
         assert purity(r.labels, d.true_labels) > 0.9   # (almost) never mixed
@@ -59,7 +66,7 @@ def test_geek_k_star_discovered_not_prespecified(rng):
 def test_geek_radius_beats_random_seeding(rng):
     """Paper Figure 6: SILK seeds + one pass vs random seeds + one pass."""
     data = synthetic.sift_like(rng, n=2000, k=24)
-    res, _ = fit_dense(data.x, jax.random.PRNGKey(1), CFG)
+    res = _fit(DenseData(data.x), jax.random.PRNGKey(1))
     k = int(res.k_star)
     rnd = baselines.seed_then_assign(data.x, k, jax.random.PRNGKey(2),
                                      method="random")
@@ -73,7 +80,7 @@ def test_geek_radius_beats_random_seeding(rng):
 def test_geek_one_pass_labels_consistent_with_centers(rng):
     """Every point's label is its nearest valid center (one-pass property)."""
     data = synthetic.sift_like(rng, n=800, k=8)
-    res, _ = fit_dense(data.x, jax.random.PRNGKey(1), CFG)
+    res = _fit(DenseData(data.x), jax.random.PRNGKey(1))
     d2 = ((np.array(data.x)[:, None] - np.array(res.centers)[None]) ** 2).sum(-1)
     d2[:, ~np.array(res.center_valid)] = np.inf
     np.testing.assert_array_equal(np.array(res.labels), d2.argmin(1))

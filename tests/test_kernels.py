@@ -145,36 +145,43 @@ def test_flash_attention_bf16(rng):
 
 def test_geek_code_bits_rounding_and_sparse_width(rng):
     """code_bits=5 rounds up to a packable width instead of crashing, and
-    fit_sparse ignores a too-narrow code_bits (DOPH codes are 16-bit)."""
+    the sparse fit ignores a too-narrow code_bits (DOPH codes are 16-bit)."""
     import dataclasses
-    from repro.core.geek import GeekConfig, fit_sparse
+    from repro.core.api import GEEK, HeteroData, SparseData
+    from repro.core.geek import GeekConfig
     key = jax.random.PRNGKey(7)
     templates = jax.random.randint(key, (4, 20), 0, 3000)
     pick = jax.random.randint(jax.random.fold_in(key, 1), (128,), 0, 4)
     sets = templates[pick]
     mask = jnp.ones_like(sets, bool)
     base = GeekConfig(silk_l=3, delta=3, k_max=16, pair_cap=2048)
-    r16, _ = fit_sparse(sets, mask, jax.random.PRNGKey(1), base)
+    est16 = GEEK(base)
+    est16.fit(SparseData(sets, mask), jax.random.PRNGKey(1))
+    r16 = est16.result_
     # a narrow hetero code_bits must not truncate 16-bit DOPH codes
-    r4, _ = fit_sparse(sets, mask, jax.random.PRNGKey(1),
-                      dataclasses.replace(base, code_bits=4))
+    est4 = GEEK(dataclasses.replace(base, code_bits=4))
+    est4.fit(SparseData(sets, mask), jax.random.PRNGKey(1))
+    r4 = est4.result_
     np.testing.assert_array_equal(np.array(r16.labels), np.array(r4.labels))
     # unsupported width on the packed path rounds up (5 -> 8), no crash
-    from repro.core.geek import fit_hetero
     xn = jax.random.normal(key, (96, 8))
-    fit_hetero(xn, None, jax.random.PRNGKey(2),
-               dataclasses.replace(base, hamming_impl="packed", code_bits=5))
+    GEEK(dataclasses.replace(base, hamming_impl="packed", code_bits=5)).fit(
+        HeteroData(xn, None), jax.random.PRNGKey(2))
 
 
 def test_geek_pipeline_with_pallas_assignment(rng):
     """use_pallas=True path produces the same clusters as the jnp path."""
-    from repro.core.geek import GeekConfig, fit_dense
+    from repro.core.api import GEEK, DenseData
+    from repro.core.geek import GeekConfig
     from repro.data.synthetic import dense_blobs
     import dataclasses
     data = dense_blobs(rng, n=512, d=24, k=8)
     base = GeekConfig(m=8, t=16, silk_l=3, delta=3, k_max=32, pair_cap=2048)
-    r1, _ = fit_dense(data.x, jax.random.PRNGKey(1), base)
-    r2, _ = fit_dense(data.x, jax.random.PRNGKey(1),
-                      dataclasses.replace(base, use_pallas=True))
+    est1 = GEEK(base)
+    est1.fit(DenseData(data.x), jax.random.PRNGKey(1))
+    r1 = est1.result_
+    est2 = GEEK(dataclasses.replace(base, use_pallas=True))
+    est2.fit(DenseData(data.x), jax.random.PRNGKey(1))
+    r2 = est2.result_
     assert int(r1.k_star) == int(r2.k_star)
     assert float((r1.labels == r2.labels).mean()) > 0.999

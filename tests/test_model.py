@@ -17,10 +17,17 @@ from hypothesis import given
 from hypothesis import strategies as st
 
 from repro.checkpoint.manager import restore_model, save_model
-from repro.core.geek import (GeekConfig, fit_dense, fit_hetero, fit_sparse,
-                             hetero_codes, sparse_codes)
+from repro.core.api import GEEK, DenseData, HeteroData, SparseData
+from repro.core.geek import GeekConfig, hetero_codes, sparse_codes
 from repro.core.model import GeekModel, build_model, predict
 from repro.data import synthetic
+
+
+def _fit(dataset, key, cfg):
+    """(result, model) via the facade — the shims are gone (PR 7)."""
+    est = GEEK(cfg)
+    model = est.fit(dataset, key)
+    return est.result_, model
 
 CFG = GeekConfig(m=8, t=16, silk_l=3, delta=3, k_max=32, pair_cap=4096,
                  t_cat=8)
@@ -36,15 +43,15 @@ def _fitted(entry: str, hamming_impl: str = "auto"):
     cfg = dataclasses.replace(CFG, hamming_impl=hamming_impl)
     if entry == "dense":
         d = synthetic.dense_blobs(key, n=900, d=16, k=8)
-        res, model = fit_dense(d.x, fkey, cfg)
+        res, model = _fit(DenseData(d.x), fkey, cfg)
         x = d.x
     elif entry == "hetero":
         h = synthetic.geonames_like(key, n=700, k=8)
-        res, model = fit_hetero(h.x_num, h.x_cat, fkey, cfg)
+        res, model = _fit(HeteroData(h.x_num, h.x_cat), fkey, cfg)
         x = hetero_codes(h.x_num, h.x_cat, cfg.t_cat)
     else:
         s = synthetic.url_like(key, n=600, k=8)
-        res, model = fit_sparse(s.sets, s.mask, fkey, cfg)
+        res, model = _fit(SparseData(s.sets, s.mask), fkey, cfg)
         x = sparse_codes(s.sets, s.mask, fkey, cfg)
     return res, model, x
 
@@ -67,7 +74,7 @@ def test_predict_reproduces_fit_labels_all_hamming_impls(impl):
                               code_bits=4 if impl != "equality" else 0)
     h = synthetic.geonames_like(jax.random.PRNGKey(0), n=500, k=8)
     # numeric-only so every impl (onehot needs bits<=8) has a known width
-    res, model = fit_hetero(h.x_num, None, jax.random.PRNGKey(1), cfg)
+    res, model = _fit(HeteroData(h.x_num, None), jax.random.PRNGKey(1), cfg)
     assert model.impl == impl
     x = hetero_codes(h.x_num, None, cfg.t_cat)
     labels, _ = predict(model, x)

@@ -18,10 +18,9 @@ import pytest
 from hypothesis import given
 from hypothesis import strategies as st
 
-from repro.core.geek import GeekConfig, fit_dense, fit_hetero, fit_sparse
+from repro.core.api import GEEK, DenseData, HeteroData, SparseData
+from repro.core.geek import GeekConfig
 from repro.core.model import build_model, predict
-from repro.core.streaming import (fit_dense_streaming, fit_hetero_streaming,
-                                  fit_sparse_streaming)
 from repro.data.synthetic import dense_blobs, geonames_like, url_like
 
 CFG = GeekConfig(m=8, t=16, silk_l=3, delta=3, k_max=32, pair_cap=4096,
@@ -29,12 +28,20 @@ CFG = GeekConfig(m=8, t=16, silk_l=3, delta=3, k_max=32, pair_cap=4096,
                  doph_m=32)
 
 
+def _fit(dataset, key, cfg=None, **kw):
+    """(result, model) via the facade — in-core without kw, streamed
+    with chunk=/seed_cap=/boundaries= (the fit_*_streaming shims are
+    gone, PR 7)."""
+    est = GEEK(cfg or CFG)
+    model = est.fit(dataset, key, **kw)
+    return est.result_, model
+
+
 def _assert_stream_matches(n, chunk, d=12):
     data = dense_blobs(jax.random.PRNGKey(n * 31 + chunk), n=n, d=d, k=4)
     x = np.asarray(data.x)
-    res, model = fit_dense(data.x, jax.random.PRNGKey(1), CFG)
-    sres, smodel = fit_dense_streaming(x, jax.random.PRNGKey(1), CFG,
-                                       chunk=chunk)
+    res, model = _fit(DenseData(data.x), jax.random.PRNGKey(1))
+    sres, smodel = _fit(DenseData(x), jax.random.PRNGKey(1), chunk=chunk)
     np.testing.assert_array_equal(sres.labels, np.array(res.labels))
     np.testing.assert_array_equal(sres.dists, np.array(res.dists))
     np.testing.assert_array_equal(sres.radius, np.array(res.radius))
@@ -61,14 +68,14 @@ def test_streamed_fit_accepts_iterator_and_reschunks():
     ragged) is re-chunked on the fly and still bit-identical."""
     data = dense_blobs(jax.random.PRNGKey(3), n=1000, d=16, k=6)
     x = np.asarray(data.x)
-    res, _ = fit_dense(data.x, jax.random.PRNGKey(1), CFG)
+    res, _ = _fit(DenseData(data.x), jax.random.PRNGKey(1))
 
     def gen():
         for i in range(0, 1000, 370):
             yield x[i:i + 370]
 
-    sres, _ = fit_dense_streaming(gen(), jax.random.PRNGKey(1), CFG,
-                                  chunk=256)
+    sres, _ = _fit(DenseData(chunks=gen()), jax.random.PRNGKey(1),
+                   chunk=256)
     np.testing.assert_array_equal(sres.labels, np.array(res.labels))
 
 
@@ -78,15 +85,15 @@ def test_streamed_fit_seed_cap_reservoir():
     seeds) even though the seeds differ from the full-data fit."""
     data = dense_blobs(jax.random.PRNGKey(5), n=1200, d=16, k=6)
     x = np.asarray(data.x)
-    sres, model = fit_dense_streaming(x, jax.random.PRNGKey(1), CFG,
-                                      chunk=256, seed_cap=300)
+    sres, model = _fit(DenseData(x), jax.random.PRNGKey(1),
+                       chunk=256, seed_cap=300)
     assert sres.labels.shape == (1200,)
     assert int(sres.k_star) >= 1
     # one-pass property: every label is the nearest valid center
     d2 = ((x[:, None] - np.array(model.centers)[None]) ** 2).sum(-1)
     d2[:, ~np.array(model.center_valid)] = np.inf
     np.testing.assert_array_equal(sres.labels, d2.argmin(1))
-    # Seeds.id keeps the fit_dense contract (dataset rows, not reservoir
+    # Seeds.id keeps the in-core contract (dataset rows, not reservoir
     # positions): with n=1200/seed_cap=300 the stride is 4, and centroids
     # recomputed from the remapped dataset rows match the model's
     ids = np.array(sres.seeds.id)
@@ -101,18 +108,18 @@ def test_streamed_fit_seed_cap_reservoir():
 
 def test_streamed_fit_rejects_empty_and_bad_chunks():
     with pytest.raises(ValueError):
-        fit_dense_streaming(iter([]), jax.random.PRNGKey(0), CFG, chunk=64)
+        _fit(DenseData(chunks=iter([])), jax.random.PRNGKey(0), chunk=64)
     with pytest.raises(ValueError):
-        fit_dense_streaming(np.zeros((10, 4), np.float32),
-                            jax.random.PRNGKey(0), CFG, chunk=0)
+        _fit(DenseData(np.zeros((10, 4), np.float32)),
+             jax.random.PRNGKey(0), chunk=0)
     with pytest.raises(ValueError):
-        fit_dense_streaming(iter([np.zeros((4,), np.float32)]),
-                            jax.random.PRNGKey(0), CFG, chunk=4)
+        _fit(DenseData(chunks=iter([np.zeros((4,), np.float32)])),
+             jax.random.PRNGKey(0), chunk=4)
 
 
 # ---------------------------------------------------------------------------
 # Streamed hetero / sparse ≡ in-core (ISSUE 3): the chunked MinHash/DOPH
-# transformation + reservoir discovery reproduce fit_hetero / fit_sparse
+# transformation + reservoir discovery reproduce the in-core fits
 # bit-for-bit when the reservoir covers all points.
 # ---------------------------------------------------------------------------
 
@@ -121,11 +128,10 @@ def _assert_hetero_stream_matches(n, chunk, *, boundaries="reservoir",
     h = geonames_like(jax.random.PRNGKey(n * 13 + chunk), n=n, k=4)
     x_num = np.asarray(h.x_num)
     x_cat = None if drop_cat else np.asarray(h.x_cat)
-    res, model = fit_hetero(h.x_num, None if drop_cat else h.x_cat,
-                            jax.random.PRNGKey(1), CFG)
-    sres, smodel = fit_hetero_streaming((x_num, x_cat), jax.random.PRNGKey(1),
-                                        CFG, chunk=chunk,
-                                        boundaries=boundaries)
+    res, model = _fit(HeteroData(h.x_num, None if drop_cat else h.x_cat),
+                      jax.random.PRNGKey(1))
+    sres, smodel = _fit(HeteroData(x_num, x_cat), jax.random.PRNGKey(1),
+                        chunk=chunk, boundaries=boundaries)
     np.testing.assert_array_equal(sres.labels, np.array(res.labels))
     np.testing.assert_array_equal(sres.dists, np.array(res.dists))
     np.testing.assert_array_equal(sres.radius, np.array(res.radius))
@@ -139,10 +145,9 @@ def _assert_hetero_stream_matches(n, chunk, *, boundaries="reservoir",
 
 def _assert_sparse_stream_matches(n, chunk):
     s = url_like(jax.random.PRNGKey(n * 17 + chunk), n=n, k=4)
-    res, model = fit_sparse(s.sets, s.mask, jax.random.PRNGKey(1), CFG)
-    sres, smodel = fit_sparse_streaming(
-        (np.asarray(s.sets), np.asarray(s.mask)), jax.random.PRNGKey(1),
-        CFG, chunk=chunk)
+    res, model = _fit(SparseData(s.sets, s.mask), jax.random.PRNGKey(1))
+    sres, smodel = _fit(SparseData(np.asarray(s.sets), np.asarray(s.mask)),
+                        jax.random.PRNGKey(1), chunk=chunk)
     np.testing.assert_array_equal(sres.labels, np.array(res.labels))
     np.testing.assert_array_equal(sres.dists, np.array(res.dists))
     np.testing.assert_array_equal(sres.radius, np.array(res.radius))
@@ -182,9 +187,9 @@ def test_streamed_hetero_exact_boundaries_and_variants():
     _assert_hetero_stream_matches(300, 77, boundaries="exact")
     _assert_hetero_stream_matches(256, 60, drop_cat=True)
     h = geonames_like(jax.random.PRNGKey(7), n=256, k=4)
-    res, _ = fit_hetero(None, h.x_cat, jax.random.PRNGKey(1), CFG)
-    sres, _ = fit_hetero_streaming((None, np.asarray(h.x_cat)),
-                                   jax.random.PRNGKey(1), CFG, chunk=100)
+    res, _ = _fit(HeteroData(None, h.x_cat), jax.random.PRNGKey(1))
+    sres, _ = _fit(HeteroData(None, np.asarray(h.x_cat)),
+                   jax.random.PRNGKey(1), chunk=100)
     np.testing.assert_array_equal(sres.labels, np.array(res.labels))
 
 
@@ -193,17 +198,17 @@ def test_streamed_hetero_exact_boundaries_survive_seed_cap():
     discretizer on the FULL numeric columns: the persisted boundaries are
     identical to the in-core fit's even though the seeds are not."""
     h = geonames_like(jax.random.PRNGKey(5), n=600, k=4)
-    _, model = fit_hetero(h.x_num, h.x_cat, jax.random.PRNGKey(1), CFG)
-    _, smodel = fit_hetero_streaming(
-        (np.asarray(h.x_num), np.asarray(h.x_cat)), jax.random.PRNGKey(1),
-        CFG, chunk=128, seed_cap=150, boundaries="exact")
+    _, model = _fit(HeteroData(h.x_num, h.x_cat), jax.random.PRNGKey(1))
+    _, smodel = _fit(HeteroData(np.asarray(h.x_num), np.asarray(h.x_cat)),
+                     jax.random.PRNGKey(1), chunk=128, seed_cap=150,
+                     boundaries="exact")
     np.testing.assert_array_equal(
         np.array(smodel.transform.discretizer.boundaries),
         np.array(model.transform.discretizer.boundaries))
     # reservoir mode under the same seed_cap estimates from the sample
-    _, rmodel = fit_hetero_streaming(
-        (np.asarray(h.x_num), np.asarray(h.x_cat)), jax.random.PRNGKey(1),
-        CFG, chunk=128, seed_cap=150, boundaries="reservoir")
+    _, rmodel = _fit(HeteroData(np.asarray(h.x_num), np.asarray(h.x_cat)),
+                     jax.random.PRNGKey(1), chunk=128, seed_cap=150,
+                     boundaries="reservoir")
     assert rmodel.transform.discretizer.boundaries.shape == \
         model.transform.discretizer.boundaries.shape
 
@@ -211,14 +216,14 @@ def test_streamed_hetero_exact_boundaries_survive_seed_cap():
 def test_streamed_hetero_iterator_input():
     h = geonames_like(jax.random.PRNGKey(3), n=500, k=4)
     xn, xc = np.asarray(h.x_num), np.asarray(h.x_cat)
-    res, _ = fit_hetero(h.x_num, h.x_cat, jax.random.PRNGKey(1), CFG)
+    res, _ = _fit(HeteroData(h.x_num, h.x_cat), jax.random.PRNGKey(1))
 
     def gen():
         for i in range(0, 500, 170):
             yield (xn[i:i + 170], xc[i:i + 170])
 
-    sres, _ = fit_hetero_streaming(gen(), jax.random.PRNGKey(1), CFG,
-                                   chunk=96)
+    sres, _ = _fit(HeteroData(chunks=gen()), jax.random.PRNGKey(1),
+                   chunk=96)
     np.testing.assert_array_equal(sres.labels, np.array(res.labels))
 
 
@@ -227,9 +232,8 @@ def test_streamed_sparse_seed_cap_reservoir():
     keeps dataset row ids and every label is nearest-center in code
     space (one-pass property)."""
     s = url_like(jax.random.PRNGKey(5), n=400, k=4)
-    sres, model = fit_sparse_streaming(
-        (np.asarray(s.sets), np.asarray(s.mask)), jax.random.PRNGKey(1),
-        CFG, chunk=128, seed_cap=100)
+    sres, model = _fit(SparseData(np.asarray(s.sets), np.asarray(s.mask)),
+                       jax.random.PRNGKey(1), chunk=128, seed_cap=100)
     assert sres.labels.shape == (400,)
     ids, val = np.array(sres.seeds.id), np.array(sres.seeds.valid)
     assert (ids[val] % 4 == 0).all()          # stride is 400/100 = 4
@@ -242,18 +246,17 @@ def test_streamed_sparse_seed_cap_reservoir():
 
 def test_streamed_rejects_bad_tuple_inputs():
     with pytest.raises(ValueError):
-        fit_sparse_streaming((np.zeros((8, 4), np.int32), None),
-                             jax.random.PRNGKey(0), CFG, chunk=4)
+        _fit(SparseData(np.zeros((8, 4), np.int32), None),
+             jax.random.PRNGKey(0), chunk=4)
     with pytest.raises(ValueError):
-        fit_hetero_streaming(iter([]), jax.random.PRNGKey(0), CFG, chunk=4)
+        _fit(HeteroData(chunks=iter([])), jax.random.PRNGKey(0), chunk=4)
     with pytest.raises(ValueError):  # parts disagree on rows
-        fit_hetero_streaming(
-            (np.zeros((8, 2), np.float32), np.zeros((7, 2), np.int32)),
-            jax.random.PRNGKey(0), CFG, chunk=4)
+        _fit(HeteroData(np.zeros((8, 2), np.float32),
+                        np.zeros((7, 2), np.int32)),
+             jax.random.PRNGKey(0), chunk=4)
     with pytest.raises(ValueError):  # unknown boundaries mode
-        fit_hetero_streaming((np.zeros((8, 2), np.float32), None),
-                             jax.random.PRNGKey(0), CFG, chunk=4,
-                             boundaries="nope")
+        _fit(HeteroData(np.zeros((8, 2), np.float32), None),
+             jax.random.PRNGKey(0), chunk=4, boundaries="nope")
 
 
 # ---------------------------------------------------------------------------
@@ -302,17 +305,17 @@ def test_chunked_predict_matches_full_property(impl, n, chunk):
 
 def test_streaming_bit_identical_at_acceptance_shape():
     """ISSUE 2 acceptance: streamed fit at n=65536/d=64 is bit-identical
-    to in-core fit_dense with chunk=8192 (divisible) and chunk=7000
+    to the in-core fit with chunk=8192 (divisible) and chunk=7000
     (non-divisible final chunk of 2536 rows, sentinel-padded)."""
     cfg = dataclasses.replace(CFG, k_max=256, pair_cap=1 << 15)
     data = dense_blobs(jax.random.PRNGKey(11), n=65536, d=64, k=32)
     x = np.asarray(data.x)
-    res, _ = fit_dense(data.x, jax.random.PRNGKey(1), cfg)
+    res, _ = _fit(DenseData(data.x), jax.random.PRNGKey(1), cfg)
     ref_labels = np.array(res.labels)
     ref_dists = np.array(res.dists)
     for chunk in (8192, 7000):
-        sres, _ = fit_dense_streaming(x, jax.random.PRNGKey(1), cfg,
-                                      chunk=chunk)
+        sres, _ = _fit(DenseData(x), jax.random.PRNGKey(1), cfg,
+                       chunk=chunk)
         np.testing.assert_array_equal(sres.labels, ref_labels)
         np.testing.assert_array_equal(sres.dists, ref_dists)
         np.testing.assert_array_equal(sres.radius, np.array(res.radius))

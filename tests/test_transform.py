@@ -18,8 +18,8 @@ from hypothesis import strategies as st
 
 from repro.checkpoint.manager import (CheckpointManager, restore_model,
                                       save_model)
-from repro.core.geek import (GeekConfig, fit_hetero, fit_sparse,
-                             hetero_code_bits, hetero_codes)
+from repro.core.api import GEEK, HeteroData, SparseData
+from repro.core.geek import GeekConfig, hetero_code_bits, hetero_codes
 from repro.core.model import NumericDiscretizer, predict
 from repro.core.transform import (HeteroTransform, IdentityTransform,
                                   SparseTransform, transform_arrays,
@@ -28,6 +28,13 @@ from repro.data import synthetic
 
 CFG = GeekConfig(m=8, t=16, silk_l=3, delta=3, k_max=32, pair_cap=4096,
                  t_cat=8, bucket_k=2, bucket_l=8, doph_m=32)
+
+
+def _fit(dataset, key, cfg=None):
+    """(result, model) via the facade — the shims are gone (PR 7)."""
+    est = GEEK(cfg or CFG)
+    model = est.fit(dataset, key)
+    return est.result_, model
 
 
 def _rank_codes(x, t_cat):
@@ -135,7 +142,7 @@ def test_hetero_predict_reproduces_fit_labels_exactly():
     """Fit on batch A, predict batch A through the persisted boundaries:
     labels AND dists identical to the fit-time assignment."""
     h = synthetic.geonames_like(jax.random.PRNGKey(0), n=600, k=8)
-    res, model = fit_hetero(h.x_num, h.x_cat, jax.random.PRNGKey(1), CFG)
+    res, model = _fit(HeteroData(h.x_num, h.x_cat), jax.random.PRNGKey(1))
     labels, dists = predict(model, model.encode(h.x_num, h.x_cat))
     np.testing.assert_array_equal(np.array(labels), np.array(res.labels))
     np.testing.assert_array_equal(np.array(dists), np.array(res.dists))
@@ -146,7 +153,7 @@ def test_hetero_predict_exact_after_checkpoint_roundtrip(tmp_path):
     save/restore — boundary persistence makes hetero serving
     deterministic, not batch-approximate."""
     h = synthetic.geonames_like(jax.random.PRNGKey(0), n=600, k=8)
-    res, model = fit_hetero(h.x_num, h.x_cat, jax.random.PRNGKey(1), CFG)
+    res, model = _fit(HeteroData(h.x_num, h.x_cat), jax.random.PRNGKey(1))
     fresh = synthetic.geonames_like(jax.random.PRNGKey(42), n=250, k=8)
     before, bdists = predict(model, model.encode(fresh.x_num, fresh.x_cat))
 
@@ -169,7 +176,7 @@ def test_sparse_predict_exact_after_checkpoint_roundtrip(tmp_path):
     """The DOPH key rides in the model: a restored serving process codes
     new sparse traffic without the original fit key."""
     s = synthetic.url_like(jax.random.PRNGKey(0), n=500, k=8)
-    res, model = fit_sparse(s.sets, s.mask, jax.random.PRNGKey(1), CFG)
+    res, model = _fit(SparseData(s.sets, s.mask), jax.random.PRNGKey(1))
     fresh = synthetic.url_like(jax.random.PRNGKey(42), n=200, k=8)
     before, _ = predict(model, model.encode(fresh.sets, fresh.mask))
     save_model(str(tmp_path), model)
@@ -184,7 +191,7 @@ def test_hetero_codes_with_model_transform_is_exact():
     """hetero_codes(transform=model.transform) is the serving-side
     coding: on the fit batch it equals the fit-time codes."""
     h = synthetic.geonames_like(jax.random.PRNGKey(0), n=400, k=8)
-    _, model = fit_hetero(h.x_num, h.x_cat, jax.random.PRNGKey(1), CFG)
+    _, model = _fit(HeteroData(h.x_num, h.x_cat), jax.random.PRNGKey(1))
     a = hetero_codes(h.x_num, h.x_cat, CFG.t_cat, transform=model.transform)
     b = hetero_codes(h.x_num, h.x_cat, CFG.t_cat)   # in-batch fit, same data
     np.testing.assert_array_equal(np.array(a), np.array(b))
@@ -195,7 +202,7 @@ def test_pre_transform_checkpoint_still_restores(tmp_path):
     restore with transform=None and serve pre-transformed codes."""
     from repro.core import model as model_mod
     h = synthetic.geonames_like(jax.random.PRNGKey(0), n=400, k=8)
-    res, model = fit_hetero(h.x_num, h.x_cat, jax.random.PRNGKey(1), CFG)
+    res, model = _fit(HeteroData(h.x_num, h.x_cat), jax.random.PRNGKey(1))
     arrays = {f: getattr(model, f) for f in model_mod.ARRAY_FIELDS}
     CheckpointManager(str(tmp_path)).save(
         0, arrays, extra={"kind": "geek_model", "meta": model.static_meta()})
@@ -220,11 +227,11 @@ def test_numeric_only_code_bits_too_narrow_raises():
     cfg = dataclasses.replace(CFG, t_cat=16, code_bits=2,
                               hamming_impl="packed")
     with pytest.raises(ValueError, match="code_bits"):
-        fit_hetero(h.x_num, None, jax.random.PRNGKey(1), cfg)
+        _fit(HeteroData(h.x_num, None), jax.random.PRNGKey(1), cfg)
     # wide-enough explicit bits are accepted
     ok = dataclasses.replace(CFG, t_cat=16, code_bits=8,
                              hamming_impl="packed")
-    res, model = fit_hetero(h.x_num, None, jax.random.PRNGKey(1), ok)
+    res, model = _fit(HeteroData(h.x_num, None), jax.random.PRNGKey(1), ok)
     assert model.impl == "packed"
     # with categorical columns the cardinality is unknowable: trusted
     assert hetero_code_bits(dataclasses.replace(CFG, code_bits=2),
