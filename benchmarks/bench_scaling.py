@@ -38,11 +38,10 @@ print("RESULT,%d,%.3f,%d,%.4f" % (g, dt, int(ks), r))
 
 
 def run(quick: bool = True, n: int = 8192) -> None:
+    from benchmarks.common import subprocess_env
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     for g in ([1, 4] if quick else [1, 2, 4, 8]):
-        env = dict(os.environ)
-        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={g}"
-        env["PYTHONPATH"] = os.path.join(repo, "src")
+        env = subprocess_env(repo, host_devices=g)
         out = subprocess.run(
             [sys.executable, "-c", textwrap.dedent(_CHILD.format(n=n))],
             env=env, capture_output=True, text=True, timeout=900)

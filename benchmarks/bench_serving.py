@@ -1,0 +1,231 @@
+"""Async serving-tier benchmark: Poisson traffic through ClusterServer.
+
+``bench_predict`` answers "how fast is one jitted ``predict`` call at a
+fixed batch size". This harness answers the question the serving tier
+(DESIGN.md §13) was built for: under OPEN-LOOP Poisson arrivals of
+small requests, how much of that fixed-batch throughput does the
+micro-batching engine sustain, and at what per-request latency?
+
+Protocol, per mode (smoke / full):
+
+1. **Anchor.** Time the direct jitted ``predict`` at ``max_batch`` rows
+   — the fixed-batch throughput ceiling on this host.
+2. **Poisson segment.** Submit requests of ``request_rows`` clustered
+   queries with exponential inter-arrival gaps targeting ``OFFERED_LOAD``x the
+   anchor rate (an offered load just under the ceiling; the engine must
+   not melt down at it). Arrivals are open-loop: a late submission is
+   sent immediately, never skipped. Records sustained points/sec and
+   per-request p50/p99 latency (submit -> future done).
+3. **Hot-swap segment.** The same traffic while a second model is
+   swapped in mid-stream; every future must resolve (zero failed) and
+   a sample of requests is re-checked against the direct ``predict``
+   of the model version each reports — zero cross-model mixing.
+
+The acceptance bar (ISSUE/ROADMAP): sustained >= 80% of the anchor,
+p99 <= 3x p50, hot-swap failures == mixes == 0. CI gates the smoke
+sustained-throughput entry via check_regress (median of 3 repeats vs
+``benchmarks/baselines/BENCH_serving_smoke.json``).
+
+  PYTHONPATH=src python -m benchmarks.bench_serving [--smoke] [--out PATH]
+
+Full mode writes ``BENCH_serving.json`` (diffable across PRs).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, host_info, timeit
+from repro.core.model import build_model, predict
+from repro.serve import ClusterServer
+
+SHAPE = dict(d=64, k=1024, max_batch=4096, deadline_ms=5.0,
+             request_rows=256, requests=400)
+SMOKE_SHAPE = dict(d=64, k=128, max_batch=512, deadline_ms=5.0,
+                   request_rows=64, requests=120)
+
+#: offered load as a fraction of the fixed-batch anchor throughput.
+#: Closed-loop capacity measures ~1.05x the anchor (full buckets beat
+#: the one-shot anchor call), so 0.9 is still under saturation — and a
+#: higher offered load pushes the flush equilibrium toward full
+#: buckets, where padding waste vanishes.
+OFFERED_LOAD = 0.9
+
+#: requests re-checked against the direct predict path per segment
+VERIFY_SAMPLE = 8
+
+
+def _model(d: int, k: int, seed: int):
+    """An L2 model over random centers (build_model — no fit needed)."""
+    centers = jax.random.normal(jax.random.PRNGKey(seed), (k, d)) * 8.0
+    return build_model(centers, jnp.ones((k,), bool), jnp.int32(k),
+                       jnp.zeros((k,), jnp.float32), metric="l2",
+                       assign_block=1024)
+
+
+def _queries(model, n: int, seed: int) -> np.ndarray:
+    """Clustered queries: each row near a random center (serving shape)."""
+    k, d = model.centers.shape
+    key = jax.random.PRNGKey(seed)
+    pick = jax.random.randint(key, (n,), 0, k)
+    noise = 0.05 * jax.random.normal(jax.random.fold_in(key, 1), (n, d))
+    return np.asarray(jax.block_until_ready(model.centers[pick] + noise))
+
+
+def _poisson_segment(server, traffic: np.ndarray, request_rows: int,
+                     rate_rows_per_s: float, rng,
+                     swap_to=None) -> dict:
+    """Drive one open-loop Poisson segment; returns measured stats.
+
+    ``swap_to``: (model, at_request_index) — performs the hot-swap
+    mid-stream and verifies sampled results against the version each
+    request reports.
+    """
+    n_requests = traffic.shape[0] // request_rows
+    gaps = rng.exponential(request_rows / rate_rows_per_s, n_requests)
+    arrivals = np.cumsum(gaps)
+    # pin the REALIZED offered rate to the target: a finite exponential
+    # sample's total has ~1/sqrt(n) relative noise (the seed-0 draw at
+    # n=400 runs 12.7% long), which would silently rescale the offered
+    # load; scaling the schedule keeps the burstiness, not the error
+    arrivals *= (n_requests * request_rows / rate_rows_per_s) / arrivals[-1]
+    done, lock = [], threading.Lock()
+
+    def _mark(i, t_submit):
+        def cb(fut):
+            t = time.monotonic()
+            with lock:
+                done.append((i, t_submit, t, fut))
+        return cb
+
+    models = {server.version: server.model}
+    futs = []
+    t0 = time.monotonic()
+    for i in range(n_requests):
+        if swap_to is not None and i == swap_to[1]:
+            v = server.swap(swap_to[0])
+            models[v] = swap_to[0]
+        wait = t0 + arrivals[i] - time.monotonic()
+        if wait > 0:                      # open loop: late -> send now
+            time.sleep(wait)
+        rows = traffic[i * request_rows:(i + 1) * request_rows]
+        t_submit = time.monotonic()
+        fut = server.submit(rows)
+        fut.add_done_callback(_mark(i, t_submit))
+        futs.append((i, rows, fut))
+    failed = sum(1 for _, _, f in futs if f.exception() is not None)
+    t_end = max(t for _, _, t, _ in done)
+
+    # sampled bit-identity under the version each request reports
+    mixed = 0
+    idx = np.linspace(0, n_requests - 1, min(VERIFY_SAMPLE, n_requests),
+                      dtype=int)
+    for i in idx:
+        _, rows, fut = futs[i]
+        if fut.exception() is not None:
+            continue
+        got = fut.result()
+        want, _ = predict(models[got.version], jnp.asarray(rows))
+        mixed += int(not np.array_equal(got.labels, np.asarray(want)))
+
+    lat_ms = np.asarray(sorted((t - ts) for _, ts, t, _ in done)) * 1e3
+    p50, p99 = np.percentile(lat_ms, [50, 99])
+    return dict(
+        rows=n_requests * request_rows,
+        wall_s=t_end - t0,
+        points_per_sec=(n_requests * request_rows) / (t_end - t0),
+        p50_ms=float(p50), p99_ms=float(p99),
+        failed=failed, mixed=mixed,
+        swaps=0 if swap_to is None else 1,
+    )
+
+
+def run(smoke: bool = False, out: str | None = None,
+        write_json: bool = True) -> dict:
+    """One full harness pass; returns (and optionally writes) the report."""
+    shape = dict(SMOKE_SHAPE if smoke else SHAPE)
+    d, k = shape["d"], shape["k"]
+    max_batch, request_rows = shape["max_batch"], shape["request_rows"]
+    n_requests = shape["requests"]
+    model = _model(d, k, seed=0)
+    model_b = _model(d, k, seed=1)
+
+    # 1. the fixed-batch anchor: direct jitted predict at max_batch
+    x_anchor = _queries(model, max_batch, seed=7)
+    sec = timeit(predict, model, jnp.asarray(x_anchor))
+    anchor_pps = max_batch / sec
+    emit(f"serving/anchor/batch={max_batch}", sec, f"{anchor_pps:.0f} pts/s")
+
+    rng = np.random.default_rng(0)
+    traffic = _queries(model, n_requests * request_rows, seed=11)
+    rate = OFFERED_LOAD * anchor_pps
+
+    with ClusterServer(model, max_batch=max_batch,
+                       deadline_ms=shape["deadline_ms"]) as server:
+        server.warmup(traffic[:request_rows])
+        # 2. plain Poisson segment
+        seg = _poisson_segment(server, traffic, request_rows, rate, rng)
+        # 3. hot-swap segment: same traffic, swap mid-stream
+        swap_seg = _poisson_segment(server, traffic, request_rows, rate,
+                                    rng, swap_to=(model_b, n_requests // 2))
+        stats = server.stats()
+
+    efficiency = seg["points_per_sec"] / anchor_pps
+    emit(f"serving/poisson/batch={max_batch}", seg["wall_s"],
+         f"{seg['points_per_sec']:.0f} pts/s "
+         f"p50={seg['p50_ms']:.1f}ms p99={seg['p99_ms']:.1f}ms "
+         f"eff={efficiency:.2f}")
+    emit(f"serving/hot_swap/batch={max_batch}", swap_seg["wall_s"],
+         f"{swap_seg['points_per_sec']:.0f} pts/s "
+         f"failed={swap_seg['failed']} mixed={swap_seg['mixed']}")
+
+    report = {
+        "host": host_info(),
+        "shape": {**shape, "mode": "smoke" if smoke else "full",
+                  "offered_load": OFFERED_LOAD},
+        "points_per_sec": {
+            "serving_poisson": {str(max_batch):
+                                round(seg["points_per_sec"])},
+        },
+        "anchor_points_per_sec": round(anchor_pps),
+        "efficiency_vs_fixed_batch": round(efficiency, 3),
+        "latency_ms": {"p50": round(seg["p50_ms"], 2),
+                       "p99": round(seg["p99_ms"], 2)},
+        "hot_swap": {"failed": swap_seg["failed"],
+                     "mixed": swap_seg["mixed"],
+                     "swaps": swap_seg["swaps"],
+                     "points_per_sec": round(swap_seg["points_per_sec"]),
+                     "p99_ms": round(swap_seg["p99_ms"], 2)},
+        "engine_stats": stats,
+    }
+    if write_json:
+        out = out or os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_serving.json")
+        with open(out, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    # smoke mode must not clobber the committed headline
+    # BENCH_serving.json with small-shape numbers
+    write_json = args.out is not None or not args.smoke
+    report = run(smoke=args.smoke, out=args.out, write_json=write_json)
+    print(json.dumps(report, indent=2))
+
+
+if __name__ == "__main__":
+    main()

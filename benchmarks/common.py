@@ -9,6 +9,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.utils.platform import host_device_env
+
+
+def subprocess_env(repo_root: str, host_devices: int | None = None) -> dict:
+    """Environment for a benchmark subprocess (fresh JAX backend).
+
+    Device count is fixed at backend init, so multi-device benches fork
+    children instead of reconfiguring in-process. This routes the
+    ``XLA_FLAGS`` merge through ``repro.utils.platform.host_device_env``
+    (one implementation, not per-bench string building) and pins
+    ``PYTHONPATH`` to the repo's ``src``.
+    """
+    env = (dict(os.environ) if host_devices is None
+           else host_device_env(host_devices))
+    env["PYTHONPATH"] = os.path.join(repo_root, "src")
+    return env
+
 
 def host_class() -> str:
     """Coarse provenance class of the machine producing a report.

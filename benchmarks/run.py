@@ -16,13 +16,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="fig4|fig5|fig6|fig7|table1|assign|predict")
+                    help="fig4|fig5|fig6|fig7|table1|assign|predict|"
+                         "serving|sharded")
     args = ap.parse_args()
     quick = not args.full
 
     from benchmarks import (bench_assign, bench_clustering, bench_complexity,
                             bench_params, bench_predict, bench_scaling,
-                            bench_seeding, bench_sharded)
+                            bench_seeding, bench_serving, bench_sharded)
     suites = {
         "fig4": lambda: bench_params.run(quick=quick),
         "fig5": lambda: bench_clustering.run(quick=quick),
@@ -34,6 +35,8 @@ def main() -> None:
         # small-shape numbers
         "assign": lambda: bench_assign.run(quick=quick, write_json=not quick),
         "predict": lambda: bench_predict.run(smoke=quick,
+                                             write_json=not quick),
+        "serving": lambda: bench_serving.run(smoke=quick,
                                              write_json=not quick),
         # device-count-sensitive: the harness never writes the headline
         # BENCH_sharded.json — refresh it via the module CLI with

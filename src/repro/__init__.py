@@ -10,41 +10,60 @@ One estimator, any data kind, any execution mode (DESIGN.md §11)::
     model = est.fit(DenseData(x), key, mesh=mesh)   # sharded
     labels, dists = est.predict(DenseData(new_x))   # serving
 
+Plus the async serving tier (DESIGN.md §13)::
+
+    from repro.serve import ClusterServer
+
 This top-level namespace is the supported public API, locked by
 ``tests/test_api_surface.py``. Everything else (``repro.core.*``
-internals, ``repro.kernels``, the LM training stack) is
-implementation detail and may change without deprecation.
+internals, ``repro.kernels``, the LM training stack) is implementation
+detail and may change without deprecation.
+
+The namespace resolves LAZILY (PEP 562): importing ``repro`` — or a
+light submodule like ``repro.utils.platform`` — must not initialize
+the JAX backend, because platform configuration (``set_platform``, XLA
+flags) only takes effect before the first backend use. The heavy
+imports happen on first attribute access.
 """
-from repro.checkpoint.manager import restore_model, save_model  # noqa: F401
-from repro.core.api import (  # noqa: F401
-    GEEK,
-    DenseData,
-    HeteroData,
-    KernelAssigner,
-    KMeansPPSeeder,
-    LSHBucketer,
-    ScalableKMeansPPSeeder,
-    SILKSeeder,
-    SparseData,
-)
-from repro.core.geek import GeekConfig, GeekResult  # noqa: F401
-from repro.core.model import GeekModel, predict  # noqa: F401
+import importlib
+
+#: supported public symbol -> defining module (resolved on first access)
+_LAZY = {
+    "DenseData": "repro.core.api",
+    "GEEK": "repro.core.api",
+    "GeekConfig": "repro.core.geek",
+    "GeekModel": "repro.core.model",
+    "GeekResult": "repro.core.geek",
+    "HeteroData": "repro.core.api",
+    "KMeansPPSeeder": "repro.core.api",
+    "KernelAssigner": "repro.core.api",
+    "LSHBucketer": "repro.core.api",
+    "SILKSeeder": "repro.core.api",
+    "ScalableKMeansPPSeeder": "repro.core.api",
+    "SparseData": "repro.core.api",
+    "predict": "repro.core.model",
+    "restore_model": "repro.checkpoint.manager",
+    "save_model": "repro.checkpoint.manager",
+}
 
 #: the supported public surface (sorted; locked by tests/test_api_surface.py)
-__all__ = [
-    "DenseData",
-    "GEEK",
-    "GeekConfig",
-    "GeekModel",
-    "GeekResult",
-    "HeteroData",
-    "KMeansPPSeeder",
-    "KernelAssigner",
-    "LSHBucketer",
-    "SILKSeeder",
-    "ScalableKMeansPPSeeder",
-    "SparseData",
-    "predict",
-    "restore_model",
-    "save_model",
-]
+__all__ = sorted([*_LAZY, "serve"])
+
+
+def __getattr__(name: str):
+    """Resolve a public symbol (or the ``serve`` subpackage) on demand."""
+    if name == "serve":
+        mod = importlib.import_module("repro.serve")
+        globals()[name] = mod
+        return mod
+    target = _LAZY.get(name)
+    if target is None:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}")
+    obj = getattr(importlib.import_module(target), name)
+    globals()[name] = obj          # cache: next access skips __getattr__
+    return obj
+
+
+def __dir__():
+    """Advertise the lazy public surface alongside real globals."""
+    return sorted(set(globals()) | set(__all__))

@@ -14,36 +14,26 @@ dense variant; `--compare` adds the iteration baselines.
       --streaming --chunk 8192 --seed-cap 20000   # out-of-core, any type
   PYTHONPATH=src python -m repro.launch.cluster --dataset sift \
       --seeder kmeanspp                           # swapped seeding stage
-  XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
-      python -m repro.launch.cluster --dataset geonames --mesh
+  PYTHONPATH=src python -m repro.launch.cluster --dataset geonames \
+      --mesh --host-devices 4
+      # --host-devices replaces hand-set XLA_FLAGS (utils/platform.py)
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding
-from jax.sharding import PartitionSpec as P
-
-from repro.core import baselines
-from repro.core.api import (GEEK, DenseData, HeteroData, KMeansPPSeeder,
-                            ScalableKMeansPPSeeder, SparseData)
-from repro.core.distributed import make_fit_dense
-from repro.core.geek import GeekConfig, hetero_codes
-from repro.data import synthetic
-from repro.utils.compat import make_mesh
-
 
 def mean_radius(radius, valid):
+    import jax.numpy as jnp
     r = jnp.where(valid, radius, 0.0)
     return float(r.sum() / jnp.maximum(valid.sum(), 1))
 
 
 def make_dataset(args, key):
     """One synthetic dataset as a facade Dataset spec (+ raw handle)."""
+    from repro.core.api import DenseData, HeteroData, SparseData
+    from repro.data import synthetic
     if args.dataset in ("sift", "gist"):
         gen = (synthetic.sift_like if args.dataset == "sift"
                else synthetic.gist_like)
@@ -58,6 +48,7 @@ def make_dataset(args, key):
 
 def make_seeder(name: str, k: int):
     """--seeder flag -> Seeder protocol object (None = SILK default)."""
+    from repro.core.api import KMeansPPSeeder, ScalableKMeansPPSeeder
     if name == "silk":
         return None
     if name == "kmeanspp":
@@ -95,12 +86,26 @@ def main() -> None:
                     help="max reservoir rows for streamed/sharded discovery "
                          "(default: all rows -> bit-identical to in-core)")
     ap.add_argument("--compare", action="store_true")
+    from repro.utils.platform import add_platform_args, apply_platform_args
+    add_platform_args(ap)
     args = ap.parse_args()
+    apply_platform_args(args)          # before the first JAX computation
     if args.streaming and args.distributed:
         raise SystemExit("--streaming and --distributed are exclusive")
     if args.mesh and args.distributed:
         raise SystemExit("--mesh and --distributed are exclusive "
                          "(--mesh is the unified sharded path)")
+
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh, NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import baselines
+    from repro.core.api import GEEK
+    from repro.core.distributed import make_fit_dense
+    from repro.core.geek import GeekConfig, hetero_codes
+    from repro.utils.compat import make_mesh
 
     key = jax.random.PRNGKey(args.seed)
     cfg = GeekConfig(m=args.m, t=args.t, silk_l=args.silk_l, delta=args.delta,

@@ -1,75 +1,40 @@
-"""Batched cluster-assignment serving driver (DESIGN.md §9).
+"""Cluster-assignment serving CLI — a thin wrapper over ``repro.serve``.
 
 The ROADMAP's "heavy traffic" scenario: SILK discovery runs once
 (offline), the fitted GeekModel is checkpointed, and a serving process
-restores it and answers streams of assignment batches with the one-pass
-kernels only. Traffic arrives *raw* (floats / numeric+categorical rows /
-sparse sets) and is coded by the model's persisted fit-time transform
-(quantile boundaries, DOPH key) — hetero/sparse serving is exact, not
-batch-approximate. This driver exercises that loop end to end on
-synthetic traffic — fit (or restore), optionally save, then serve
-batches and report steady-state points/sec.
+restores it and answers assignment traffic with the one-pass kernels
+only. Since DESIGN.md §13 the actual server is
+:class:`repro.serve.ClusterServer` — an async micro-batching engine
+with a pad ladder, double-buffered dispatch, and hot-swap — and this
+driver only fits-or-restores a model, stands the server up, and pushes
+synthetic raw traffic through ``submit()``, reporting sustained
+points/sec plus per-request p50/p99 latency.
 
   PYTHONPATH=src python -m repro.launch.serve_cluster --data dense \
       --n-fit 16384 --batch 4096 --steps 20
   PYTHONPATH=src python -m repro.launch.serve_cluster --data hetero \
       --ckpt /tmp/geek_model --save   # second run restores, skips the fit
-  XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
-      python -m repro.launch.serve_cluster --data sparse --mesh
+  PYTHONPATH=src python -m repro.launch.serve_cluster --data sparse \
+      --mesh --host-devices 4
       # --mesh: restore replicated onto a 1-axis mesh over all local
-      # devices and serve each batch row-sharded (bit-identical labels)
+      # devices and serve each micro-batch row-sharded (bit-identical);
+      # --host-devices replaces hand-set XLA_FLAGS (utils/platform.py)
 """
 from __future__ import annotations
 
 import argparse
-import functools
 import time
-
-import jax
-import numpy as np
-
-from repro.checkpoint.manager import restore_model, save_model
-from repro.core.api import GEEK, DenseData, HeteroData, SparseData
-from repro.core.distributed import make_predict_sharded
-from repro.core.geek import GeekConfig
-from repro.core.model import patch_probed_fallback, predict, predict_probed
-from repro.data import synthetic
-from repro.utils.compat import make_mesh
 
 #: expected transform kind per data type — a restored checkpoint fitted on
 #: a different type must be refused, not served garbage
 _KIND = {"dense": "identity", "hetero": "hetero", "sparse": "sparse"}
 
 
-@jax.jit
-def _serve(model, *parts):
-    """One serving step: fit-time coding + one-pass assignment, jitted
-    as a single program (the transform rides inside the model pytree)."""
-    return predict(model, model.encode(*parts))
-
-
-@functools.partial(jax.jit, static_argnames=("probes",))
-def _serve_probed(model, *parts, probes: int):
-    """One probed serving step: coding + center-index assignment."""
-    return predict_probed(model, model.encode(*parts), probes)
-
-
-def _make_serve(probes: int | None):
-    """Single-device serving fn for the probes knob (None = exact)."""
-    if probes is None:
-        return _serve
-
-    def serve(model, *parts):
-        """Probed step + host-side exact patch for empty-probe rows."""
-        labels, dists, empty = _serve_probed(model, *parts, probes=probes)
-        return patch_probed_fallback(
-            labels, dists, empty,
-            lambda idx: _serve(model, *(p[idx] for p in parts)))
-
-    return serve
-
-
 def _fit(args, cfg):
+    import jax
+
+    from repro.core.api import GEEK, DenseData, HeteroData, SparseData
+    from repro.data import synthetic
     key = jax.random.PRNGKey(args.seed)
     if args.data == "dense":
         d = synthetic.sift_like(key, n=args.n_fit, k=args.k)
@@ -88,6 +53,9 @@ def _fit(args, cfg):
 def _traffic(args, step: int) -> tuple:
     """A fresh batch of RAW query parts (new synthetic draws each step) —
     the model's transform does the coding, exactly as at fit time."""
+    import jax
+
+    from repro.data import synthetic
     key = jax.random.PRNGKey(1000 + step)
     if args.data == "dense":
         return (synthetic.sift_like(key, n=args.batch, k=args.k).x,)
@@ -107,7 +75,15 @@ def main() -> None:
     ap.add_argument("--n-fit", type=int, default=16384)
     ap.add_argument("--k", type=int, default=64, help="true #clusters")
     ap.add_argument("--k-max", type=int, default=256)
-    ap.add_argument("--batch", type=int, default=4096)
+    ap.add_argument("--batch", type=int, default=4096,
+                    help="rows of fresh traffic per step (also the "
+                         "server's max_batch)")
+    ap.add_argument("--request-rows", type=int, default=None,
+                    help="rows per submitted request (default: --batch, "
+                         "i.e. one request per step; smaller values "
+                         "exercise micro-batching)")
+    ap.add_argument("--deadline-ms", type=float, default=5.0,
+                    help="micro-batch flush deadline")
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None,
@@ -121,9 +97,22 @@ def main() -> None:
                     help="probe the model's center index with this "
                          "multi-probe radius (sub-linear in k; empty "
                          "probes fall back to the exact scan). Default: "
-                         "exact full scan")
+                         "exact full scan. Composes with --mesh (the "
+                         "sharded probed step)")
     ap.add_argument("--smoke", action="store_true")
+    from repro.utils.platform import add_platform_args, apply_platform_args
+    add_platform_args(ap)
     args = ap.parse_args()
+    apply_platform_args(args)          # before the first JAX computation
+
+    import jax
+    import numpy as np
+
+    from repro.checkpoint.manager import restore_model, save_model
+    from repro.core.geek import GeekConfig
+    from repro.serve import ClusterServer
+    from repro.utils.compat import make_mesh
+
     if args.metric is not None:
         if args.data is not None:
             raise SystemExit("[serve] pass --data OR the deprecated "
@@ -163,38 +152,48 @@ def main() -> None:
             print(f"[serve] saved model to {args.ckpt}")
 
     # -- serving loop ------------------------------------------------------
-    # --mesh: each batch is row-sharded over the mesh, the model is
-    # replicated, and the shard_map-wrapped encode+predict produces the
-    # same labels as the single-device path (rows are independent)
-    serve = (make_predict_sharded(mesh, probes=args.probes)
-             if mesh is not None else _make_serve(args.probes))
+    # the engine owns batching/padding/dispatch; this loop only submits
+    # raw request parts and collects futures
+    req_rows = args.request_rows or args.batch
+    server = ClusterServer(model, probes=args.probes, mesh=mesh,
+                           max_batch=args.batch,
+                           deadline_ms=args.deadline_ms)
     warm = _traffic(args, -1)
-    jax.block_until_ready(serve(model, *warm))             # compile
-    total, t_serve = 0, 0.0
+    server.warmup(tuple(None if p is None else p[:req_rows] for p in warm))
+
+    total, latencies = 0, []
     occupancy = np.zeros((model.k_max,), np.int64)
+    t_wall = time.time()
     for step in range(args.steps):
-        batch = _traffic(args, step)
-        if mesh is None:
-            batch = tuple(jax.device_put(p) for p in batch)
-        else:
-            # pre-shard outside the timer, symmetric with the
-            # single-device device_put above (predict_fn's own
-            # device_put on already-sharded arrays is a no-op)
-            from jax.sharding import NamedSharding, PartitionSpec
-            sh = NamedSharding(mesh, PartitionSpec("data", None))
-            batch = tuple(jax.device_put(p, sh) for p in batch)
-        t0 = time.time()
-        labels, dists = jax.block_until_ready(serve(model, *batch))
-        t_serve += time.time() - t0
-        total += labels.shape[0]
-        occupancy += np.bincount(np.asarray(labels), minlength=model.k_max)
-    pps = total / max(t_serve, 1e-9)
+        batch = tuple(None if p is None else np.asarray(p)
+                      for p in _traffic(args, step))
+        n = next(p.shape[0] for p in batch if p is not None)
+        futs = []
+        for off in range(0, n, req_rows):
+            parts = tuple(None if p is None else p[off:off + req_rows]
+                          for p in batch)
+            t0 = time.time()
+            futs.append((t0, server.submit(parts)))
+        for t0, fut in futs:
+            res = fut.result()
+            latencies.append(time.time() - t0)
+            total += res.labels.shape[0]
+            occupancy += np.bincount(res.labels, minlength=model.k_max)
+    t_wall = time.time() - t_wall
+    server.close()
+
+    pps = total / max(t_wall, 1e-9)
+    p50, p99 = np.percentile(np.asarray(latencies) * 1e3, [50, 99])
     hot = int(occupancy.argmax())
     tag = f" x{len(jax.devices())} devices" if mesh is not None else ""
     if args.probes is not None:
         tag += f" probes={args.probes}"
-    print(f"[serve{tag}] {args.steps} batches x {args.batch}: "
-          f"{pps:,.0f} points/s (coding + assignment), "
+    st = server.stats()
+    print(f"[serve{tag}] {args.steps} steps x {args.batch} rows "
+          f"({req_rows}/request): {pps:,.0f} points/s sustained, "
+          f"p50={p50:.1f}ms p99={p99:.1f}ms, "
+          f"{st['batches']} micro-batches "
+          f"(flushes: {st['flushes']}), "
           f"hottest cluster {hot} got {int(occupancy[hot])} points")
 
 

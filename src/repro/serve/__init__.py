@@ -1,0 +1,35 @@
+"""``repro.serve`` — the async serving tier (DESIGN.md §13).
+
+Public surface (locked by ``tests/test_api_surface.py``)::
+
+    from repro.serve import ClusterServer
+
+    server = ClusterServer(model_or_ckpt, probes=None, mesh=None,
+                           max_batch=4096, deadline_ms=5.0)
+    fut = server.submit(parts)        # single row or small batch
+    fut.result().labels               # resolved per micro-batch
+    server.swap(new_ckpt_dir)         # atomic between micro-batches
+    server.close()
+
+``ClusterServer`` micro-batches requests onto a pad ladder of jitted
+shapes (zero steady-state recompiles) with double-buffered dispatch;
+``ModelRegistry`` is the hot-swap point shared by multi-model
+deployments; ``Assignment`` is the per-request result (labels, dists,
+serving model version); ``pad_ladder`` exposes the bucket-shape policy
+for tuning and tests.
+"""
+from repro.serve.engine import (  # noqa: F401
+    Assignment,
+    ClusterServer,
+    pad_ladder,
+)
+from repro.serve.registry import ModelRecord, ModelRegistry  # noqa: F401
+
+#: the supported serving surface (sorted; locked by tests/test_api_surface.py)
+__all__ = [
+    "Assignment",
+    "ClusterServer",
+    "ModelRecord",
+    "ModelRegistry",
+    "pad_ladder",
+]

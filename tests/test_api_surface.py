@@ -8,6 +8,7 @@ review.
 """
 import repro
 import repro.core
+import repro.serve
 
 #: the locked top-level surface — keep sorted
 REPRO_ALL = [
@@ -26,6 +27,16 @@ REPRO_ALL = [
     "predict",
     "restore_model",
     "save_model",
+    "serve",
+]
+
+#: the locked serving surface — keep sorted
+REPRO_SERVE_ALL = [
+    "Assignment",
+    "ClusterServer",
+    "ModelRecord",
+    "ModelRegistry",
+    "pad_ladder",
 ]
 
 #: the locked core surface — keep sorted
@@ -70,8 +81,15 @@ def test_repro_core_surface_locked():
     assert repro.core.__all__ == sorted(repro.core.__all__)
 
 
+def test_repro_serve_surface_locked():
+    assert sorted(repro.serve.__all__) == sorted(REPRO_SERVE_ALL)
+    assert repro.serve.__all__ == sorted(repro.serve.__all__)
+
+
 def test_surface_resolves():
     for name in repro.__all__:
         assert getattr(repro, name) is not None
     for name in repro.core.__all__:
         assert getattr(repro.core, name) is not None
+    for name in repro.serve.__all__:
+        assert getattr(repro.serve, name) is not None

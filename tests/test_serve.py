@@ -1,0 +1,397 @@
+"""Async serving tier (DESIGN.md §13): engine, registry, pad ladder.
+
+The contracts under test:
+
+- **Bit-identity.** For every (probes, mesh) serving configuration the
+  engine's micro-batched LABELS equal the direct ``predict`` path on
+  the same rows — batching, padding and double-buffering must never
+  change a label. Distances match to float tolerance only: padding to
+  a ladder rung changes the XLA program shape, which may reassociate
+  the distance reductions (~1e-6 relative).
+- **Flush ordering.** A full bucket flushes immediately (reason
+  "max_batch") even when the oldest request's deadline has *also*
+  expired; a partial bucket flushes at the deadline; ``close()``
+  drains the rest.
+- **Zero steady-state recompiles.** After ``warmup()`` walks the pad
+  ladder, serving arbitrary request sizes triggers no XLA compiles
+  (counted via the ``jax.monitoring`` backend-compile event).
+- **Hot-swap atomicity.** ``swap()`` never fails a request and never
+  mixes versions inside one request/micro-batch; incompatible models
+  are refused with named errors.
+"""
+import dataclasses
+import functools
+import time
+import types
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.api import GEEK, DenseData, HeteroData, SparseData
+from repro.core.geek import GeekConfig
+from repro.core.model import predict
+from repro.serve import ClusterServer, ModelRegistry, pad_ladder
+from repro.serve import engine as engine_mod
+from repro.serve.engine import bucket_for
+from repro.utils.compat import make_mesh
+
+CFG = GeekConfig(m=8, t=16, silk_l=3, delta=3, k_max=32, pair_cap=4096,
+                 t_cat=8)
+
+
+@functools.lru_cache(maxsize=None)
+def _fitted(entry: str, seed: int = 0):
+    """(model, raw_parts) for one entry point — cached, one fit each."""
+    from repro.data import synthetic
+    key, fkey = jax.random.PRNGKey(seed), jax.random.PRNGKey(seed + 1)
+    if entry == "dense":
+        d = synthetic.dense_blobs(key, n=900, d=16, k=8)
+        model = GEEK(CFG).fit(DenseData(d.x), fkey)
+        parts = (np.asarray(d.x),)
+    elif entry == "hetero":
+        h = synthetic.geonames_like(key, n=700, k=8)
+        model = GEEK(CFG).fit(HeteroData(h.x_num, h.x_cat), fkey)
+        parts = (np.asarray(h.x_num), np.asarray(h.x_cat))
+    else:
+        s = synthetic.url_like(key, n=600, k=8)
+        model = GEEK(CFG).fit(SparseData(s.sets, s.mask), fkey)
+        parts = (np.asarray(s.sets), np.asarray(s.mask))
+    return jax.block_until_ready(model), parts
+
+
+def _rows(parts, sl):
+    return tuple(None if p is None else p[sl] for p in parts)
+
+
+def _direct(model, parts, probes=None):
+    """The reference answer: the module-level predict path."""
+    labels, dists = predict(model, model.encode(*parts), probes=probes)
+    return np.asarray(labels), np.asarray(dists)
+
+
+# ---------------------------------------------------------------------------
+# pad ladder
+# ---------------------------------------------------------------------------
+
+def test_pad_ladder_shape():
+    # powers of two plus the 1.5x mid-rungs (padding-waste cap)
+    lad = pad_ladder(4096)
+    assert lad == (64, 96, 128, 192, 256, 384, 512, 768, 1024, 1536,
+                   2048, 3072, 4096)
+    assert pad_ladder(100, min_bucket=16) == (16, 24, 32, 48, 64, 96, 100)
+    # rounded to the mesh multiple, top rung always >= max_batch
+    assert pad_ladder(1000, multiple=3) == (66, 96, 129, 192, 258, 384,
+                                            513, 768, 1002)
+    assert pad_ladder(1) == (1,)
+    with pytest.raises(ValueError):
+        pad_ladder(0)
+
+
+def test_bucket_for_picks_smallest_holding_rung():
+    lad = pad_ladder(4096)
+    assert bucket_for(1, lad) == 64
+    assert bucket_for(64, lad) == 64
+    assert bucket_for(65, lad) == 96   # 1.5x mid-rung, not the next pow2
+    assert bucket_for(97, lad) == 128
+    assert bucket_for(4096, lad) == 4096
+    with pytest.raises(ValueError):
+        bucket_for(4097, lad)
+
+
+# ---------------------------------------------------------------------------
+# registry (dummy models: only .transform.kind and .d are inspected)
+# ---------------------------------------------------------------------------
+
+def _dummy(kind="identity", d=16):
+    return types.SimpleNamespace(
+        transform=types.SimpleNamespace(kind=kind), d=d)
+
+
+def test_registry_versions_monotonic_and_retained():
+    reg = ModelRegistry(keep=2)
+    assert reg.publish("m", _dummy()) == 0
+    assert reg.publish("m", _dummy()) == 1
+    assert reg.publish("m", _dummy()) == 2
+    assert reg.versions("m") == [1, 2]        # keep=2 drops version 0
+    assert reg.current("m").version == 2
+    assert reg.get("m", 1).version == 1
+    with pytest.raises(KeyError):
+        reg.get("m", 0)
+    with pytest.raises(KeyError):
+        reg.current("absent")
+    assert reg.names() == ["m"]
+
+
+def test_registry_refuses_incompatible_swap():
+    reg = ModelRegistry()
+    reg.publish("m", _dummy("identity", 16))
+    with pytest.raises(ValueError, match="kind mismatch"):
+        reg.publish("m", _dummy("sparse", 16))
+    with pytest.raises(ValueError, match="width mismatch"):
+        reg.publish("m", _dummy("identity", 8))
+    # explicit repurposing stays possible
+    assert reg.publish("m", _dummy("sparse", 8),
+                       check_compatible=False) == 1
+
+
+def test_registry_load_from_checkpoint(tmp_path):
+    from repro.checkpoint.manager import save_model
+    model, parts = _fitted("dense")
+    save_model(str(tmp_path), model)
+    reg = ModelRegistry()
+    version = reg.load("m", str(tmp_path))
+    rec = reg.current("m")
+    assert (version, rec.version) == (0, 0)
+    assert rec.source == str(tmp_path)
+    np.testing.assert_array_equal(
+        _direct(rec.model, _rows(parts, slice(0, 50)))[0],
+        _direct(model, _rows(parts, slice(0, 50)))[0])
+
+
+# ---------------------------------------------------------------------------
+# engine: bit-identity across serving configurations
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("probes", [None, 1])
+@pytest.mark.parametrize("use_mesh", [False, True])
+def test_served_labels_bit_identical_dense(probes, use_mesh):
+    """Micro-batched serving == direct predict for every config combo,
+    at request sizes that exercise padding and batch concatenation."""
+    model, parts = _fitted("dense")
+    mesh = make_mesh() if use_mesh else None
+    with ClusterServer(model, probes=probes, mesh=mesh, max_batch=256,
+                       deadline_ms=5.0, min_bucket=16) as server:
+        server.warmup(_rows(parts, slice(0, 16)))
+        sizes, futs, off = [1, 7, 16, 33, 100], [], 0
+        for n in sizes:
+            futs.append((off, n, server.submit(_rows(parts,
+                                                     slice(off, off + n)))))
+            off += n
+        for off, n, fut in futs:
+            got = fut.result(timeout=60)
+            want_l, want_d = _direct(model, _rows(parts,
+                                                  slice(off, off + n)),
+                                     probes=probes)
+            np.testing.assert_array_equal(got.labels, want_l)
+            np.testing.assert_allclose(got.dists, want_d, rtol=2e-5,
+                                       atol=1e-6)
+        st = server.stats()
+    assert st["failed"] == 0
+    assert st["rows_served"] == sum(sizes)
+
+
+@pytest.mark.parametrize("entry", ["hetero", "sparse"])
+def test_served_labels_bit_identical_multi_part(entry):
+    """Two-part traffic (hetero/sparse) rides the same loop unchanged."""
+    model, parts = _fitted(entry)
+    with ClusterServer(model, max_batch=128, deadline_ms=5.0,
+                       min_bucket=16) as server:
+        server.warmup(_rows(parts, slice(0, 16)))
+        fut = server.submit(_rows(parts, slice(3, 80)))
+        got = fut.result(timeout=60)
+        want_l, want_d = _direct(model, _rows(parts, slice(3, 80)))
+        np.testing.assert_array_equal(got.labels, want_l)
+        np.testing.assert_allclose(got.dists, want_d, rtol=2e-5,
+                                   atol=1e-6)
+
+
+def test_single_row_requests_batch_together():
+    """Many 1-row submits are served in few micro-batches, correctly."""
+    model, parts = _fitted("dense")
+    with ClusterServer(model, max_batch=64, deadline_ms=20.0,
+                       min_bucket=16) as server:
+        server.warmup(_rows(parts, slice(0, 4)))
+        futs = [server.submit(_rows(parts, slice(i, i + 1)))
+                for i in range(32)]
+        want_l, _ = _direct(model, _rows(parts, slice(0, 32)))
+        for i, fut in enumerate(futs):
+            got = fut.result(timeout=60)
+            assert got.labels.shape == (1,)
+            assert got.labels[0] == want_l[i]
+        st = server.stats()
+    assert st["batches"] < 32, "1-row requests must micro-batch"
+
+
+# ---------------------------------------------------------------------------
+# engine: flush ordering
+# ---------------------------------------------------------------------------
+
+def test_full_bucket_flushes_without_waiting_for_deadline():
+    model, parts = _fitted("dense")
+    with ClusterServer(model, max_batch=32, deadline_ms=60_000.0,
+                       min_bucket=16) as server:
+        server.warmup(_rows(parts, slice(0, 4)))
+        futs = [server.submit(_rows(parts, slice(8 * i, 8 * i + 8)))
+                for i in range(4)]
+        t0 = time.monotonic()
+        for fut in futs:
+            fut.result(timeout=60)
+        assert time.monotonic() - t0 < 30, "flush waited for the deadline"
+        st = server.stats()
+    assert st["flushes"]["max_batch"] >= 1
+    assert st["flushes"]["deadline"] == 0
+
+
+def test_partial_bucket_flushes_at_deadline():
+    model, parts = _fitted("dense")
+    with ClusterServer(model, max_batch=4096, deadline_ms=25.0,
+                       min_bucket=16) as server:
+        server.warmup(_rows(parts, slice(0, 4)))
+        got = server.submit(_rows(parts, slice(0, 8))).result(timeout=60)
+        assert got.labels.shape == (8,)
+        st = server.stats()
+    assert st["flushes"]["deadline"] == 1
+    assert st["flushes"]["max_batch"] == 0
+
+
+def test_max_batch_outranks_expired_deadline(monkeypatch):
+    """When a full bucket AND an expired deadline hold simultaneously,
+    the flush records reason "max_batch" — deterministic via a parked
+    worker and a backdated request."""
+    model, parts = _fitted("dense")
+    orig_run = engine_mod.ClusterServer._run
+    monkeypatch.setattr(engine_mod.ClusterServer, "_run",
+                        lambda self: None)   # worker thread exits at once
+    server = ClusterServer(model, max_batch=32, deadline_ms=5.0,
+                           min_bucket=16)
+    fut = server.submit(_rows(parts, slice(0, 32)))     # exactly max_batch
+    req = server._queue.get_nowait()
+    req.t_submit = time.monotonic() - 10.0              # deadline long gone
+    server._queue.put(req)
+    server._queue.put(engine_mod._CLOSE)
+    orig_run(server)                                     # run loop inline
+    assert fut.result(timeout=5).labels.shape == (32,)
+    st = server.stats()
+    assert st["flushes"] == {"max_batch": 1, "deadline": 0, "close": 0}
+
+
+def test_close_drains_pending_requests():
+    model, parts = _fitted("dense")
+    server = ClusterServer(model, max_batch=4096, deadline_ms=60_000.0,
+                           min_bucket=16)
+    server.warmup(_rows(parts, slice(0, 4)))
+    futs = [server.submit(_rows(parts, slice(8 * i, 8 * i + 8)))
+            for i in range(3)]
+    server.close()
+    for fut in futs:
+        assert fut.result(timeout=5).labels.shape == (8,)
+    assert server.stats()["flushes"]["close"] >= 1
+    with pytest.raises(RuntimeError, match="closed"):
+        server.submit(_rows(parts, slice(0, 1)))
+
+
+# ---------------------------------------------------------------------------
+# engine: zero steady-state recompiles after warmup
+# ---------------------------------------------------------------------------
+
+def test_no_recompiles_after_warmup():
+    """The pad ladder bounds jit compiles: once ``warmup()`` has walked
+    every rung, arbitrary request sizes compile nothing new."""
+    model, parts = _fitted("dense")
+    compiles = []
+    jax.monitoring.register_event_duration_secs_listener(
+        lambda key, *a, **kw: compiles.append(key)
+        if "backend_compile" in key else None)
+    try:
+        with ClusterServer(model, max_batch=128, deadline_ms=5.0,
+                           min_bucket=16) as server:
+            server.warmup(_rows(parts, slice(0, 16)))
+            compiles.clear()                 # count only steady state
+            off = 0
+            for n in (1, 5, 16, 17, 33, 64, 100, 128, 2, 90):
+                fut = server.submit(_rows(parts, slice(off, off + n)))
+                fut.result(timeout=60)
+                off += n
+    finally:
+        jax.monitoring.clear_event_listeners()
+    assert compiles == [], f"steady-state serving compiled: {compiles}"
+
+
+# ---------------------------------------------------------------------------
+# engine: hot-swap
+# ---------------------------------------------------------------------------
+
+def test_hot_swap_is_atomic_and_loses_nothing():
+    model_a, parts = _fitted("dense")
+    model_b, _ = _fitted("dense", seed=7)    # same kind/width, new fit
+    by_version = {0: model_a, 1: model_b}
+    with ClusterServer(model_a, max_batch=64, deadline_ms=3.0,
+                       min_bucket=16) as server:
+        server.warmup(_rows(parts, slice(0, 8)))
+        # v0 provably serves before the swap...
+        first = server.submit(_rows(parts, slice(0, 8))).result(timeout=60)
+        assert first.version == 0
+        # ...then a paced burst straddles the swap
+        futs = []
+        for i in range(12):
+            if i == 6:
+                assert server.swap(model_b) == 1
+            futs.append((8 * i, server.submit(
+                _rows(parts, slice(8 * i, 8 * i + 8)))))
+            time.sleep(0.002)
+        seen = set()
+        for off, fut in futs:
+            got = fut.result(timeout=60)     # zero failed requests
+            seen.add(got.version)
+            want_l, _ = _direct(by_version[got.version],
+                                _rows(parts, slice(off, off + 8)))
+            # every row of the request matches the version it reports —
+            # no cross-model mixing inside a micro-batch
+            np.testing.assert_array_equal(got.labels, want_l)
+        st = server.stats()
+    assert 1 in seen, "post-swap traffic must serve on the new version"
+    assert st["failed"] == 0
+    assert st["swaps"] == 1
+
+
+def test_swap_refuses_incompatible_model():
+    model, _ = _fitted("dense")
+    with ClusterServer(model, max_batch=32, deadline_ms=5.0) as server:
+        with pytest.raises(ValueError, match="kind mismatch"):
+            server.swap(_dummy("sparse", model.d))
+        with pytest.raises(ValueError, match="width mismatch"):
+            server.swap(_dummy("identity", model.d + 1))
+        assert server.version == 0           # still serving the original
+
+
+def test_server_restores_from_checkpoint_dir(tmp_path):
+    from repro.checkpoint.manager import save_model
+    model, parts = _fitted("dense")
+    save_model(str(tmp_path), model)
+    with ClusterServer(str(tmp_path), max_batch=64, deadline_ms=5.0,
+                       min_bucket=16) as server:
+        got = server.submit(_rows(parts, slice(0, 20))).result(timeout=60)
+        want_l, _ = _direct(model, _rows(parts, slice(0, 20)))
+        np.testing.assert_array_equal(got.labels, want_l)
+
+
+# ---------------------------------------------------------------------------
+# engine: argument validation
+# ---------------------------------------------------------------------------
+
+def test_submit_validation():
+    model, parts = _fitted("dense")
+    with ClusterServer(model, max_batch=32, deadline_ms=5.0) as server:
+        with pytest.raises(ValueError, match="query part"):
+            server.submit((parts[0][:4], parts[0][:4]))   # wrong arity
+        with pytest.raises(ValueError, match="outside"):
+            server.submit(_rows(parts, slice(0, 33)))     # > max_batch
+    hmodel, hparts = _fitted("hetero")
+    with ClusterServer(hmodel, max_batch=32, deadline_ms=5.0) as server:
+        with pytest.raises(ValueError, match="disagree"):
+            server.submit((hparts[0][:4], hparts[1][:5]))
+
+
+def test_constructor_validation():
+    model, _ = _fitted("dense")
+    with pytest.raises(TypeError, match="GeekModel"):
+        ClusterServer(12345)
+    with pytest.raises(ValueError, match="probes"):
+        ClusterServer(model, probes=-1)
+    with pytest.raises(ValueError, match="deadline_ms"):
+        ClusterServer(model, deadline_ms=0)
+    no_index = dataclasses.replace(model, center_index=None,
+                                   index_tables=0)
+    with pytest.raises(ValueError, match="index_tables=0"):
+        ClusterServer(no_index, probes=1)
