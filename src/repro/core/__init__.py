@@ -34,6 +34,7 @@ from repro.core.model import (  # noqa: F401
     patch_probed_fallback,
     predict,
     predict_probed,
+    update_centers,
 )
 from repro.core.silk import SeedPairs, Seeds, silk_seeding  # noqa: F401
 from repro.core.transform import (  # noqa: F401
@@ -71,4 +72,5 @@ __all__ = [
     "predict",
     "predict_probed",
     "silk_seeding",
+    "update_centers",
 ]

@@ -48,6 +48,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any, ClassVar
 
 import jax
@@ -505,10 +506,13 @@ def _resolve_discovery(discovery: str | None, seed_cap, n: int, bucketer,
     ``None`` (the default) means *auto*: distributed SILK discovery
     (``core.distributed.discover_sharded``) when the stock
     ``LSHBucketer`` + ``SILKSeeder`` pipeline runs at full coverage,
-    silently falling back to "gathered" when a reservoir is requested
-    (``seed_cap`` strictly subsamples) or a custom/bucket-free
-    Bucketer/Seeder is plugged in (their key/bucket semantics are not
-    distributable generically).
+    falling back to "gathered" — with a ``UserWarning`` naming every
+    reason, since the gathered plan replicates the reservoir on every
+    device — when a reservoir is requested (``seed_cap`` strictly
+    subsamples) or a custom/bucket-free Bucketer/Seeder is plugged in
+    (their key/bucket semantics are not distributable generically).
+    Passing an explicit ``"gathered"`` acknowledges the plan and
+    silences the warning.
 
     An *explicit* ``"sharded"`` is a promise about execution and memory
     behavior, so the same conditions raise instead of silently handing
@@ -539,6 +543,11 @@ def _resolve_discovery(discovery: str | None, seed_cap, n: int, bucketer,
             "discovery cannot run: " + "; ".join(reasons) + ". Pass "
             "discovery='gathered' (replicated-reservoir discovery) or "
             "leave discovery=None to let the fit fall back automatically")
+    warnings.warn(
+        "discovery=None fell back to gathered (replicated-reservoir) "
+        "discovery: " + "; ".join(reasons) + ". Pass "
+        "discovery='gathered' explicitly to acknowledge the replication "
+        "and silence this warning", UserWarning, stacklevel=3)
     return "gathered"
 
 
@@ -783,10 +792,11 @@ class GEEK:
             (default, auto) distributes SILK discovery itself —
             device-local bucket tables behind a tiled all_to_all
             exchange plus a hierarchical merge, bit-identical to the
-            in-core fit and scaling with the mesh — and silently falls
-            back to "gathered" (replicated discovery on the
-            all-gathered reservoir) when ``seed_cap`` subsamples or a
-            custom/bucket-free Bucketer/Seeder is plugged in. An
+            in-core fit and scaling with the mesh — and falls back to
+            "gathered" (replicated discovery on the all-gathered
+            reservoir) with a ``UserWarning`` naming the reasons when
+            ``seed_cap`` subsamples or a custom/bucket-free
+            Bucketer/Seeder is plugged in. An
             explicit ``"sharded"`` raises in those cases instead of
             switching execution plans behind your back
             (``_resolve_discovery``); ``"gathered"`` forces the

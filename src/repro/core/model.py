@@ -511,6 +511,63 @@ def build_model(centers: jax.Array, center_valid: jax.Array,
                      int(index_tables), int(index_bucket))
 
 
+def update_centers(model: GeekModel, centers: jax.Array, *,
+                   center_valid: jax.Array | None = None,
+                   k_star: jax.Array | None = None,
+                   radius: jax.Array | None = None,
+                   rebuild_index: bool = False) -> GeekModel:
+    """Swap a fitted model's centers in place (the online-drift hook).
+
+    Streaming consumers (``repro.serve.kv_cluster``) move centers a
+    little every step (EMA drift) and a lot every refresh (re-fit). The
+    derived packed/one-hot caches are pure functions of the centers, so
+    they are always re-derived here; the ``CenterIndex`` is only rebuilt
+    when asked, because rebuilding costs a sort per table and a slightly
+    stale index merely degrades probed recall (candidates are still
+    scored with exact distances) — the drift-vs-refresh contract of
+    DESIGN.md §14.
+
+    Parameters
+    ----------
+    model : GeekModel
+        The fitted model to update.
+    centers : (k_max, d) jax.Array
+        Replacement centroids/codes, same shape and metric space.
+    center_valid, k_star, radius : jax.Array or None
+        Optional replacements for the matching canonical fields
+        (``None`` keeps the fitted values).
+    rebuild_index : bool
+        Rebuild the ``CenterIndex`` from the new centers (deterministic,
+        same ``_INDEX_SEED``). ``False`` keeps the existing — possibly
+        stale — index.
+
+    Returns
+    -------
+    GeekModel
+        A new model; the input is untouched (models are frozen).
+    """
+    if centers.shape != model.centers.shape:
+        raise ValueError(f"centers shape {centers.shape} != fitted "
+                         f"{model.centers.shape}")
+    valid = model.center_valid if center_valid is None else center_valid
+    packed, onehot = model.packed_centers, model.onehot_centers
+    if model.metric == "hamming":
+        if model.impl == "packed":
+            packed = pack_codes(centers, model.code_bits)
+        elif model.impl == "onehot":
+            onehot = onehot_codes(centers, 1 << model.code_bits)
+    index = model.center_index
+    if rebuild_index and model.index_tables > 0:
+        index = build_center_index(centers, valid, metric=model.metric,
+                                   tables=model.index_tables,
+                                   bucket=model.index_bucket)
+    return dataclasses.replace(
+        model, centers=centers, center_valid=valid,
+        k_star=model.k_star if k_star is None else k_star,
+        radius=model.radius if radius is None else radius,
+        packed_centers=packed, onehot_centers=onehot, center_index=index)
+
+
 def predict_l2(model: GeekModel, x: jax.Array):
     """L2 assignment dispatch. Shared by ``predict`` AND the fit-time
     ``_finish_dense`` pass — one code path is what makes 'predict is

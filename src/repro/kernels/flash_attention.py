@@ -18,6 +18,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -109,3 +110,85 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         interpret=interpret,
     )(q, k, v)
     return out[:, :, :S, :]
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "interpret"))
+def flash_centroid_attention(q: jax.Array, centers: jax.Array,
+                             v_cent: jax.Array, log_mass: jax.Array, *,
+                             bq: int = 256, bk: int = 256,
+                             interpret: bool = False) -> jax.Array:
+    """Mass-weighted non-causal attention over cluster centroids.
+
+    Computes ``softmax_K(q . centers / sqrt(dh) + log_mass) @ v_cent`` —
+    the clustered-attention step of ``repro.serve.kv_cluster``, where
+    ``log_mass`` folds each cluster's population into the softmax (a
+    cluster of m identical keys scores like m separate keys). Rides the
+    exact same online-softmax kernel as ``flash_attention`` via one
+    augmented feature dimension: ``q' = [q * sqrt(dh')/sqrt(dh),
+    sqrt(dh')]`` and ``k' = [c, log_mass]`` give ``q'.k'/sqrt(dh') =
+    q.c/sqrt(dh) + log_mass`` with dh' = dh+1, so no second kernel body
+    exists to drift out of sync. Invalid centroids are excluded by
+    passing ``log_mass = -1e30`` for their rows (matching the kernel's
+    own mask constant). The augmented lane width dh+1 is off the 128
+    tile grid — acceptable for the small dh of per-head attention, and
+    irrelevant in interpret mode.
+
+    Parameters
+    ----------
+    q : (B, Hq, S, dh) jax.Array
+        Queries (decode: S == 1).
+    centers, v_cent : (B, Hkv, K, dh) jax.Array
+        Key and value centroids; Hkv must divide Hq (GQA).
+    log_mass : (B, Hkv, K) jax.Array
+        Log cluster mass; ``-1e30`` marks dead centroid rows.
+
+    Returns
+    -------
+    jax.Array
+        (B, Hq, S, dh) attention output in q.dtype.
+    """
+    B, Hq, S, dh = q.shape
+    Hkv, K = centers.shape[1], centers.shape[2]
+    assert Hq % Hkv == 0, "GQA requires Hkv | Hq"
+    dha = dh + 1
+    boost = float(np.sqrt(dha / dh))
+    qa = jnp.concatenate(
+        [q.astype(jnp.float32) * boost,
+         jnp.full((B, Hq, S, 1), np.sqrt(float(dha)), jnp.float32)], -1)
+    ka = jnp.concatenate([centers.astype(jnp.float32),
+                          log_mass.astype(jnp.float32)[..., None]], -1)
+    va = jnp.concatenate([v_cent.astype(jnp.float32),
+                          jnp.zeros((B, Hkv, K, 1), jnp.float32)], -1)
+    bq = min(bq, S)
+    bk = min(bk, K)
+    qpad, kpad = (-S) % bq, (-K) % bk
+    if qpad:
+        qa = jnp.pad(qa, ((0, 0), (0, 0), (0, qpad), (0, 0)))
+    if kpad:
+        ka = jnp.pad(ka, ((0, 0), (0, 0), (0, kpad), (0, 0)))
+        va = jnp.pad(va, ((0, 0), (0, 0), (0, kpad), (0, 0)))
+    nq, nk = (S + qpad) // bq, (K + kpad) // bk
+    group = Hq // Hkv
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=1.0 / (dha ** 0.5), bq=bq, bk=bk,
+                          nk=nk, causal=False, kv_len=K),
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dha), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, dha),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, dha),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dha),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, S + qpad, dha), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bq, dha), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qa, ka, va)
+    return out[:, :, :S, :dh].astype(q.dtype)

@@ -109,3 +109,13 @@ def flash_attention(q, k, v, **kw):
         return _ref.attention_ref(q, k, v, causal=causal)
     kw.setdefault("interpret", mode == "interpret")
     return _fa.flash_attention(q, k, v, **kw)
+
+
+def flash_centroid_attention(q, centers, v_cent, log_mass, **kw):
+    mode = _mode()
+    if mode == "fallback":
+        _warn_fallback(jax.default_backend())
+        from repro.kernels import ref as _ref
+        return _ref.centroid_attention_ref(q, centers, v_cent, log_mass)
+    kw.setdefault("interpret", mode == "interpret")
+    return _fa.flash_centroid_attention(q, centers, v_cent, log_mass, **kw)

@@ -40,6 +40,27 @@ def minhash_even_buckets_ref(ids, keys):
     return sig
 
 
+def centroid_attention_ref(q, centers, v_cent, log_mass):
+    """q: (B,Hq,S,dh); centers/v_cent: (B,Hkv,K,dh); log_mass: (B,Hkv,K).
+
+    Mass-weighted non-causal softmax over centroids (GQA by repetition);
+    ``log_mass = -1e30`` rows are effectively excluded. The oracle for
+    ``flash_centroid_attention`` and the CPU/GPU fallback path.
+    """
+    B, Hq, S, dh = q.shape
+    Hkv = centers.shape[1]
+    rep = Hq // Hkv
+    c = jnp.repeat(centers, rep, axis=1)
+    vc = jnp.repeat(v_cent, rep, axis=1)
+    lm = jnp.repeat(log_mass, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   c.astype(jnp.float32)) / (dh ** 0.5)
+    s = s + lm[:, :, None, :].astype(jnp.float32)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      vc.astype(jnp.float32)).astype(q.dtype)
+
+
 def attention_ref(q, k, v, *, causal=True):
     """q: (B,Hq,S,dh); k,v: (B,Hkv,S,dh). GQA by head repetition."""
     B, Hq, S, dh = q.shape

@@ -97,18 +97,19 @@ def attn_cache_spec(cfg: ArchConfig):
     return {"k": P("dp", "sp", None, None), "v": P("dp", "sp", None, None)}
 
 
-def attn_apply(p, x: jax.Array, cfg: ArchConfig, *, positions: jax.Array,
-               cache: dict | None = None, cache_len: jax.Array | None = None,
-               return_kv: bool = False):
-    """x: (B, S, d). Train/prefill: cache=None -> causal full attention
-    (return_kv=True hands back the fresh K/V so prefill can seed a cache).
-    Decode: S==1, cache holds (B, Smax, Hkv, hd); cache_len = #valid tokens.
-    Returns (y, new_cache)."""
-    B, S, d = x.shape
+def attn_qkv(p, x: jax.Array, cfg: ArchConfig, *, positions: jax.Array):
+    """Project x to per-head q/k/v with bias, qk-norm and RoPE applied.
+
+    The shared front half of ``attn_apply``, exposed on its own so
+    attention overrides (``repro.serve.kv_cluster``) consume the exact
+    post-RoPE q/k/v the standard path caches — what gets clustered is
+    bit-identical to what exact attention would have attended to.
+
+    Returns (q (B, S, Hq, hd), k (B, S, Hkv, hd), v (B, S, Hkv, hd)).
+    """
+    B, S, _ = x.shape
     hd = cfg.resolved_head_dim
     hq, hkv = cfg.num_heads, cfg.num_kv_heads
-    g = hq // hkv
-
     q = x @ p["wq"]
     k = x @ p["wk"]
     v = x @ p["wv"]
@@ -122,6 +123,22 @@ def attn_apply(p, x: jax.Array, cfg: ArchConfig, *, positions: jax.Array,
         k = rms_norm(k, p["k_norm"], cfg.norm_eps)
     q = rope(q, positions, cfg.rope_theta)
     k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_apply(p, x: jax.Array, cfg: ArchConfig, *, positions: jax.Array,
+               cache: dict | None = None, cache_len: jax.Array | None = None,
+               return_kv: bool = False):
+    """x: (B, S, d). Train/prefill: cache=None -> causal full attention
+    (return_kv=True hands back the fresh K/V so prefill can seed a cache).
+    Decode: S==1, cache holds (B, Smax, Hkv, hd); cache_len = #valid tokens.
+    Returns (y, new_cache)."""
+    B, S, d = x.shape
+    hd = cfg.resolved_head_dim
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    g = hq // hkv
+
+    q, k, v = attn_qkv(p, x, cfg, positions=positions)
 
     scale = hd ** -0.5
     if cache is None:

@@ -40,9 +40,11 @@ def param_specs(cfg: ArchConfig):
 
 
 def forward(params, cfg: ArchConfig, inputs, *, positions=None,
-            caches=None, cache_len=None):
+            caches=None, cache_len=None, attn_override=None):
     """inputs: (B, S) int32 tokens, or (B, S, d) embeddings for stub
-    frontends. Returns (hidden (B, S, d), new_caches, aux)."""
+    frontends. Returns (hidden (B, S, d), new_caches, aux).
+    ``attn_override`` is threaded to ``T.stack_apply`` (clustered-KV
+    decode; see its docstring for the callable contract)."""
     from repro.models.sharding import constrain
     if inputs.ndim == 2:
         x = constrain(params["embed"]["w"][inputs], "dp", None, None)
@@ -53,7 +55,8 @@ def forward(params, cfg: ArchConfig, inputs, *, positions=None,
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     x, new_caches, aux = T.stack_apply(params["layers"], x, cfg,
                                        positions=positions, caches=caches,
-                                       cache_len=cache_len)
+                                       cache_len=cache_len,
+                                       attn_override=attn_override)
     x = L.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
     return x, new_caches, aux
 
@@ -77,14 +80,17 @@ def prefill_step(params, cfg: ArchConfig, inputs):
     return logits, new_caches
 
 
-def decode_step(params, cfg: ArchConfig, caches, cache_len, tokens):
+def decode_step(params, cfg: ArchConfig, caches, cache_len, tokens,
+                attn_override=None):
     """One decode step. tokens: (B, 1) ids or (B, 1, d) stub embeddings;
     cache_len: () int32 — tokens already in the cache. Returns
-    (logits (B, V), new_caches)."""
+    (logits (B, V), new_caches). ``attn_override`` swaps the attention
+    step per layer (see ``T.stack_apply``)."""
     B = tokens.shape[0]
     positions = jnp.full((B, 1), cache_len, jnp.int32)
     x, new_caches, _ = forward(params, cfg, tokens, positions=positions,
-                               caches=caches, cache_len=cache_len)
+                               caches=caches, cache_len=cache_len,
+                               attn_override=attn_override)
     logits = (x[:, -1] @ params["head"]["w"]).astype(jnp.float32)
     return logits, new_caches
 

@@ -87,15 +87,22 @@ def block_cache_spec(cfg: ArchConfig, mix: str):
 
 
 def block_apply(p, x, cfg: ArchConfig, mix: str, ffn: str, *, positions,
-                cache=None, cache_len=None):
-    """Returns (x, new_cache, aux_loss)."""
+                cache=None, cache_len=None, attn_override=None):
+    """Returns (x, new_cache, aux_loss).
+
+    ``attn_override``, when given, replaces ``L.attn_apply`` for attn
+    mixes: called as ``override(p_attn, h, positions=, cache=,
+    cache_len=) -> (y, new_cache)`` (the clustered-KV decode path).
+    """
     from repro.models.sharding import constrain
     x = constrain(x, "dp", None, None)
     aux = jnp.zeros((), jnp.float32)
     h = L.rms_norm(x, p["norm1"]["scale"], cfg.norm_eps)
     if mix == "attn":
-        y, new_cache = L.attn_apply(p["attn"], h, cfg, positions=positions,
-                                    cache=cache, cache_len=cache_len)
+        attn_fn = attn_override if attn_override is not None else \
+            functools.partial(L.attn_apply, cfg=cfg)
+        y, new_cache = attn_fn(p["attn"], h, positions=positions,
+                               cache=cache, cache_len=cache_len)
     elif mix == "mamba":
         y, new_cache = S.mamba_apply(p["mamba"], h, cfg, cache=cache)
     elif mix == "rwkv":
@@ -167,15 +174,23 @@ def stack_cache_spec(cfg: ArchConfig):
 
 
 def stack_apply(params_stack, x, cfg: ArchConfig, *, positions,
-                caches=None, cache_len=None):
+                caches=None, cache_len=None, attn_override=None):
     """params_stack: list (period) of period-stacked block params.
-    caches: matching list or None. Returns (x, new_caches, aux_total)."""
+    caches: matching list or None. Returns (x, new_caches, aux_total).
+
+    ``attn_override``: optional per-layer attention replacement,
+    called as ``override(global_layer, p_attn, h, positions=, cache=,
+    cache_len=) -> (y, new_cache)``. Because the override closes over a
+    concrete Python layer index, supplying one forces the per-layer
+    loop branch (the scan body cannot carry per-iteration closures) —
+    a decode-time path where HLO size is not a concern.
+    """
     plan = cfg.layer_plan()
     period = cfg.period()
     nper = cfg.num_layers // period
     has_cache = caches is not None
 
-    def body_fn(carry, xs):
+    def body_fn(carry, xs, layer0=None):
         (x, aux) = carry
         pslices = xs[0]
         cslices = xs[1] if has_cache else None
@@ -183,17 +198,20 @@ def stack_apply(params_stack, x, cfg: ArchConfig, *, positions,
         a_tot = aux
         for pos in range(period):
             mix, ffn = plan[pos]
+            override = None
+            if attn_override is not None and layer0 is not None \
+                    and mix == "attn":
+                override = functools.partial(attn_override, layer0 + pos)
             x, nc, a = block_apply(
                 pslices[pos], x, cfg, mix, ffn, positions=positions,
                 cache=cslices[pos] if has_cache else None,
-                cache_len=cache_len)
+                cache_len=cache_len, attn_override=override)
             a_tot = a_tot + a
             new_cs.append(nc if has_cache else {})
         return (x, a_tot), new_cs
 
-    fn = jax.checkpoint(body_fn) if cfg.remat else body_fn
-
-    if cfg.scan_layers and nper > 1:
+    if cfg.scan_layers and nper > 1 and attn_override is None:
+        fn = jax.checkpoint(body_fn) if cfg.remat else body_fn
         xs = (params_stack, caches) if has_cache else (params_stack,)
         (x, aux), new_caches = jax.lax.scan(fn, (x, jnp.zeros((), jnp.float32)),
                                             xs)
@@ -202,6 +220,9 @@ def stack_apply(params_stack, x, cfg: ArchConfig, *, positions,
         new_caches = [jax.tree.map(lambda a: jnp.zeros_like(a), c)
                       for c in caches] if has_cache else None
         for li in range(nper):
+            fn = functools.partial(body_fn, layer0=li * period)
+            if cfg.remat:
+                fn = jax.checkpoint(fn)
             pslice = jax.tree.map(lambda a: a[li], params_stack)
             cslice = jax.tree.map(lambda a: a[li], caches) if has_cache else None
             xs = (pslice, cslice) if has_cache else (pslice,)

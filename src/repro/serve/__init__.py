@@ -23,13 +23,25 @@ from repro.serve.engine import (  # noqa: F401
     ClusterServer,
     pad_ladder,
 )
+from repro.serve.kv_cluster import (  # noqa: F401
+    KVState,
+    OnlineKVCluster,
+    clustered_attention,
+    clustered_decode,
+    ema_update,
+)
 from repro.serve.registry import ModelRecord, ModelRegistry  # noqa: F401
 
 #: the supported serving surface (sorted; locked by tests/test_api_surface.py)
 __all__ = [
     "Assignment",
     "ClusterServer",
+    "KVState",
     "ModelRecord",
     "ModelRegistry",
+    "OnlineKVCluster",
+    "clustered_attention",
+    "clustered_decode",
+    "ema_update",
     "pad_ladder",
 ]

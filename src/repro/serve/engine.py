@@ -42,7 +42,7 @@ import functools
 import queue
 import threading
 import time
-from concurrent.futures import Future
+from concurrent.futures import Future, InvalidStateError
 
 import jax
 import jax.numpy as jnp
@@ -225,6 +225,12 @@ class ClusterServer:
     micro-batch is served by exactly one model version (the registry
     snapshot taken at flush time), so a ``swap()`` mid-stream is atomic:
     zero dropped requests, zero mixed batches.
+
+    Failure contract: a serve step that raises resolves exactly that
+    micro-batch's futures with the exception and the worker keeps
+    serving; an error that kills the worker itself resolves EVERY
+    outstanding future with it and makes further ``submit`` calls
+    raise. Futures always resolve — callers never need timeouts.
     """
 
     def __init__(self, model_or_ckpt, *, probes: int | None = None,
@@ -274,6 +280,8 @@ class ClusterServer:
                                                     probes=probes)
         self._queue: queue.Queue = queue.Queue()
         self._inflight = None
+        self._pending: list[_Request] = []   # worker-owned accumulation
+        self._fatal: BaseException | None = None
         self._closed = False
         self._stats_lock = threading.Lock()
         self._stats = {"submitted": 0, "completed": 0, "failed": 0,
@@ -311,6 +319,8 @@ class ClusterServer:
         """
         if self._closed:
             raise RuntimeError("server is closed")
+        if self._fatal is not None:
+            raise RuntimeError("serving worker died") from self._fatal
         if not isinstance(parts, (tuple, list)):
             parts = (parts,)
         if len(parts) != self._arity:
@@ -330,6 +340,14 @@ class ClusterServer:
         with self._stats_lock:
             self._stats["submitted"] += 1
         self._queue.put(_Request(parts, n, fut, time.monotonic()))
+        if self._fatal is not None and not fut.done():
+            # lost the race with a concurrent worker death: the drain in
+            # _fail may have missed this request, so resolve it here
+            # (never hang a future)
+            try:
+                fut.set_exception(RuntimeError("serving worker died"))
+            except InvalidStateError:
+                pass  # _fail got it first
         return fut
 
     def swap(self, model_or_ckpt, *, step: int | None = None) -> int:
@@ -394,8 +412,47 @@ class ClusterServer:
     # -- worker loop ---------------------------------------------------------
 
     def _run(self) -> None:
-        pending: list[_Request] = []
-        rows = 0
+        """Worker entry: the serve loop behind a fatal-error backstop.
+
+        Per-batch errors (a failing jitted step, a poisoned model) are
+        contained by ``_flush``/``_retire`` — the batch's futures get
+        the exception, the worker keeps serving. Anything that still
+        escapes the loop is a worker-killing bug; ``_fail`` then
+        resolves EVERY outstanding future (in flight, pending, queued)
+        with the error so no ``submit`` ever hangs, and subsequent
+        submits raise instead of queueing into a dead loop.
+        """
+        try:
+            self._serve_loop()
+        except BaseException as e:   # noqa: BLE001 — fatal backstop
+            self._fail(e)
+
+    def _fail(self, exc: BaseException) -> None:
+        """Resolve every outstanding future with ``exc``; poison submit."""
+        self._fatal = exc
+        doomed = list(self._pending)
+        self._pending.clear()
+        if self._inflight is not None:
+            doomed.extend(self._inflight[0])
+            self._inflight = None
+        while True:
+            try:
+                item = self._queue.get_nowait()
+            except queue.Empty:
+                break
+            if item is not _CLOSE:
+                doomed.append(item)
+        for r in doomed:
+            try:
+                r.future.set_exception(exc)
+            except InvalidStateError:
+                pass
+        with self._stats_lock:
+            self._stats["failed"] += len(doomed)
+
+    def _serve_loop(self) -> None:
+        pending = self._pending
+        rows = sum(r.n for r in pending)
         closing = False
         while not closing:
             # drain everything already queued before deciding to flush —
@@ -468,8 +525,11 @@ class ClusterServer:
             taken += take[-1].n
         if not take:  # can't happen while submit() bounds n; be safe
             return rows
-        rec = self.registry.current(self.name)
         try:
+            # registry snapshot INSIDE the per-batch guard: a failing
+            # registry (or a poisoned record) fails this batch's futures
+            # and the worker keeps serving — it must never kill the loop
+            rec = self.registry.current(self.name)
             host = tuple(
                 None if take[0].parts[i] is None else
                 np.concatenate([r.parts[i] for r in take], axis=0)

@@ -1,0 +1,483 @@
+"""Online KV-cache clustering inside an autoregressive decode loop.
+
+GEEK as live infrastructure (DESIGN.md §14): instead of attending to
+all n cached keys, the decode step attends to k* SILK-discovered key
+centroids, each weighted by its cluster mass — attention cost drops
+from O(n) to O(k*) per step while the raw cache is retained for
+refreshes and the exact fallback. Three cooperating mechanisms:
+
+- **Routing.** Every newly-generated key is assigned to a centroid by
+  the model's own jitted ``predict`` — the probed sub-linear path when
+  k* is large (``probes=``/``probe_min_k=``), exact otherwise.
+- **Streaming center updates.** Each routed key drifts its centroid by
+  an exponential moving average (``ema_update`` — clusters that receive
+  no mass are bit-identically untouched); every ``refresh_every`` steps
+  a full SILK re-fit re-buckets the cache, which can grow or shrink k*
+  and rebuilds the ``CenterIndex`` (``core.model.update_centers`` keeps
+  the index intentionally stale between refreshes).
+- **Clustered attention.** ``softmax(q·c/√d + log mass) @ v_centroids``
+  is mathematically per-key attention with every key/value replaced by
+  its centroid, so the approximation error obeys the closed-form bound
+  of ``attention_error_bound`` (asserted in tests). It rides the
+  ``flash_attention`` Pallas kernel via one augmented feature dimension
+  (``kernels.flash_attention.flash_centroid_attention``) with a pure
+  jnp path as the CPU default, and ``clustered_decode(mode="exact")``
+  is the exact-attention fallback knob (same harness, no override).
+
+The in-flight token's own K/V rides along unclustered (appended with
+log-mass 0), so the newest position is always exact; it joins a cluster
+via ``update`` immediately after the step.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import GEEK, DenseData
+from repro.core.geek import GeekConfig
+from repro.core.model import GeekModel, predict, update_centers
+
+
+def default_kv_config(k_max: int = 64) -> GeekConfig:
+    """A GeekConfig sized for per-head KV clustering (small d, small n).
+
+    ``delta=1`` keeps SILK's seeding threshold permissive — per-head key
+    sets are a few hundred to a few thousand rows, not the paper's
+    massive-data regime — and ``k_max`` caps the attention cost per
+    step, which is what steers the compression ratio.
+    """
+    return GeekConfig(m=16, t=32, silk_l=5, delta=1, k_max=k_max,
+                      pair_cap=8192)
+
+
+class KVState(NamedTuple):
+    """The jit-facing snapshot of clustered KV state for one layer.
+
+    Arrays lead with the kv-head axis: ``centers``/``v_cent`` are
+    (Hkv, K, hd) key/value centroids and ``log_mass`` is (Hkv, K) with
+    ``-1e30`` marking dead centroid rows (matching the flash kernel's
+    mask constant). A NamedTuple, hence a pytree — it crosses the jit
+    boundary of the decode step as a plain argument.
+    """
+
+    centers: jax.Array
+    v_cent: jax.Array
+    log_mass: jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("ema",))
+def ema_update(centers, radius, mass, v_cent, v_radius, keys, values,
+               labels, *, ema: float):
+    """One streaming EMA step over a batch of routed keys/values.
+
+    Per cluster l receiving m_l of the batch rows, the centroid moves
+    ``c_l ← (1-ema)^{m_l} c_l + (1-(1-ema)^{m_l}) mean_l`` — the exact
+    result of folding the rows in one at a time when they coincide, and
+    the standard batch approximation otherwise (decode feeds one row
+    per step, where it is exact). Clusters with m_l == 0 are returned
+    **bit-identically** (the mass-0-is-identity property, tested by
+    hypothesis). Radii stay true upper bounds: both radius arrays grow
+    by the centroid drift (triangle inequality covers previously
+    absorbed points) and by the new rows' distances.
+
+    Parameters
+    ----------
+    centers, v_cent : (K, d) jax.Array
+        Current key / value centroids.
+    radius, v_radius, mass : (K,) jax.Array
+        Current key radius, value radius, and cluster mass.
+    keys, values : (n, d) jax.Array
+        The new rows, already routed.
+    labels : (n,) int32 jax.Array
+        Routing result (``predict`` labels).
+    ema : float
+        Per-row drift rate in (0, 1]; static (baked into the trace).
+
+    Returns
+    -------
+    (centers, radius, mass, v_cent, v_radius)
+        Updated arrays, same shapes/dtypes.
+    """
+    k_max = centers.shape[0]
+    f32 = jnp.float32
+    m_new = jnp.zeros((k_max,), f32).at[labels].add(1.0)
+    hit = m_new > 0
+    safe = jnp.maximum(m_new, 1.0)[:, None]
+    kmean = jnp.zeros_like(centers).at[labels].add(keys) / safe
+    vmean = jnp.zeros_like(v_cent).at[labels].add(values) / safe
+    decay = jnp.power(1.0 - ema, m_new)[:, None]
+    c_new = jnp.where(hit[:, None], centers * decay + (1.0 - decay) * kmean,
+                      centers)
+    v_new = jnp.where(hit[:, None], v_cent * decay + (1.0 - decay) * vmean,
+                      v_cent)
+    drift_k = jnp.linalg.norm(c_new - centers, axis=-1)
+    drift_v = jnp.linalg.norm(v_new - v_cent, axis=-1)
+    seg_k = jnp.zeros((k_max,), f32).at[labels].max(
+        jnp.linalg.norm(keys - c_new[labels], axis=-1))
+    seg_v = jnp.zeros((k_max,), f32).at[labels].max(
+        jnp.linalg.norm(values - v_new[labels], axis=-1))
+    r_new = jnp.where(hit, jnp.maximum(radius + drift_k, seg_k), radius)
+    vr_new = jnp.where(hit, jnp.maximum(v_radius + drift_v, seg_v), v_radius)
+    return c_new, r_new, mass + m_new, v_new, vr_new
+
+
+@jax.jit
+def _value_stats(labels, values, valid):
+    """Per-cluster (mass, value centroid, value radius) from fit labels."""
+    k_max = valid.shape[0]
+    f32 = jnp.float32
+    mass = jnp.zeros((k_max,), f32).at[labels].add(1.0)
+    v_cent = (jnp.zeros((k_max, values.shape[1]), f32).at[labels].add(values)
+              / jnp.maximum(mass, 1.0)[:, None])
+    v_radius = jnp.zeros((k_max,), f32).at[labels].max(
+        jnp.linalg.norm(values - v_cent[labels], axis=-1))
+    return mass, v_cent, v_radius
+
+
+class OnlineKVCluster:
+    """Streaming GEEK clustering of one attention head's KV stream.
+
+    Owns a ``GeekModel`` over the head's post-RoPE keys plus the value
+    side (per-cluster mass / value centroid / value radius) that the
+    clustered-attention step needs. ``start`` fits on the prefill,
+    ``update`` routes + EMA-drifts per decode step, ``refresh`` re-fits
+    SILK on the full cache (growing/shrinking k* and rebuilding the
+    center index). The raw cache stays with the caller — this class
+    holds only the O(k_max) summary.
+    """
+
+    def __init__(self, gcfg: GeekConfig | None = None, *, ema: float = 0.1,
+                 probes: int | None = None, probe_min_k: int = 256,
+                 key: jax.Array | None = None):
+        self.gcfg = default_kv_config() if gcfg is None else gcfg
+        if not 0.0 < ema <= 1.0:
+            raise ValueError(f"ema must be in (0, 1], got {ema}")
+        self.ema = float(ema)
+        self.probes = probes
+        self.probe_min_k = int(probe_min_k)
+        self._base_key = jax.random.PRNGKey(0) if key is None else key
+        self._fits = 0
+        self.model: GeekModel | None = None
+        self.mass = self.v_cent = self.v_radius = None
+        self.v_max = 0.0
+        self.pending = 0          # rows absorbed by EMA since the last fit
+        self.refreshes = 0
+
+    @property
+    def k_star(self) -> int:
+        """Discovered number of live clusters (0 before ``start``)."""
+        return self._k_star if self.model is not None else 0
+
+    def _fit(self, keys: jax.Array, values: jax.Array) -> None:
+        """(Re)fit GEEK on the full key set; derive the value side."""
+        self._fits += 1
+        est = GEEK(self.gcfg)
+        self.model = est.fit(DenseData(jnp.asarray(keys, jnp.float32)),
+                             jax.random.fold_in(self._base_key, self._fits))
+        self._k_star = int(self.model.k_star)
+        values = jnp.asarray(values, jnp.float32)
+        self.mass, self.v_cent, self.v_radius = _value_stats(
+            est.result_.labels, values, self.model.center_valid)
+        self.v_max = float(jnp.max(jnp.linalg.norm(values, axis=-1)))
+        self.pending = 0
+
+    def start(self, keys: jax.Array, values: jax.Array) -> None:
+        """Initial fit on the prefill's (n, hd) keys/values."""
+        self._fit(keys, values)
+
+    def route(self, keys: jax.Array) -> jax.Array:
+        """Assign (n, hd) keys to centroids via the model's ``predict``.
+
+        Uses the sub-linear probed path when the model has an index and
+        k* has grown past ``probe_min_k`` (the empty-probe exact
+        fallback keeps every key labeled); the exact scan otherwise.
+        """
+        probed = (self.probes is not None and self.model.index_tables > 0
+                  and self._k_star >= self.probe_min_k)
+        labels, _ = predict(self.model, jnp.asarray(keys, jnp.float32),
+                            probes=self.probes if probed else None)
+        return labels
+
+    def update(self, keys: jax.Array, values: jax.Array) -> jax.Array:
+        """Route a batch and EMA-drift the hit centroids; returns labels.
+
+        The ``CenterIndex`` is deliberately left stale (drift only
+        degrades probed recall, never correctness — candidates are
+        scored with exact distances); ``refresh`` rebuilds it.
+        """
+        keys = jnp.asarray(keys, jnp.float32)
+        values = jnp.asarray(values, jnp.float32)
+        labels = self.route(keys)
+        centers, radius, self.mass, self.v_cent, self.v_radius = ema_update(
+            self.model.centers, self.model.radius, self.mass, self.v_cent,
+            self.v_radius, keys, values, labels, ema=self.ema)
+        self.model = update_centers(self.model, centers, radius=radius)
+        if keys.shape[0]:
+            self.v_max = max(self.v_max, float(
+                jnp.max(jnp.linalg.norm(values, axis=-1))))
+        self.pending += int(keys.shape[0])
+        return labels
+
+    def refresh(self, keys: jax.Array, values: jax.Array) -> bool:
+        """SILK re-bucketed refit on the full cached (n, hd) keys/values.
+
+        Re-discovers k* (it can grow or shrink with the sequence — the
+        paper's k-free seeding is what makes this a non-event) and
+        rebuilds the ``CenterIndex``. When **zero** rows were absorbed
+        since the last fit this is a bit-for-bit no-op: the call
+        returns ``False`` without touching any state (tested by
+        hypothesis).
+        """
+        if self.pending == 0:
+            return False
+        self.refreshes += 1
+        self._fit(keys, values)
+        return True
+
+    def head_state(self) -> KVState:
+        """This head's (K, hd) attention-facing snapshot (no head axis)."""
+        live = self.model.center_valid & (self.mass > 0)
+        log_mass = jnp.where(live, jnp.log(jnp.maximum(self.mass, 1e-9)),
+                             -1e30)
+        return KVState(self.model.centers.astype(jnp.float32),
+                       self.v_cent, log_mass.astype(jnp.float32))
+
+    def error_bound(self, q_norm: float) -> float:
+        """Closed-form bound on the clustered-attention output error.
+
+        For any query with ``‖q‖ ≤ q_norm``, the L2 (hence also ∞-norm)
+        distance between exact per-key attention and this head's
+        clustered attention is at most ``r_v + (e^{2ε} − 1)·v_max`` with
+        ``ε = q_norm · r_k / √hd``: clustered attention IS per-key
+        attention with keys/values moved to their centroids, scores
+        move by at most ε, softmax weights by e^{±2ε}, and values by at
+        most the value radius. See DESIGN.md §14 for the derivation.
+        """
+        live = self.model.center_valid & (self.mass > 0)
+        r_k = float(jnp.max(jnp.where(live, self.model.radius, 0.0)))
+        r_v = float(jnp.max(jnp.where(live, self.v_radius, 0.0)))
+        hd = self.model.centers.shape[1]
+        eps = q_norm * r_k / math.sqrt(hd)
+        return r_v + (math.exp(2.0 * eps) - 1.0) * self.v_max
+
+
+def stack_heads(heads) -> KVState:
+    """Stack per-head ``head_state`` snapshots into one layer ``KVState``.
+
+    All heads must share ``k_max`` (same GeekConfig), so the stacked
+    arrays are rectangular: (Hkv, K, hd) / (Hkv, K).
+    """
+    return jax.tree.map(lambda *a: jnp.stack(a),
+                        *[h.head_state() for h in heads])
+
+
+def clustered_attention(q: jax.Array, state: KVState, *,
+                        extra_k: jax.Array | None = None,
+                        extra_v: jax.Array | None = None,
+                        use_flash: bool = False) -> jax.Array:
+    """Mass-weighted attention over centroids in the layer layout.
+
+    Parameters
+    ----------
+    q : (B, S, Hq, hd) jax.Array
+        Post-RoPE queries (the layout ``layers.attn_qkv`` produces).
+    state : KVState
+        (Hkv, K, hd) centroid snapshot, shared across the batch.
+    extra_k, extra_v : (B, S, Hkv, hd) jax.Array or None
+        Unclustered rows appended with log-mass 0 — the decode step's
+        own K/V, so the newest token is always attended exactly.
+        Requires S == 1 (no causal structure among extras).
+    use_flash : bool
+        Route through ``ops.flash_centroid_attention`` (compiled on
+        TPU, interpret on CPU, jnp fallback elsewhere) instead of the
+        pure-jnp reference path.
+
+    Returns
+    -------
+    jax.Array
+        (B, S, Hq, hd) attention output in q.dtype.
+    """
+    B, S, hq, hd = q.shape
+    hkv, K, _ = state.centers.shape
+    c = jnp.broadcast_to(state.centers.astype(jnp.float32), (B, hkv, K, hd))
+    vc = jnp.broadcast_to(state.v_cent.astype(jnp.float32), (B, hkv, K, hd))
+    lm = jnp.broadcast_to(state.log_mass.astype(jnp.float32), (B, hkv, K))
+    if extra_k is not None:
+        if S != 1:
+            raise ValueError("extra_k/extra_v require S == 1 (decode step)")
+        c = jnp.concatenate(
+            [c, extra_k.astype(jnp.float32).transpose(0, 2, 1, 3)], axis=2)
+        vc = jnp.concatenate(
+            [vc, extra_v.astype(jnp.float32).transpose(0, 2, 1, 3)], axis=2)
+        lm = jnp.concatenate([lm, jnp.zeros((B, hkv, S), jnp.float32)],
+                             axis=2)
+    qt = q.transpose(0, 2, 1, 3)
+    if use_flash:
+        from repro.kernels import ops as kops
+        o = kops.flash_centroid_attention(qt, c, vc, lm)
+    else:
+        from repro.kernels import ref
+        o = ref.centroid_attention_ref(qt, c, vc, lm)
+    return o.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def make_clustered_step(cfg, *, use_flash: bool = False):
+    """Build the jitted clustered decode step for an ArchConfig.
+
+    The returned ``step(params, caches, cache_len, tokens, states)``
+    is ``models.model.decode_step`` with every attention layer's
+    softmax-over-cache replaced by ``clustered_attention`` over
+    ``states[layer]`` (a ``{global_layer: KVState}`` dict crossing the
+    jit boundary as a pytree). The fresh K/V are still appended to the
+    raw cache — refreshes and the exact fallback need them — and ride
+    into the softmax as the exact ``extra_k``/``extra_v`` rows.
+    """
+    from repro.models import layers as L
+    from repro.models import model as MODEL
+
+    @jax.jit
+    def step(params, caches, cache_len, tokens, states):
+        """One clustered decode step -> (logits (B, V), new_caches)."""
+        def override(layer, p, h, *, positions, cache, cache_len):
+            """Per-layer attention: cache append + centroid softmax."""
+            q, k, v = L.attn_qkv(p, h, cfg, positions=positions)
+            kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k,
+                                                     cache_len, 1)
+            vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v,
+                                                     cache_len, 1)
+            o = clustered_attention(q, states[layer], extra_k=k, extra_v=v,
+                                    use_flash=use_flash)
+            B, S = h.shape[:2]
+            return (o.reshape(B, S, -1).astype(h.dtype) @ p["wo"],
+                    {"k": kc, "v": vc})
+
+        return MODEL.decode_step(params, cfg, caches, cache_len, tokens,
+                                 override)
+
+    return step
+
+
+def clustered_decode(params, cfg, tokens: jax.Array, prompt_len: int, *,
+                     mode: str = "clustered", gcfg: GeekConfig | None = None,
+                     ema: float = 0.1, refresh_every: int = 32,
+                     probes: int | None = None, probe_min_k: int = 256,
+                     use_flash: bool = False,
+                     key: jax.Array | None = None) -> dict:
+    """Teacher-forced decode with (or without) online KV clustering.
+
+    Prefills ``tokens[:, :prompt_len]`` with exact attention, fits one
+    ``OnlineKVCluster`` per (attention layer, kv head) on the prefill
+    cache, then decodes the remaining positions one step at a time:
+    clustered attention over the per-layer ``KVState`` snapshots,
+    routing + EMA updates after every step, a SILK refresh on the full
+    cache every ``refresh_every`` steps. ``mode="exact"`` runs the
+    identical harness through the standard ``decode_step`` — the
+    exact-attention fallback and the perplexity baseline.
+
+    Parameters
+    ----------
+    params, cfg
+        Model parameters and ``ArchConfig`` (single sequence: B == 1).
+    tokens : (1, total) int32 jax.Array
+        Token ids; positions ``prompt_len..total-1`` are scored.
+    prompt_len : int
+        Prefill length (0 < prompt_len < total).
+    mode : {"clustered", "exact"}
+        Attention path for the decode steps.
+    gcfg, ema, refresh_every, probes, probe_min_k, use_flash
+        Clustering knobs (see ``OnlineKVCluster`` / DESIGN.md §14);
+        ignored for ``mode="exact"``.
+    key : jax.Array or None
+        Base PRNG key for the per-head GEEK fits.
+
+    Returns
+    -------
+    dict
+        ``ppl``/``nll`` (teacher-forced, over the decoded span),
+        ``steps``, and for clustered mode ``mean_k_star``,
+        ``compression`` (final cache length / mean k*), ``refreshes``.
+    """
+    from repro.models import model as MODEL
+    from repro.models import transformer as T
+
+    if tokens.ndim != 2 or tokens.shape[0] != 1:
+        raise ValueError("clustered_decode is single-sequence (B == 1)")
+    if mode not in ("clustered", "exact"):
+        raise ValueError(f"unknown mode {mode!r}")
+    total = int(tokens.shape[1])
+    if not 0 < prompt_len < total:
+        raise ValueError(f"need 0 < prompt_len < {total}, got {prompt_len}")
+    key = jax.random.PRNGKey(0) if key is None else key
+
+    plan, period = cfg.layer_plan(), cfg.period()
+    nper = cfg.num_layers // period
+    attn_layers = [li * period + pos for li in range(nper)
+                   for pos in range(period) if plan[pos][0] == "attn"]
+    loc = {lyr: (lyr % period, lyr // period) for lyr in attn_layers}
+
+    caches = T.stack_cache_init(cfg, 1, total)
+    x, caches, _ = MODEL.forward(params, cfg, tokens[:, :prompt_len],
+                                 caches=caches,
+                                 cache_len=jnp.zeros((), jnp.int32))
+    logits = (x[:, -1] @ params["head"]["w"]).astype(jnp.float32)
+
+    clusterers: dict[int, list[OnlineKVCluster]] = {}
+    if mode == "clustered":
+        hkv = cfg.num_kv_heads
+        for lyr in attn_layers:
+            pos, li = loc[lyr]
+            heads = []
+            for h in range(hkv):
+                cl = OnlineKVCluster(
+                    gcfg, ema=ema, probes=probes, probe_min_k=probe_min_k,
+                    key=jax.random.fold_in(key, lyr * 1024 + h))
+                cl.start(caches[pos]["k"][li, 0, :prompt_len, h],
+                         caches[pos]["v"][li, 0, :prompt_len, h])
+                heads.append(cl)
+            clusterers[lyr] = heads
+        step_fn = make_clustered_step(cfg, use_flash=use_flash)
+    else:
+        @jax.jit
+        def step_fn(params, caches, cache_len, tokens):
+            """Exact decode step (the fallback/baseline path)."""
+            return MODEL.decode_step(params, cfg, caches, cache_len, tokens)
+
+    logp = []
+    toks_host = jax.device_get(tokens[0])
+    for t in range(prompt_len, total):
+        logp.append(float(jax.nn.log_softmax(logits[0])[toks_host[t]]))
+        cache_len = jnp.asarray(t, jnp.int32)
+        if mode == "clustered":
+            states = {lyr: stack_heads(clusterers[lyr])
+                      for lyr in attn_layers}
+            logits, caches = step_fn(params, caches, cache_len,
+                                     tokens[:, t:t + 1], states)
+            for lyr in attn_layers:
+                pos, li = loc[lyr]
+                for h, cl in enumerate(clusterers[lyr]):
+                    cl.update(caches[pos]["k"][li, 0, t, h][None],
+                              caches[pos]["v"][li, 0, t, h][None])
+            if (t - prompt_len + 1) % refresh_every == 0 and t + 1 < total:
+                for lyr in attn_layers:
+                    pos, li = loc[lyr]
+                    for h, cl in enumerate(clusterers[lyr]):
+                        cl.refresh(caches[pos]["k"][li, 0, :t + 1, h],
+                                   caches[pos]["v"][li, 0, :t + 1, h])
+        else:
+            logits, caches = step_fn(params, caches, cache_len,
+                                     tokens[:, t:t + 1])
+
+    nll = -sum(logp) / len(logp)
+    out = {"mode": mode, "nll": nll, "ppl": math.exp(nll),
+           "steps": len(logp)}
+    if mode == "clustered":
+        ks = [cl.k_star for heads in clusterers.values() for cl in heads]
+        out["mean_k_star"] = sum(ks) / len(ks)
+        out["compression"] = total / max(out["mean_k_star"], 1.0)
+        out["refreshes"] = sum(cl.refreshes for heads in clusterers.values()
+                               for cl in heads)
+    return out

@@ -223,19 +223,46 @@ def test_discovery_knob_validation_and_modes_agree():
                                   np.asarray(ic.result_.labels))
 
 
-def test_discovery_resolution_default_falls_back_silently():
+def test_discovery_resolution_default_falls_back_with_warning():
     """The default (discovery=None) routes the stock full-coverage
-    pipeline to 'sharded' and silently falls back to 'gathered' when a
-    reservoir subsamples or a non-bucket seeder is plugged in."""
+    pipeline to 'sharded' and falls back to 'gathered' when a reservoir
+    subsamples or a non-bucket seeder is plugged in — announcing the
+    plan change with a UserWarning instead of silently replicating the
+    reservoir on every device."""
+    import warnings as warnings_mod
     from repro.core.api import _resolve_discovery
     from repro import LSHBucketer, SILKSeeder
     b, s = LSHBucketer(), SILKSeeder()
-    assert _resolve_discovery(None, None, 1000, b, s) == "sharded"
-    assert _resolve_discovery(None, 1000, 1000, b, s) == "sharded"
-    assert _resolve_discovery(None, 500, 1000, b, s) == "gathered"
-    assert _resolve_discovery(None, None, 1000, b,
-                              KMeansPPSeeder(8)) == "gathered"
-    assert _resolve_discovery("gathered", None, 1000, b, s) == "gathered"
+    with warnings_mod.catch_warnings():
+        warnings_mod.simplefilter("error")   # sharded paths never warn
+        assert _resolve_discovery(None, None, 1000, b, s) == "sharded"
+        assert _resolve_discovery(None, 1000, 1000, b, s) == "sharded"
+    with pytest.warns(UserWarning, match="fell back to gathered"):
+        assert _resolve_discovery(None, 500, 1000, b, s) == "gathered"
+    with pytest.warns(UserWarning, match="fell back to gathered"):
+        assert _resolve_discovery(None, None, 1000, b,
+                                  KMeansPPSeeder(8)) == "gathered"
+    # explicit "gathered" acknowledges the plan: no warning
+    with warnings_mod.catch_warnings():
+        warnings_mod.simplefilter("error")
+        assert _resolve_discovery("gathered", None, 1000, b,
+                                  s) == "gathered"
+        assert _resolve_discovery("gathered", 500, 1000, b,
+                                  s) == "gathered"
+
+
+def test_discovery_fallback_warning_names_every_reason():
+    """The warning text is part of the contract: it names each blocking
+    reason and the acknowledge-to-silence knob."""
+    from repro.core.api import _resolve_discovery
+    from repro import LSHBucketer
+    with pytest.warns(UserWarning) as rec:
+        _resolve_discovery(None, 500, 1000, LSHBucketer(),
+                           KMeansPPSeeder(8))
+    msg = str(rec[0].message)
+    assert "seed_cap=500" in msg and "n=1000" in msg
+    assert "seeder" in msg
+    assert "discovery='gathered'" in msg
 
 
 def test_discovery_explicit_sharded_raises_with_named_reason():

@@ -34,8 +34,13 @@ REPRO_ALL = [
 REPRO_SERVE_ALL = [
     "Assignment",
     "ClusterServer",
+    "KVState",
     "ModelRecord",
     "ModelRegistry",
+    "OnlineKVCluster",
+    "clustered_attention",
+    "clustered_decode",
+    "ema_update",
     "pad_ladder",
 ]
 
@@ -68,6 +73,7 @@ REPRO_CORE_ALL = [
     "predict",
     "predict_probed",
     "silk_seeding",
+    "update_centers",
 ]
 
 

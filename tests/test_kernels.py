@@ -132,6 +132,24 @@ def test_flash_attention_sweep(B, Hq, Hkv, S, dh, causal, rng):
                                rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.parametrize("B,Hq,Hkv,S,K,dh", [(1, 4, 4, 1, 48, 32),
+                                             (2, 4, 2, 3, 100, 64),
+                                             (1, 3, 1, 40, 33, 16)])
+def test_flash_centroid_attention_sweep(B, Hq, Hkv, S, K, dh, rng):
+    """Augmented-dimension centroid attention vs the jnp oracle,
+    including GQA, ragged q/K lengths and dead (-1e30 log-mass) rows."""
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    q = jax.random.normal(k1, (B, Hq, S, dh), jnp.float32)
+    c = jax.random.normal(k2, (B, Hkv, K, dh), jnp.float32)
+    vc = jax.random.normal(k3, (B, Hkv, K, dh), jnp.float32)
+    lm = jnp.log(1.0 + 8.0 * jax.random.uniform(k4, (B, Hkv, K)))
+    lm = jnp.where(jnp.arange(K) < K - 5, lm, -1e30)   # 5 dead rows
+    o1 = ops.flash_centroid_attention(q, c, vc, lm, bq=32, bk=32)
+    o2 = ref.centroid_attention_ref(q, c, vc, lm)
+    np.testing.assert_allclose(np.array(o1), np.array(o2),
+                               rtol=2e-4, atol=2e-4)
+
+
 def test_flash_attention_bf16(rng):
     k1, k2, k3 = jax.random.split(rng, 3)
     q = jax.random.normal(k1, (1, 2, 64, 32), jnp.bfloat16)

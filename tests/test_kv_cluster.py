@@ -1,0 +1,446 @@
+"""Online KV-cache clustering (DESIGN.md §14).
+
+The contracts under test:
+
+- **Clustered attention is mass-weighted centroid attention.** The
+  layer-layout wrapper matches a hand-rolled softmax over live
+  centroids (dead ``log_mass = -1e30`` rows excluded), with the decode
+  step's own K/V riding along as exact extra rows, and the flash path
+  (Pallas interpret on CPU) matches the jnp reference.
+- **The closed-form error bound holds.** For queries of bounded norm,
+  ``‖exact − clustered‖₂ ≤ r_v + (e^{2ε} − 1)·v_max`` with
+  ``ε = ‖q‖·r_k/√hd`` — asserted empirically against exact per-key
+  attention on structured keys.
+- **Streaming updates are conservative.** ``ema_update`` returns
+  mass-0 clusters bit-identically (hypothesis), single-row updates
+  match the closed form, and radii stay true upper bounds on the
+  distance from every absorbed point to its (current) centroid.
+- **Refresh semantics.** ``refresh`` with zero absorbed rows is a
+  bit-for-bit no-op (hypothesis); with pending rows it re-fits,
+  re-discovers k*, and rebuilds the center index that ``update``
+  deliberately leaves stale.
+- **The decode harness.** ``clustered_decode`` runs both modes on a
+  tiny config, reports finite perplexity, compression > 1, and
+  actually refreshes.
+"""
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_arch
+from repro.core.model import predict, update_centers
+from repro.kernels import ref
+from repro.serve import (KVState, OnlineKVCluster, clustered_attention,
+                         clustered_decode, ema_update)
+from repro.serve.kv_cluster import default_kv_config, stack_heads
+
+HD = 16
+
+
+@functools.lru_cache(maxsize=None)
+def _fitted_head(n=384, hd=HD, k=6, seed=0):
+    """One OnlineKVCluster fitted on tight key/value blobs (cached).
+
+    Keys AND values are blob-structured so both radii are small and the
+    error bound is a meaningful (non-vacuous) number.
+    """
+    kc, kv, kk, kw = jax.random.split(jax.random.PRNGKey(seed), 4)
+    kcent = 4.0 * jax.random.normal(kc, (k, hd))
+    vcent = jax.random.normal(kv, (k, hd))
+    lab = jnp.arange(n) % k
+    keys = kcent[lab] + 0.05 * jax.random.normal(kk, (n, hd))
+    values = vcent[lab] + 0.05 * jax.random.normal(kw, (n, hd))
+    cl = OnlineKVCluster(default_kv_config(16), key=jax.random.PRNGKey(7))
+    cl.start(keys, values)
+    return cl, np.asarray(keys), np.asarray(values)
+
+
+def _manual_centroid_attention(q, centers, v_cent, log_mass):
+    """Hand-rolled oracle in numpy: softmax(q·c/√hd + log m) @ v_cent."""
+    q, centers = np.float64(q), np.float64(centers)
+    s = q @ centers.T / math.sqrt(q.shape[-1]) + np.float64(log_mass)
+    s -= s.max(axis=-1, keepdims=True)
+    w = np.exp(s)
+    w /= w.sum(axis=-1, keepdims=True)
+    return w @ np.float64(v_cent)
+
+
+def _exact_attention(q, keys, values):
+    """Exact per-key attention oracle in numpy (non-causal)."""
+    q, keys = np.float64(q), np.float64(keys)
+    s = q @ keys.T / math.sqrt(q.shape[-1])
+    s -= s.max(axis=-1, keepdims=True)
+    w = np.exp(s)
+    w /= w.sum(axis=-1, keepdims=True)
+    return w @ np.float64(values)
+
+
+# ---------------------------------------------------------------------------
+# clustered attention
+# ---------------------------------------------------------------------------
+
+def test_clustered_attention_matches_manual(rng):
+    """Layer-layout wrapper == the numpy oracle, including GQA."""
+    B, S, hq, hkv, K = 2, 5, 4, 2, 12
+    ks = jax.random.split(rng, 4)
+    state = KVState(jax.random.normal(ks[0], (hkv, K, HD)),
+                    jax.random.normal(ks[1], (hkv, K, HD)),
+                    jnp.log(1.0 + jax.random.uniform(ks[2], (hkv, K))))
+    q = jax.random.normal(ks[3], (B, S, hq, HD))
+    out = np.asarray(clustered_attention(q, state))
+    assert out.shape == (B, S, hq, HD)
+    for b in range(B):
+        for h in range(hq):
+            want = _manual_centroid_attention(
+                np.asarray(q[b, :, h]), np.asarray(state.centers[h // 2]),
+                np.asarray(state.v_cent[h // 2]),
+                np.asarray(state.log_mass[h // 2]))
+            np.testing.assert_allclose(out[b, :, h], want, atol=1e-5)
+
+
+def test_clustered_attention_dead_rows_excluded(rng):
+    """-1e30 log-mass rows contribute nothing, whatever their centers."""
+    hkv, K, live = 1, 8, 3
+    ks = jax.random.split(rng, 3)
+    c = jax.random.normal(ks[0], (hkv, K, HD))
+    v = jax.random.normal(ks[1], (hkv, K, HD))
+    lm = jnp.where(jnp.arange(K) < live, 0.0, -1e30)[None, :]
+    q = jax.random.normal(ks[2], (1, 3, 1, HD))
+    full = clustered_attention(q, KVState(c, v, lm))
+    # poison the dead rows: output must not move
+    poisoned = KVState(c.at[:, live:].set(1e3), v.at[:, live:].set(-1e3), lm)
+    np.testing.assert_allclose(np.asarray(full),
+                               np.asarray(clustered_attention(q, poisoned)),
+                               atol=1e-6)
+    trimmed = clustered_attention(q, KVState(c[:, :live], v[:, :live],
+                                             lm[:, :live]))
+    np.testing.assert_allclose(np.asarray(full), np.asarray(trimmed),
+                               atol=1e-5)
+
+
+def test_clustered_attention_extras_are_exact_rows(rng):
+    """extra_k/extra_v behave as appended keys with log-mass 0."""
+    B, hq, hkv, K = 2, 2, 1, 10
+    ks = jax.random.split(rng, 5)
+    state = KVState(jax.random.normal(ks[0], (hkv, K, HD)),
+                    jax.random.normal(ks[1], (hkv, K, HD)),
+                    jnp.zeros((hkv, K)))
+    q = jax.random.normal(ks[2], (B, 1, hq, HD))
+    ek = jax.random.normal(ks[3], (B, 1, hkv, HD))
+    ev = jax.random.normal(ks[4], (B, 1, hkv, HD))
+    out = np.asarray(clustered_attention(q, state, extra_k=ek, extra_v=ev))
+    for b in range(B):
+        for h in range(hq):
+            want = _manual_centroid_attention(
+                np.asarray(q[b, :, h]),
+                np.concatenate([np.asarray(state.centers[0]),
+                                np.asarray(ek[b, :, 0])]),
+                np.concatenate([np.asarray(state.v_cent[0]),
+                                np.asarray(ev[b, :, 0])]),
+                np.concatenate([np.zeros(K), np.zeros(1)]))
+            np.testing.assert_allclose(out[b, :, h], want, atol=1e-5)
+    with pytest.raises(ValueError, match="S == 1"):
+        clustered_attention(jax.random.normal(ks[2], (B, 2, hq, HD)), state,
+                            extra_k=jnp.zeros((B, 2, hkv, HD)),
+                            extra_v=jnp.zeros((B, 2, hkv, HD)))
+
+
+def test_clustered_attention_flash_matches_ref(rng):
+    """use_flash (Pallas interpret on CPU) == the jnp reference path."""
+    B, S, hq, hkv, K = 1, 1, 2, 1, 24
+    ks = jax.random.split(rng, 4)
+    lm = jnp.where(jnp.arange(K) < 20, 0.5, -1e30)[None, :]
+    state = KVState(jax.random.normal(ks[0], (hkv, K, HD)),
+                    jax.random.normal(ks[1], (hkv, K, HD)), lm)
+    q = jax.random.normal(ks[2], (B, S, hq, HD))
+    ek = jax.random.normal(ks[3], (B, S, hkv, HD))
+    o_ref = clustered_attention(q, state, extra_k=ek, extra_v=ek)
+    o_fl = clustered_attention(q, state, extra_k=ek, extra_v=ek,
+                               use_flash=True)
+    np.testing.assert_allclose(np.asarray(o_fl), np.asarray(o_ref),
+                               atol=2e-5)
+
+
+def test_error_bound_holds():
+    """‖exact − clustered‖₂ ≤ r_v + (e^{2ε}−1)·v_max on structured KV."""
+    cl, keys, values = _fitted_head()
+    state = stack_heads([cl])
+    q_norm = 1.0
+    q = jax.random.normal(jax.random.PRNGKey(3), (1, 8, 1, HD))
+    q = q / jnp.linalg.norm(q, axis=-1, keepdims=True) * q_norm
+    bound = cl.error_bound(q_norm)
+    got = np.asarray(clustered_attention(q, state))[0, :, 0]
+    want = _exact_attention(np.asarray(q[0, :, 0]), keys, values)
+    err = np.linalg.norm(got - want, axis=-1)
+    assert np.all(np.isfinite(err))
+    assert float(err.max()) <= bound + 1e-6
+    # the bound must be a *useful* number on tight blobs, not just finite
+    assert bound < float(np.linalg.norm(values, axis=-1).max())
+
+
+def test_error_bound_survives_streaming_updates(rng):
+    """The bound still holds after EMA drift (radii grew to cover it)."""
+    cl, keys, values = _fitted_head(seed=1)
+    routed = []
+    for i in range(16):
+        kk, kv2 = jax.random.split(jax.random.fold_in(rng, i))
+        nk = keys[i % len(keys)] + 0.1 * np.asarray(
+            jax.random.normal(kk, (HD,)))
+        nv = values[i % len(values)] + 0.1 * np.asarray(
+            jax.random.normal(kv2, (HD,)))
+        cl.update(nk[None], nv[None])
+        routed.append((nk, nv))
+    all_k = np.concatenate([keys, np.stack([r[0] for r in routed])])
+    all_v = np.concatenate([values, np.stack([r[1] for r in routed])])
+    # NB: the bound covers absorbed points; EMA keeps mass/v_cent only
+    # approximately consistent between refreshes, so allow small slack
+    q = jax.random.normal(jax.random.PRNGKey(9), (1, 4, 1, HD))
+    q = q / jnp.linalg.norm(q, axis=-1, keepdims=True)
+    got = np.asarray(clustered_attention(q, stack_heads([cl])))[0, :, 0]
+    want = _exact_attention(np.asarray(q[0, :, 0]), all_k, all_v)
+    err = np.linalg.norm(got - want, axis=-1)
+    assert float(err.max()) <= cl.error_bound(1.0) + 0.05
+
+
+# ---------------------------------------------------------------------------
+# streaming updates: ema_update / radii / update_centers
+# ---------------------------------------------------------------------------
+
+def test_ema_update_single_row_closed_form(rng):
+    """One routed row: c ← (1-ema)c + ema·k, mass += 1, radii cover it."""
+    K, ema = 5, 0.25
+    ks = jax.random.split(rng, 4)
+    c = jax.random.normal(ks[0], (K, HD))
+    v = jax.random.normal(ks[1], (K, HD))
+    r = jnp.abs(jax.random.normal(ks[2], (K,)))
+    m = jnp.ones((K,))
+    key_row = jax.random.normal(ks[3], (1, HD))
+    lab = jnp.array([2], jnp.int32)
+    c2, r2, m2, v2, vr2 = ema_update(c, r, m, v, r, key_row, key_row, lab,
+                                     ema=ema)
+    np.testing.assert_allclose(
+        np.asarray(c2[2]), np.asarray((1 - ema) * c[2] + ema * key_row[0]),
+        atol=1e-6)
+    assert float(m2[2]) == float(m[2]) + 1.0
+    dist = float(jnp.linalg.norm(key_row[0] - c2[2]))
+    assert float(r2[2]) >= dist - 1e-6
+    assert float(vr2[2]) >= float(jnp.linalg.norm(key_row[0] - v2[2])) - 1e-6
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 6), st.integers(2, 8))
+@settings(deadline=None)
+def test_ema_update_mass0_is_identity(seed, n, k):
+    """Clusters receiving no rows come back bit-identical (property)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    K = k + 3                                   # rows 0..k-1 hit, k.. miss
+    c = jax.random.normal(ks[0], (K, 8))
+    v = jax.random.normal(ks[1], (K, 8))
+    r = jnp.abs(jax.random.normal(ks[2], (K,)))
+    vr = jnp.abs(jax.random.normal(ks[3], (K,)))
+    m = jnp.abs(jax.random.normal(ks[4], (K,)))
+    lab = jax.random.randint(ks[5], (n,), 0, k)
+    keys = jax.random.normal(ks[5], (n, 8))
+    c2, r2, m2, v2, vr2 = ema_update(c, r, m, v, vr, keys, keys, lab,
+                                     ema=0.3)
+    hit = np.zeros(K, bool)
+    hit[np.asarray(lab)] = True
+    for old, new in ((c, c2), (r, r2), (v, v2), (vr, vr2)):
+        np.testing.assert_array_equal(np.asarray(old)[~hit],
+                                      np.asarray(new)[~hit])
+    np.testing.assert_array_equal(np.asarray(m)[~hit],
+                                  np.asarray(m2)[~hit])
+    assert float(jnp.sum(m2 - m)) == pytest.approx(n)
+
+
+def test_radius_stays_upper_bound_under_updates(rng):
+    """Every absorbed point stays within radius of its (drifted) center."""
+    cl, keys, values = _fitted_head(seed=2)
+    labels0, _ = predict(cl.model, jnp.asarray(keys))
+    absorbed = [(keys, np.asarray(labels0))]
+    for i in range(12):
+        nk = np.asarray(3.0 * jax.random.normal(
+            jax.random.fold_in(rng, 100 + i), (2, HD)))
+        lab = cl.update(nk, nk)
+        absorbed.append((nk, np.asarray(lab)))
+    centers = np.asarray(cl.model.centers)
+    radius = np.asarray(cl.model.radius)
+    for pts, lab in absorbed:
+        d = np.linalg.norm(pts - centers[lab], axis=-1)
+        assert np.all(d <= radius[lab] + 1e-4)
+
+
+def test_update_centers_rederives_caches(rng):
+    """New centers flow into prediction; caches/index follow the contract."""
+    cl, _, _ = _fitted_head(seed=3)
+    model = cl.model
+    shift = 0.5 * jax.random.normal(rng, model.centers.shape)
+    moved = update_centers(model, model.centers + shift)
+    q = jax.random.normal(jax.random.fold_in(rng, 1), (32, HD))
+    lab, dist = predict(moved, q)
+    # exact path == brute force over the NEW centers (valid rows only)
+    c = np.where(np.asarray(moved.center_valid)[:, None],
+                 np.asarray(moved.centers), np.inf)
+    d = np.linalg.norm(np.asarray(q)[:, None] - c[None], axis=-1)
+    np.testing.assert_array_equal(np.asarray(lab), d.argmin(axis=1))
+    if model.packed_centers is not None:   # hamming cache (coded models)
+        assert not np.array_equal(np.asarray(moved.packed_centers),
+                                  np.asarray(model.packed_centers))
+    # index intentionally stale by default; rebuilt only on request
+    assert moved.center_index is model.center_index
+    rebuilt = update_centers(model, model.centers + shift,
+                             rebuild_index=True)
+    if model.index_tables > 0:
+        assert rebuilt.center_index is not model.center_index
+    with pytest.raises(ValueError, match="centers"):
+        update_centers(model, model.centers[:, :-1])
+
+
+# ---------------------------------------------------------------------------
+# OnlineKVCluster lifecycle: start / route / refresh
+# ---------------------------------------------------------------------------
+
+def test_start_fits_and_k_star_positive():
+    cl, keys, values = _fitted_head(seed=4)
+    assert 0 < cl.k_star <= cl.gcfg.k_max
+    assert cl.pending == 0 and cl.refreshes == 0
+    state = cl.head_state()
+    live = int(np.sum(np.asarray(state.log_mass) > -1e29))
+    assert live == cl.k_star
+    # masses over live clusters account for every prefill row
+    mass = np.exp(np.asarray(state.log_mass)[
+        np.asarray(state.log_mass) > -1e29])
+    assert mass.sum() == pytest.approx(len(keys))
+
+
+def test_route_exact_matches_predict():
+    cl, keys, _ = _fitted_head(seed=5)
+    want, _ = predict(cl.model, jnp.asarray(keys[:10]))
+    np.testing.assert_array_equal(np.asarray(cl.route(keys[:10])),
+                                  np.asarray(want))
+
+
+def test_route_probed_threshold():
+    """probes only engage once k* >= probe_min_k; below it, exact."""
+    cl, keys, values = _fitted_head(seed=6)
+    lo = OnlineKVCluster(cl.gcfg, probes=1, probe_min_k=10 ** 6)
+    lo.start(jnp.asarray(keys), jnp.asarray(values))
+    want, _ = predict(lo.model, jnp.asarray(keys[:8]))
+    np.testing.assert_array_equal(np.asarray(lo.route(keys[:8])),
+                                  np.asarray(want))
+    hi = OnlineKVCluster(cl.gcfg, probes=2, probe_min_k=1)
+    hi.start(jnp.asarray(keys), jnp.asarray(values))
+    lab = np.asarray(hi.route(keys[:8]))
+    assert lab.shape == (8,)
+    assert np.all((0 <= lab) & (lab < hi.gcfg.k_max))
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(deadline=None, max_examples=5)
+def test_refresh_zero_pending_is_noop(seed):
+    """refresh with no absorbed rows: returns False, state untouched
+    bit-for-bit (property over fit seeds)."""
+    k = jax.random.PRNGKey(seed)
+    keys = jax.random.normal(k, (96, 8))
+    vals = jax.random.normal(jax.random.fold_in(k, 1), (96, 8))
+    cl = OnlineKVCluster(default_kv_config(8), key=jax.random.fold_in(k, 2))
+    cl.start(keys, vals)
+    before = jax.tree.map(np.asarray,
+                          (cl.model.centers, cl.model.radius, cl.mass,
+                           cl.v_cent, cl.v_radius))
+    assert cl.refresh(keys, vals) is False
+    assert cl.refreshes == 0
+    after = (cl.model.centers, cl.model.radius, cl.mass, cl.v_cent,
+             cl.v_radius)
+    for b, a in zip(before, after):
+        np.testing.assert_array_equal(b, np.asarray(a))
+
+
+def test_refresh_refits_after_updates(rng):
+    cl, keys, values = _fitted_head(seed=7)
+    nk = np.asarray(jax.random.normal(rng, (4, HD)))
+    cl.update(nk, nk)
+    assert cl.pending == 4
+    all_k = jnp.concatenate([jnp.asarray(keys), jnp.asarray(nk)])
+    all_v = jnp.concatenate([jnp.asarray(values), jnp.asarray(nk)])
+    assert cl.refresh(all_k, all_v) is True
+    assert cl.refreshes == 1 and cl.pending == 0
+    assert 0 < cl.k_star <= cl.gcfg.k_max
+    # value stats now exactly consistent with the refit labels
+    lab, _ = predict(cl.model, all_k)
+    counts = np.bincount(np.asarray(lab), minlength=cl.gcfg.k_max)
+    live = np.asarray(cl.model.center_valid) & (np.asarray(cl.mass) > 0)
+    assert np.asarray(cl.mass)[live].sum() == pytest.approx(len(all_k))
+    assert counts[~live].sum() == 0
+
+
+def test_constructor_validation():
+    with pytest.raises(ValueError, match="ema"):
+        OnlineKVCluster(ema=0.0)
+    with pytest.raises(ValueError, match="ema"):
+        OnlineKVCluster(ema=1.5)
+    assert OnlineKVCluster().k_star == 0      # before start
+
+
+def test_kvstate_is_a_pytree():
+    s = KVState(jnp.zeros((1, 2, 3)), jnp.zeros((1, 2, 3)),
+                jnp.zeros((1, 2)))
+    leaves = jax.tree.leaves(s)
+    assert len(leaves) == 3
+    s2 = jax.tree.map(lambda a: a + 1, s)
+    assert isinstance(s2, KVState)
+
+
+# ---------------------------------------------------------------------------
+# the decode harness
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg():
+    cfg = get_arch("smollm_360m", smoke=True)
+    return dataclasses.replace(cfg, num_layers=2, dtype="float32",
+                               remat=False)
+
+
+@functools.lru_cache(maxsize=None)
+def _tiny_model():
+    from repro.models import init_params
+    cfg = _tiny_cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 60), 0,
+                                cfg.vocab_size)
+    return cfg, params, tokens
+
+
+def test_clustered_decode_smoke():
+    """Both modes run the same harness; clustered compresses and refreshes."""
+    cfg, params, tokens = _tiny_model()
+    exact = clustered_decode(params, cfg, tokens, 48, mode="exact")
+    clus = clustered_decode(params, cfg, tokens, 48, mode="clustered",
+                            gcfg=default_kv_config(8), refresh_every=6,
+                            key=jax.random.PRNGKey(2))
+    for out in (exact, clus):
+        assert out["steps"] == 12
+        assert math.isfinite(out["ppl"]) and out["ppl"] > 0
+        assert out["nll"] == pytest.approx(math.log(out["ppl"]))
+    assert "mean_k_star" not in exact
+    assert clus["compression"] > 1.0
+    assert clus["refreshes"] > 0
+    assert 0 < clus["mean_k_star"] <= 8
+
+
+def test_clustered_decode_validation():
+    cfg, params, tokens = _tiny_model()
+    with pytest.raises(ValueError, match="single-sequence"):
+        clustered_decode(params, cfg, jnp.zeros((2, 8), jnp.int32), 4)
+    with pytest.raises(ValueError, match="mode"):
+        clustered_decode(params, cfg, tokens, 48, mode="???")
+    with pytest.raises(ValueError, match="prompt_len"):
+        clustered_decode(params, cfg, tokens, 0)
+    with pytest.raises(ValueError, match="prompt_len"):
+        clustered_decode(params, cfg, tokens, int(tokens.shape[1]))

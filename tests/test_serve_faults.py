@@ -1,0 +1,169 @@
+"""Fault injection for the serving engine (DESIGN.md §13).
+
+The failure contract under test (ClusterServer Notes):
+
+- **Per-batch containment.** A serve step that raises — at dispatch or
+  at retire time — resolves exactly that micro-batch's futures with the
+  exception; the worker keeps serving and the next healthy batch
+  succeeds.
+- **Fatal backstop.** An error that escapes the serve loop resolves
+  EVERY outstanding future (pending, queued, in flight) with it and
+  poisons ``submit``; ``close()`` still returns cleanly.
+- **Poisoned swaps.** A swap that fails to load leaves the previous
+  registry version serving; a swapped-in model whose step fails poisons
+  only its own batches — swapping back restores service.
+
+Futures always resolve, so none of these tests depends on a timeout
+for correctness — ``result(timeout=60)`` is a hang backstop only.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.api import GEEK, DenseData
+from repro.core.geek import GeekConfig
+from repro.serve import ClusterServer
+from repro.serve import engine as engine_mod
+
+CFG = GeekConfig(m=8, t=16, silk_l=3, delta=3, k_max=32, pair_cap=4096)
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    from repro.data import synthetic
+    d = synthetic.dense_blobs(jax.random.PRNGKey(0), n=600, d=16, k=8)
+    model = GEEK(CFG).fit(DenseData(d.x), jax.random.PRNGKey(1))
+    return jax.block_until_ready(model), np.asarray(d.x)
+
+
+class _Boom(RuntimeError):
+    pass
+
+
+def _raising_step(*_a, **_k):
+    """Stand-in for the jitted step factory: fails at call time."""
+    def step(*_args, **_kw):
+        raise _Boom("injected dispatch failure")
+    return step
+
+
+class _PoisonArray:
+    """An 'output' whose host transfer fails — a retire-time fault."""
+
+    def __array__(self, *a, **k):
+        raise _Boom("injected retire failure")
+
+
+def _retire_poison_step(*_a, **_k):
+    def step(*_args, **_kw):
+        return _PoisonArray(), _PoisonArray()
+    return step
+
+
+def test_dispatch_failure_is_contained(fitted, monkeypatch):
+    """Step raises at dispatch: that batch's futures error, worker lives."""
+    model, x = fitted
+    with ClusterServer(model, max_batch=32, deadline_ms=2.0) as server:
+        monkeypatch.setattr(engine_mod, "_exact_step", _raising_step)
+        doomed = [server.submit(x[4 * i:4 * i + 4]) for i in range(3)]
+        for fut in doomed:
+            with pytest.raises(_Boom, match="dispatch"):
+                fut.result(timeout=60)
+        monkeypatch.undo()                     # heal the step factory
+        got = server.submit(x[:8]).result(timeout=60)
+        assert got.labels.shape == (8,)
+        st = server.stats()
+    assert st["failed"] >= 3
+    assert st["completed"] >= 1
+
+
+def test_retire_failure_is_contained(fitted, monkeypatch):
+    """finish() raises while resolving: same containment, worker lives."""
+    model, x = fitted
+    with ClusterServer(model, max_batch=32, deadline_ms=2.0) as server:
+        monkeypatch.setattr(engine_mod, "_exact_step", _retire_poison_step)
+        fut = server.submit(x[:8])
+        with pytest.raises(_Boom, match="retire"):
+            fut.result(timeout=60)
+        monkeypatch.undo()
+        got = server.submit(x[:8]).result(timeout=60)
+        assert got.labels.shape == (8,)
+        st = server.stats()
+    assert st["failed"] >= 1
+
+
+def test_fatal_error_resolves_all_and_poisons_submit(fitted, monkeypatch):
+    """A loop-escaping error fails every outstanding future, then submit
+    raises instead of queueing into a dead worker; close() is clean."""
+    model, x = fitted
+    server = ClusterServer(model, max_batch=256, deadline_ms=40.0)
+    try:
+        def lethal_flush(*_a, **_k):
+            raise _Boom("worker-killing bug")
+        monkeypatch.setattr(server, "_flush", lethal_flush)
+        futs = [server.submit(x[i:i + 1]) for i in range(5)]
+        for fut in futs:                     # all resolve — no hangs
+            with pytest.raises(_Boom, match="worker-killing"):
+                fut.result(timeout=60)
+        with pytest.raises(RuntimeError, match="worker died"):
+            server.submit(x[:1])
+        assert server.stats()["failed"] == 5
+    finally:
+        server.close()
+    server.close()                           # idempotent after death
+
+
+def test_failed_swap_leaves_previous_version_serving(fitted, tmp_path):
+    """swap() to an unloadable checkpoint raises; v0 keeps serving."""
+    model, x = fitted
+    with ClusterServer(model, max_batch=32, deadline_ms=2.0) as server:
+        with pytest.raises(Exception):
+            server.swap(str(tmp_path / "no_such_ckpt"))
+        assert server.version == 0
+        got = server.submit(x[:6]).result(timeout=60)
+        assert got.version == 0
+    assert server.stats()["failed"] == 0
+
+
+def test_poisoned_swap_fails_own_batches_only(fitted, monkeypatch):
+    """A swapped-in model whose step raises poisons only its batches;
+    swapping a healthy model back restores service."""
+    model, x = fitted
+    poisoned = dataclasses.replace(model)    # distinct object, same data
+    orig = engine_mod._exact_step
+
+    def selective(n_parts, donate):
+        real = orig(n_parts, donate)
+
+        def step(m, *parts):
+            if m is poisoned:
+                raise _Boom("poisoned model")
+            return real(m, *parts)
+        return step
+
+    with ClusterServer(model, max_batch=32, deadline_ms=2.0) as server:
+        monkeypatch.setattr(engine_mod, "_exact_step", selective)
+        assert server.submit(x[:4]).result(timeout=60).version == 0
+        server.swap(poisoned)
+        with pytest.raises(_Boom, match="poisoned"):
+            server.submit(x[:4]).result(timeout=60)
+        server.swap(model)                   # roll forward to a good copy
+        got = server.submit(x[:4]).result(timeout=60)
+        assert got.version == 2
+        st = server.stats()
+    assert st["failed"] == 1                 # exactly the poisoned request
+    assert st["swaps"] == 2
+
+
+def test_close_drains_queued_requests(fitted):
+    """Requests queued behind a long deadline resolve at close()."""
+    model, x = fitted
+    server = ClusterServer(model, max_batch=256, deadline_ms=10_000.0)
+    futs = [server.submit(x[8 * i:8 * i + 8]) for i in range(4)]
+    server.close()
+    for i, fut in enumerate(futs):
+        got = fut.result(timeout=60)
+        assert got.labels.shape == (8,)
+    assert server.stats()["flushes"]["close"] >= 1
