@@ -147,6 +147,38 @@ def _poisson_segment(server, traffic: np.ndarray, request_rows: int,
     )
 
 
+def _ladder_sensitivity(model, traffic: np.ndarray, shape: dict) -> dict:
+    """Closed-loop pts/s per (path, ladder) combo — gate-neutral.
+
+    The ``dense`` ladder puts a rung at every ``request_rows`` multiple
+    (zero padding for aligned traffic, more compiles at warmup); the
+    ``default`` ladder is the engine's powers-of-two + mid-rungs
+    policy. Compared on the exact scan and the probed-index path.
+    """
+    max_batch, request_rows = shape["max_batch"], shape["request_rows"]
+    n = min(60, traffic.shape[0] // request_rows)
+    ladders = {
+        "default": None,
+        "dense": tuple(range(request_rows, max_batch + 1, request_rows)),
+    }
+    out = {}
+    for path, probes in (("exact", None), ("probed", 2)):
+        for lname, rungs in ladders.items():
+            with ClusterServer(model, probes=probes, max_batch=max_batch,
+                               deadline_ms=shape["deadline_ms"],
+                               ladder=rungs) as server:
+                server.warmup(traffic[:request_rows])
+                t0 = time.monotonic()
+                futs = [server.submit(
+                    traffic[i * request_rows:(i + 1) * request_rows])
+                    for i in range(n)]
+                for f in futs:
+                    f.result(timeout=120)
+                wall = time.monotonic() - t0
+            out[f"{path}/{lname}"] = n * request_rows / wall
+    return out
+
+
 def run(smoke: bool = False, out: str | None = None,
         write_json: bool = True) -> dict:
     """One full harness pass; returns (and optionally writes) the report."""
@@ -177,6 +209,15 @@ def run(smoke: bool = False, out: str | None = None,
                                     rng, swap_to=(model_b, n_requests // 2))
         stats = server.stats()
 
+    # 4. per-path ladder rung sensitivity (gate-neutral): the same
+    # closed-loop burst on the default ladder vs a request-granular
+    # dense one, on the exact AND probed paths — the probed step is
+    # cheaper per rung, so it can afford a denser ladder (less padding)
+    # where the exact path pays a compile per extra rung
+    ladder_sens = _ladder_sensitivity(model, traffic, shape)
+    for name, pps in ladder_sens.items():
+        emit(f"serving/ladder/{name}", 0.0, f"{pps:.0f} pts/s")
+
     efficiency = seg["points_per_sec"] / anchor_pps
     emit(f"serving/poisson/batch={max_batch}", seg["wall_s"],
          f"{seg['points_per_sec']:.0f} pts/s "
@@ -203,6 +244,10 @@ def run(smoke: bool = False, out: str | None = None,
                      "swaps": swap_seg["swaps"],
                      "points_per_sec": round(swap_seg["points_per_sec"]),
                      "p99_ms": round(swap_seg["p99_ms"], 2)},
+        # gate-neutral (NOT under points_per_sec): rung sensitivity is
+        # a design datapoint, not a regression surface
+        "ladder_sensitivity": {k: round(v)
+                               for k, v in ladder_sens.items()},
         "engine_stats": stats,
     }
     if write_json:

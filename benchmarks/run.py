@@ -17,13 +17,14 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="fig4|fig5|fig6|fig7|table1|assign|predict|"
-                         "serving|sharded")
+                         "serving|frontend|sharded")
     args = ap.parse_args()
     quick = not args.full
 
     from benchmarks import (bench_assign, bench_clustering, bench_complexity,
-                            bench_params, bench_predict, bench_scaling,
-                            bench_seeding, bench_serving, bench_sharded)
+                            bench_frontend, bench_params, bench_predict,
+                            bench_scaling, bench_seeding, bench_serving,
+                            bench_sharded)
     suites = {
         "fig4": lambda: bench_params.run(quick=quick),
         "fig5": lambda: bench_clustering.run(quick=quick),
@@ -38,6 +39,10 @@ def main() -> None:
                                              write_json=not quick),
         "serving": lambda: bench_serving.run(smoke=quick,
                                              write_json=not quick),
+        # forks one child per worker count (device count is fixed at
+        # backend init), so full mode may refresh the headline directly
+        "frontend": lambda: bench_frontend.run(smoke=quick,
+                                               write_json=not quick),
         # device-count-sensitive: the harness never writes the headline
         # BENCH_sharded.json — refresh it via the module CLI with
         # XLA_FLAGS=--xla_force_host_platform_device_count=4

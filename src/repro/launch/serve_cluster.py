@@ -19,6 +19,12 @@ points/sec plus per-request p50/p99 latency.
       # --mesh: restore replicated onto a 1-axis mesh over all local
       # devices and serve each micro-batch row-sharded (bit-identical);
       # --host-devices replaces hand-set XLA_FLAGS (utils/platform.py)
+  PYTHONPATH=src python -m repro.launch.serve_cluster --http :8080 \
+      --workers 2 --host-devices 2 --refit-every 30
+      # DESIGN.md §15: serve over HTTP from a 2-worker pool (one
+      # engine per forced host device) and let the autopilot refit
+      # from served traffic every 30s; traffic drives through the
+      # socket, so the numbers include the wire
 """
 from __future__ import annotations
 
@@ -66,6 +72,47 @@ def _traffic(args, step: int) -> tuple:
     return (s.sets, s.mask)
 
 
+def _drive_http(args, url: str, req_rows: int, occupancy):
+    """Run the traffic loop through the socket; returns loop stats.
+
+    A small closed-loop client pool (8 in-flight requests) keeps the
+    engine's micro-batches fed — sequential requests would serialize on
+    the wire and measure the client, not the server.
+    """
+    import json
+    import urllib.request
+    from concurrent.futures import ThreadPoolExecutor
+
+    import numpy as np
+
+    def post(parts):
+        body = json.dumps(
+            {"parts": [None if p is None else np.asarray(p).tolist()
+                       for p in parts]}).encode()
+        req = urllib.request.Request(
+            url + "/v1/assign", data=body,
+            headers={"Content-Type": "application/json"})
+        t0 = time.time()
+        with urllib.request.urlopen(req, timeout=120) as r:
+            out = json.loads(r.read())
+        return time.time() - t0, np.asarray(out["labels"], np.int64)
+
+    total, latencies = 0, []
+    with ThreadPoolExecutor(max_workers=8) as pool:
+        for step in range(args.steps):
+            batch = _traffic(args, step)
+            n = next(p.shape[0] for p in batch if p is not None)
+            chunks = [tuple(None if p is None else p[off:off + req_rows]
+                            for p in batch)
+                      for off in range(0, n, req_rows)]
+            for dt, labels in pool.map(post, chunks):
+                latencies.append(dt)
+                total += labels.shape[0]
+                occupancy += np.bincount(labels,
+                                         minlength=occupancy.shape[0])
+    return total, latencies, occupancy
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--data", default=None,
@@ -99,6 +146,18 @@ def main() -> None:
                          "probes fall back to the exact scan). Default: "
                          "exact full scan. Composes with --mesh (the "
                          "sharded probed step)")
+    ap.add_argument("--http", default=None, metavar="[HOST]:PORT",
+                    help="serve over HTTP (repro.serve.ClusterFrontend) "
+                         "and drive the traffic loop through the socket; "
+                         "':8080' binds loopback:8080, ':0' picks a port")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="serve from a WorkerPool of this many per-device "
+                         "engines (needs that many local devices — see "
+                         "--host-devices). Default: one ClusterServer")
+    ap.add_argument("--refit-every", type=float, default=None,
+                    metavar="SECONDS",
+                    help="run a RefitAutopilot: reservoir served traffic "
+                         "and refit-validate-publish on this period")
     ap.add_argument("--smoke", action="store_true")
     from repro.utils.platform import add_platform_args, apply_platform_args
     add_platform_args(ap)
@@ -153,42 +212,95 @@ def main() -> None:
 
     # -- serving loop ------------------------------------------------------
     # the engine owns batching/padding/dispatch; this loop only submits
-    # raw request parts and collects futures
+    # raw request parts and collects futures (or HTTP responses)
     req_rows = args.request_rows or args.batch
-    server = ClusterServer(model, probes=args.probes, mesh=mesh,
-                           max_batch=args.batch,
-                           deadline_ms=args.deadline_ms)
+    if args.workers is not None:
+        if mesh is not None:
+            raise SystemExit("[serve] --workers (per-device pool) and "
+                             "--mesh (row-sharded single engine) are "
+                             "different scale-out stories — pick one")
+        from repro.serve import WorkerPool
+        server = WorkerPool(model, workers=args.workers,
+                            probes=args.probes, max_batch=args.batch,
+                            deadline_ms=args.deadline_ms)
+    else:
+        server = ClusterServer(model, probes=args.probes, mesh=mesh,
+                               max_batch=args.batch,
+                               deadline_ms=args.deadline_ms)
     warm = _traffic(args, -1)
     server.warmup(tuple(None if p is None else p[:req_rows] for p in warm))
+
+    autopilot = None
+    if args.refit_every is not None:
+        from repro.serve import RefitAutopilot
+        autopilot = RefitAutopilot(server, cfg, reservoir=4 * args.batch,
+                                   min_rows=min(args.n_fit, 2 * args.batch),
+                                   refit_every_s=args.refit_every,
+                                   seed=args.seed).start()
+        print(f"[serve] autopilot refitting every {args.refit_every}s "
+              f"(reservoir={4 * args.batch} rows)")
+
+    frontend = None
+    if args.http is not None:
+        from repro.serve import ClusterFrontend
+        host, _, port = args.http.rpartition(":")
+        frontend = ClusterFrontend(
+            server, host=host or "127.0.0.1", port=int(port or 0),
+            observer=autopilot.observe if autopilot else None).start()
+        print(f"[serve] http on {frontend.url} "
+              "(POST /v1/assign, GET /v1/stats)")
 
     total, latencies = 0, []
     occupancy = np.zeros((model.k_max,), np.int64)
     t_wall = time.time()
-    for step in range(args.steps):
-        batch = tuple(None if p is None else np.asarray(p)
-                      for p in _traffic(args, step))
-        n = next(p.shape[0] for p in batch if p is not None)
-        futs = []
-        for off in range(0, n, req_rows):
-            parts = tuple(None if p is None else p[off:off + req_rows]
-                          for p in batch)
-            t0 = time.time()
-            futs.append((t0, server.submit(parts)))
-        for t0, fut in futs:
-            res = fut.result()
-            latencies.append(time.time() - t0)
-            total += res.labels.shape[0]
-            occupancy += np.bincount(res.labels, minlength=model.k_max)
+    if frontend is not None:
+        total, latencies, occupancy = _drive_http(
+            args, frontend.url, req_rows, occupancy)
+    else:
+        for step in range(args.steps):
+            batch = tuple(None if p is None else np.asarray(p)
+                          for p in _traffic(args, step))
+            if autopilot is not None:
+                autopilot.observe(batch)   # no socket, no observer hook
+            n = next(p.shape[0] for p in batch if p is not None)
+            futs = []
+            for off in range(0, n, req_rows):
+                parts = tuple(None if p is None else p[off:off + req_rows]
+                              for p in batch)
+                t0 = time.time()
+                futs.append((t0, server.submit(parts)))
+            for t0, fut in futs:
+                res = fut.result()
+                latencies.append(time.time() - t0)
+                total += res.labels.shape[0]
+                occupancy += np.bincount(res.labels,
+                                         minlength=model.k_max)
     t_wall = time.time() - t_wall
+    if autopilot is not None:
+        autopilot.close()
+        ast = autopilot.stats()
+        print(f"[serve] autopilot: {ast['refits']} refits, "
+              f"{ast['published']} published, {ast['rollbacks']} "
+              f"rollbacks (serving v{server.version})")
+    if frontend is not None:
+        frontend.close()
     server.close()
 
     pps = total / max(t_wall, 1e-9)
     p50, p99 = np.percentile(np.asarray(latencies) * 1e3, [50, 99])
     hot = int(occupancy.argmax())
     tag = f" x{len(jax.devices())} devices" if mesh is not None else ""
+    if args.workers is not None:
+        tag += f" pool={args.workers}"
+    if args.http is not None:
+        tag += " http"
     if args.probes is not None:
         tag += f" probes={args.probes}"
     st = server.stats()
+    if "flushes" not in st:      # WorkerPool: sum the per-worker tallies
+        st["flushes"] = {
+            k: sum(w["flushes"][k] for w in st["workers"])
+            for k in st["workers"][0]["flushes"]}
     print(f"[serve{tag}] {args.steps} steps x {args.batch} rows "
           f"({req_rows}/request): {pps:,.0f} points/s sustained, "
           f"p50={p50:.1f}ms p99={p99:.1f}ms, "

@@ -17,12 +17,23 @@ shapes (zero steady-state recompiles) with double-buffered dispatch;
 deployments; ``Assignment`` is the per-request result (labels, dists,
 serving model version); ``pad_ladder`` exposes the bucket-shape policy
 for tuning and tests.
+
+The network tier (DESIGN.md §15) stacks on top: ``WorkerPool`` runs
+one server per device behind the shared registry, ``ClusterFrontend``
+is the dependency-free HTTP shim over either, and ``RefitAutopilot``
+closes the loop — reservoir from served traffic, periodic refit,
+validated publish with rollback. ``ServerClosedError`` is the named
+submit-after-close failure.
 """
+from repro.serve.autopilot import RefitAutopilot  # noqa: F401
+from repro.serve.dispatch import WorkerPool  # noqa: F401
 from repro.serve.engine import (  # noqa: F401
     Assignment,
     ClusterServer,
+    ServerClosedError,
     pad_ladder,
 )
+from repro.serve.frontend import ClusterFrontend  # noqa: F401
 from repro.serve.kv_cluster import (  # noqa: F401
     KVState,
     OnlineKVCluster,
@@ -35,11 +46,15 @@ from repro.serve.registry import ModelRecord, ModelRegistry  # noqa: F401
 #: the supported serving surface (sorted; locked by tests/test_api_surface.py)
 __all__ = [
     "Assignment",
+    "ClusterFrontend",
     "ClusterServer",
     "KVState",
     "ModelRecord",
     "ModelRegistry",
     "OnlineKVCluster",
+    "RefitAutopilot",
+    "ServerClosedError",
+    "WorkerPool",
     "clustered_attention",
     "clustered_decode",
     "ema_update",

@@ -1,0 +1,224 @@
+"""Multi-worker dispatch: one ClusterServer per device (DESIGN.md §15).
+
+One :class:`~repro.serve.engine.ClusterServer` owns one device. The
+heavy-traffic story is therefore a *pool*: N servers, one per local
+device (real accelerators, or forced host devices under
+``utils.platform`` for CPU scale-out), all serving the same model name
+out of one shared :class:`~repro.serve.registry.ModelRegistry`.
+``WorkerPool`` is that pool plus a router:
+
+- **Routing — sticky, then least-queued spill.** Requests stick to the
+  current worker until its outstanding rows would exceed ``max_batch``
+  — so one worker's micro-batch *fills* (full buckets are where padding
+  waste vanishes) instead of every request spraying to the globally
+  least-loaded worker and nobody ever flushing full. On overflow the
+  router spills to the worker with the fewest outstanding rows and
+  sticks there. Under light load this degenerates to one busy worker
+  (lowest latency: no cold buckets); under heavy load every worker's
+  bucket fills and the pool's throughput is the sum.
+- **One registry, one swap point.** ``swap()`` publishes exactly once
+  to the shared registry; every worker snapshots ``current(name)`` at
+  its next micro-batch boundary, so a pool-wide hot-swap is atomic per
+  request: no request (= one micro-batch on one worker) ever observes
+  a mix of versions, and every ``Assignment.version`` is the version
+  that really served it.
+- **Identity.** Each worker pads/batches exactly like a single-device
+  server, so pool labels are bit-identical to the direct ``predict``
+  path the configuration wraps — routing cannot change a label, only
+  which device computes it.
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future
+
+import numpy as np
+
+from repro.core.model import GeekModel
+from repro.serve.engine import ClusterServer, ServerClosedError
+from repro.serve.registry import ModelRegistry
+from repro.utils.platform import worker_devices
+
+
+class WorkerPool:
+    """N per-device ClusterServers behind one registry and one router.
+
+    Parameters
+    ----------
+    model_or_ckpt : GeekModel or str
+        Model to serve (restored once if a checkpoint directory).
+    workers : int or None
+        Worker count; default = every local device
+        (``utils.platform.worker_devices``).
+    devices : sequence of jax.Device or None
+        Explicit devices, one worker each (overrides ``workers``).
+    probes, max_batch, deadline_ms, min_bucket, ladder
+        Forwarded to every :class:`ClusterServer` (all workers serve
+        the same configuration, so the bit-identity contract is
+        uniform across the pool).
+    registry : ModelRegistry or None
+        Shared registry; by default the pool owns one. Passing your
+        own lets a fitting process publish directly to the pool.
+    name : str
+        Registry name all workers serve.
+
+    Notes
+    -----
+    ``submit`` / ``swap`` / ``warmup`` / ``stats`` / ``close`` mirror
+    the single-server surface, so anything written against
+    ``ClusterServer`` (the HTTP front end, the autopilot) runs
+    unchanged against a pool.
+    """
+
+    def __init__(self, model_or_ckpt, *, workers: int | None = None,
+                 devices=None, probes: int | None = None,
+                 max_batch: int = 4096, deadline_ms: float = 5.0,
+                 min_bucket: int = 64,
+                 ladder: tuple[int, ...] | None = None,
+                 registry: ModelRegistry | None = None,
+                 name: str = "default"):
+        if isinstance(model_or_ckpt, str):
+            from repro.checkpoint.manager import restore_model
+            model = restore_model(model_or_ckpt)
+        elif isinstance(model_or_ckpt, GeekModel):
+            model = model_or_ckpt
+        else:
+            raise TypeError("model_or_ckpt must be a GeekModel or a "
+                            "checkpoint directory, got "
+                            f"{type(model_or_ckpt).__name__}")
+        if devices is None:
+            devices = worker_devices(workers)
+        elif workers is not None and len(devices) != workers:
+            raise ValueError(f"workers={workers} disagrees with "
+                             f"{len(devices)} explicit devices")
+        self.devices = tuple(devices)
+        if not self.devices:
+            raise ValueError("need at least one worker device")
+        self.name = name
+        self.max_batch = int(max_batch)
+        self.registry = registry if registry is not None else ModelRegistry()
+        if name not in self.registry.names():
+            self.registry.publish(name, model)
+        # ClusterServer skips its own publish (name already present), so
+        # all workers serve the same initial version
+        self.servers = tuple(
+            ClusterServer(model, probes=probes, max_batch=max_batch,
+                          deadline_ms=deadline_ms, min_bucket=min_bucket,
+                          ladder=ladder, registry=self.registry, name=name,
+                          device=dev)
+            for dev in self.devices)
+        self._lock = threading.Lock()
+        self._queued = [0] * len(self.servers)
+        self._last = 0
+        self._sticky = 0
+        self._spills = 0
+        self._closed = False
+
+    # -- routing -------------------------------------------------------------
+
+    def _route(self, n: int) -> int:
+        """Pick a worker for an ``n``-row request; charge it the rows."""
+        with self._lock:
+            i = self._last
+            if self._queued[i] + n > self.max_batch:
+                # overflow: spill to the least-queued worker, stick there
+                i = min(range(len(self._queued)),
+                        key=self._queued.__getitem__)
+                self._last = i
+                self._spills += 1
+            else:
+                self._sticky += 1
+            self._queued[i] += n
+            return i
+
+    def _uncharge(self, i: int, n: int) -> None:
+        with self._lock:
+            self._queued[i] -= n
+
+    # -- public surface (mirrors ClusterServer) ------------------------------
+
+    @property
+    def model(self) -> GeekModel:
+        """The model the next micro-batch (on any worker) is served by."""
+        return self.registry.current(self.name).model
+
+    @property
+    def version(self) -> int:
+        """Registry version of :attr:`model`."""
+        return self.registry.current(self.name).version
+
+    def submit(self, parts) -> Future:
+        """Route one request to a worker; returns its Assignment future.
+
+        Same payload contract as :meth:`ClusterServer.submit` (raw
+        query parts, 1..``max_batch`` rows). The routed worker is an
+        implementation detail — the labels are identical on every
+        worker.
+        """
+        if self._closed:
+            raise ServerClosedError("pool is closed")
+        if not isinstance(parts, (tuple, list)):
+            parts = (parts,)
+        parts = tuple(None if p is None else np.asarray(p) for p in parts)
+        try:
+            n = next(int(p.shape[0]) for p in parts if p is not None)
+        except StopIteration:
+            raise ValueError("all query parts are None") from None
+        i = self._route(n)
+        try:
+            fut = self.servers[i].submit(parts)
+        except BaseException:
+            self._uncharge(i, n)
+            raise
+        fut.add_done_callback(lambda _f: self._uncharge(i, n))
+        return fut
+
+    def swap(self, model_or_ckpt, *, step: int | None = None) -> int:
+        """Publish a new version ONCE for the whole pool; returns it.
+
+        The shared registry is the atomicity point: each worker
+        snapshots the current record per micro-batch, so after this
+        returns no *new* micro-batch anywhere serves the old version,
+        and in-flight micro-batches finish on the version they were
+        batched under — per request, versions never mix.
+        """
+        if isinstance(model_or_ckpt, str):
+            return self.registry.load(self.name, model_or_ckpt, step=step)
+        return self.registry.publish(self.name, model_or_ckpt)
+
+    def warmup(self, parts) -> None:
+        """Walk every worker's pad ladder (per-device compile warmup)."""
+        for s in self.servers:
+            s.warmup(parts)
+
+    def stats(self) -> dict:
+        """Aggregated counters + per-worker snapshots + routing stats."""
+        per_worker = [s.stats() for s in self.servers]
+        agg: dict = {"submitted": 0, "completed": 0, "failed": 0,
+                     "batches": 0, "rows_served": 0, "padded_rows": 0}
+        for st in per_worker:
+            for k in agg:
+                agg[k] += st[k]
+        with self._lock:
+            agg["routing"] = {"sticky": self._sticky,
+                              "spills": self._spills,
+                              "queued_rows": list(self._queued)}
+        agg["workers"] = per_worker
+        return agg
+
+    def close(self, timeout: float | None = 30.0) -> None:
+        """Close every worker (each drains its own queue)."""
+        self._closed = True
+        for s in self.servers:
+            s.close(timeout=timeout)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    def __len__(self) -> int:
+        """Worker count."""
+        return len(self.servers)

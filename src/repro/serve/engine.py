@@ -45,7 +45,6 @@ import time
 from concurrent.futures import Future, InvalidStateError
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.model import (GeekModel, patch_probed_fallback, predict,
@@ -54,6 +53,17 @@ from repro.serve.registry import ModelRegistry, _transform_kind
 
 #: queue sentinel shutting the worker down
 _CLOSE = object()
+
+
+class ServerClosedError(RuntimeError):
+    """``submit()`` after ``close()`` — the worker is gone for good.
+
+    Named so callers (and the HTTP front end, which maps it to a 503)
+    can distinguish "this server was shut down deliberately" from the
+    plain ``RuntimeError`` a died worker raises. Raised immediately at
+    submit time: a request must never be enqueued onto a dead worker,
+    where its future would hang forever.
+    """
 
 #: expected request arity per transform kind — ``(x,)`` dense,
 #: ``(x_num, x_cat)`` hetero, ``(sets, mask)`` sparse
@@ -212,11 +222,29 @@ class ClusterServer:
         Mesh axis name for sharded serving.
     min_bucket : int
         Bottom rung of the pad ladder.
+    ladder : tuple of int or None
+        Explicit pad-ladder override (strictly increasing rungs whose
+        top covers ``max_batch``; every rung must be a multiple of the
+        mesh size). ``None`` derives the default power-of-two +
+        1.5x-mid-rung ladder from ``max_batch``/``min_bucket``. The
+        override exists because the best rung set is *per serving
+        path*: the probed step's candidate-gather cost grows with the
+        rung, so a probed server can run a denser ladder (less padding
+        per batch) than the exact path, whose kernels prefer fewer,
+        rounder shapes (ROADMAP serving item c; rung sensitivity is
+        recorded by ``bench_serving``).
     registry : ModelRegistry or None
         Shared registry for multi-model deployments; by default the
         server owns a private one.
     name : str
         Registry name this server serves (and ``swap`` publishes to).
+    device : jax.Device or None
+        Pin every micro-batch (and a per-record model copy) to this
+        device. This is the multi-worker story: a
+        :class:`~repro.serve.dispatch.WorkerPool` runs one server per
+        device so independent micro-batches compute in parallel.
+        Mutually exclusive with ``mesh`` (sharded serving places its
+        own data).
 
     Notes
     -----
@@ -237,8 +265,9 @@ class ClusterServer:
                  mesh=None, max_batch: int = 4096,
                  deadline_ms: float = 5.0, mesh_axis: str = "data",
                  min_bucket: int = 64,
+                 ladder: tuple[int, ...] | None = None,
                  registry: ModelRegistry | None = None,
-                 name: str = "default"):
+                 name: str = "default", device=None):
         if isinstance(model_or_ckpt, str):
             from repro.checkpoint.manager import restore_model
             model = restore_model(model_or_ckpt, mesh=mesh)
@@ -259,15 +288,36 @@ class ClusterServer:
                     "probes=None or rebuild the model with an index")
         if deadline_ms <= 0:
             raise ValueError(f"deadline_ms must be > 0, got {deadline_ms}")
+        if device is not None and mesh is not None:
+            raise ValueError("device= pins single-device serving and "
+                             "cannot compose with mesh= (sharded serving "
+                             "places its own data)")
         self.probes = probes
         self.mesh = mesh
         self.mesh_axis = mesh_axis
         self.max_batch = int(max_batch)
         self.deadline = float(deadline_ms) / 1e3
         self.name = name
+        self._device = device
+        self._dev_model = None    # (ModelRecord, model-on-device) cache
         g = mesh.shape[mesh_axis] if mesh is not None else 1
-        self.ladder = pad_ladder(self.max_batch, min_bucket=min_bucket,
-                                 multiple=g)
+        if ladder is not None:
+            rungs = tuple(int(r) for r in ladder)
+            if not rungs or rungs[0] < 1 or \
+                    any(b <= a for a, b in zip(rungs, rungs[1:])):
+                raise ValueError("ladder must be a non-empty strictly "
+                                 f"increasing tuple of positive ints, got "
+                                 f"{rungs}")
+            if rungs[-1] < self.max_batch:
+                raise ValueError(f"ladder top rung {rungs[-1]} does not "
+                                 f"cover max_batch={self.max_batch}")
+            if any(r % g for r in rungs):
+                raise ValueError(f"every ladder rung must be a multiple of "
+                                 f"the mesh size {g}, got {rungs}")
+            self.ladder = rungs
+        else:
+            self.ladder = pad_ladder(self.max_batch, min_bucket=min_bucket,
+                                     multiple=g)
         self.registry = registry if registry is not None else ModelRegistry()
         if name not in self.registry.names():
             self.registry.publish(name, model)
@@ -318,7 +368,9 @@ class ClusterServer:
             micro-batches, it does not split).
         """
         if self._closed:
-            raise RuntimeError("server is closed")
+            raise ServerClosedError(
+                "server is closed — submit() after close() cannot be "
+                "served (stand up a new ClusterServer)")
         if self._fatal is not None:
             raise RuntimeError("serving worker died") from self._fatal
         if not isinstance(parts, (tuple, list)):
@@ -348,6 +400,20 @@ class ClusterServer:
                 fut.set_exception(RuntimeError("serving worker died"))
             except InvalidStateError:
                 pass  # _fail got it first
+        if self._closed and not fut.done():
+            # lost the race with a concurrent close(): the pre-check above
+            # ran before _closed was set, so this request may have landed
+            # BEHIND the close sentinel after the worker's final drain —
+            # onto a dead worker, where its future would hang forever.
+            # Resolve it here with the same named error the pre-check
+            # raises; if the closing worker's drain did pick it up, its
+            # set_result simply loses the race (both sides tolerate
+            # InvalidStateError).
+            try:
+                fut.set_exception(ServerClosedError(
+                    "server closed while the request was being submitted"))
+            except InvalidStateError:
+                pass  # the close drain served it first
         return fut
 
     def swap(self, model_or_ckpt, *, step: int | None = None) -> int:
@@ -380,7 +446,7 @@ class ClusterServer:
             parts = (parts,)
         parts = tuple(None if p is None else np.asarray(p) for p in parts)
         n = next(p.shape[0] for p in parts if p is not None)
-        model = self.model
+        model = self._on_device(self.registry.current(self.name))
         for bucket in self.ladder:
             idx = np.arange(bucket) % n
             padded = tuple(None if p is None else p[idx] for p in parts)
@@ -534,7 +600,7 @@ class ClusterServer:
                 None if take[0].parts[i] is None else
                 np.concatenate([r.parts[i] for r in take], axis=0)
                 for i in range(self._arity))
-            finish = self._dispatch(rec.model, host, taken)
+            finish = self._dispatch(self._on_device(rec), host, taken)
         except Exception as e:                  # noqa: BLE001 — per-batch
             for r in take:
                 r.future.set_exception(e)
@@ -549,6 +615,25 @@ class ClusterServer:
             self._stats["padded_rows"] += bucket_for(taken,
                                                      self.ladder) - taken
         return rows - taken
+
+    def _on_device(self, rec) -> GeekModel:
+        """The record's model, copied to the pinned device (cached).
+
+        With ``device=None`` this is just ``rec.model``. With a pinned
+        device the model pytree is ``device_put`` once per registry
+        record (the cache is keyed by record identity, so a hot-swap
+        refreshes it exactly once) — computation then follows the
+        committed inputs onto that device. Benign race: ``warmup`` and
+        the worker may both populate the cache; the worst case is one
+        duplicate transfer.
+        """
+        if self._device is None:
+            return rec.model
+        cached = self._dev_model
+        if cached is None or cached[0] is not rec:
+            cached = (rec, jax.device_put(rec.model, self._device))
+            self._dev_model = cached
+        return cached[1]
 
     def _dispatch(self, model: GeekModel, host: tuple, n: int):
         """Pad to the ladder, issue the async serve step; returns a
@@ -571,7 +656,7 @@ class ClusterServer:
             # make_predict_sharded handles probed patching internally
             out = self._sharded_fn(model, *padded)
             return lambda: tuple(np.asarray(o)[:n] for o in out)
-        dev = tuple(None if p is None else jax.device_put(p)
+        dev = tuple(None if p is None else jax.device_put(p, self._device)
                     for p in padded)
         if self.probes is None:
             out = _exact_step(self._arity, self._donate)(model, *dev)
@@ -585,7 +670,8 @@ class ClusterServer:
                 np.asarray(emp)[:n],
                 lambda ix: _exact_step(self._arity, False)(
                     model, *(None if p is None else
-                             jnp.asarray(p[np.asarray(ix)])
+                             jax.device_put(p[np.asarray(ix)],
+                                            self._device)
                              for p in host)))
             return np.asarray(labels), np.asarray(dists)
 
@@ -607,9 +693,12 @@ class ClusterServer:
             return
         off = 0
         for r in take:
-            r.future.set_result(Assignment(labels[off:off + r.n],
-                                           dists[off:off + r.n],
-                                           rec.version))
+            try:
+                r.future.set_result(Assignment(labels[off:off + r.n],
+                                               dists[off:off + r.n],
+                                               rec.version))
+            except InvalidStateError:
+                pass  # a submit/close race already failed this future
             off += r.n
         with self._stats_lock:
             self._stats["completed"] += len(take)

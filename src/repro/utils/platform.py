@@ -131,6 +131,44 @@ def set_platform(platform: str | None = None, *,
             warnings.warn(f"could not set jax_platform_name: {e}")
 
 
+def worker_devices(n: int | None = None) -> tuple:
+    """The local devices a per-device worker pool should run on.
+
+    Parameters
+    ----------
+    n : int or None
+        Number of devices wanted (the pool's worker count). ``None``
+        returns every local device.
+
+    Returns
+    -------
+    tuple of jax.Device
+        The first ``n`` local devices, in ``jax.local_devices()`` order
+        (stable, so worker *i* always pins the same device).
+
+    Raises
+    ------
+    ValueError
+        If fewer than ``n`` devices exist — with the remedy spelled
+        out: on CPU, force fake host devices via ``set_platform`` (or
+        the CLIs' ``--host-devices``) *before* JAX initializes.
+    """
+    import jax
+    devs = tuple(jax.local_devices())
+    if n is None:
+        return devs
+    n = int(n)
+    if n < 1:
+        raise ValueError(f"need at least 1 worker device, got n={n}")
+    if n > len(devs):
+        raise ValueError(
+            f"{n} worker devices requested but only {len(devs)} local "
+            f"device(s) exist — on CPU, force fake host devices BEFORE "
+            f"JAX initializes: set_platform(host_device_count={n}), the "
+            f"--host-devices CLI flag, or XLA_FLAGS={_FORCE_FLAG}={n}")
+    return devs[:n]
+
+
 def add_platform_args(parser: argparse.ArgumentParser) -> None:
     """Install the shared ``--platform`` / ``--host-devices`` flags."""
     parser.add_argument("--platform", default=None,

@@ -33,11 +33,15 @@ REPRO_ALL = [
 #: the locked serving surface — keep sorted
 REPRO_SERVE_ALL = [
     "Assignment",
+    "ClusterFrontend",
     "ClusterServer",
     "KVState",
     "ModelRecord",
     "ModelRegistry",
     "OnlineKVCluster",
+    "RefitAutopilot",
+    "ServerClosedError",
+    "WorkerPool",
     "clustered_attention",
     "clustered_decode",
     "ema_update",

@@ -1,0 +1,234 @@
+"""Refit-and-publish autopilot (DESIGN.md §15): reservoir, gates, rollback.
+
+The contracts under test:
+
+- **Reservoir.** Below capacity every observed row is kept verbatim;
+  above capacity the buffer stays a fixed-size sample whose rows all
+  come from the observed stream (Algorithm R).
+- **Validated publish.** A refit cycle on healthy traffic publishes a
+  new version through the server and the served version bumps; an
+  autopilot NEVER publishes a model that failed a gate — the injected
+  validator failure and a forced ``k_star`` bound both roll back,
+  leaving the incumbent serving and the rejection named in ``stats()``.
+- **No mixed versions.** Requests racing a live refit-and-publish all
+  serve on exactly the version they report (the registry swap point is
+  per micro-batch).
+- **Skips are not failures.** Below ``min_rows`` the cycle skips; a
+  second concurrent ``run_once`` skips instead of stacking fits.
+"""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.api import GEEK, DenseData
+from repro.core.geek import GeekConfig
+from repro.core.model import predict
+from repro.serve import ClusterServer, RefitAutopilot, WorkerPool
+
+CFG = GeekConfig(m=8, t=16, silk_l=3, delta=3, k_max=32, pair_cap=4096)
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    from repro.data import synthetic
+    d = synthetic.dense_blobs(jax.random.PRNGKey(0), n=900, d=16, k=8)
+    model = GEEK(CFG).fit(DenseData(d.x), jax.random.PRNGKey(1))
+    return jax.block_until_ready(model), np.asarray(d.x)
+
+
+def _server(model, **kw):
+    kw.setdefault("max_batch", 64)
+    kw.setdefault("deadline_ms", 2.0)
+    kw.setdefault("min_bucket", 16)
+    return ClusterServer(model, **kw)
+
+
+# ---------------------------------------------------------------------------
+# reservoir
+# ---------------------------------------------------------------------------
+
+def test_reservoir_keeps_everything_below_capacity(fitted):
+    model, x = fitted
+    with _server(model) as server:
+        ap = RefitAutopilot(server, CFG, reservoir=256, min_rows=300)
+        ap.observe(x[:100])
+        ap.observe((x[100:150],))     # tuple spelling too
+        st = ap.stats()
+        assert st["observed_rows"] == 150
+        assert st["reservoir_rows"] == 150
+        np.testing.assert_array_equal(ap._buffers[0][:150], x[:150])
+        # below min_rows: the cycle skips, nothing publishes
+        assert ap.run_once() is None
+        assert ap.stats()["skipped"] == 1
+        assert ap.stats()["refits"] == 0
+
+
+def test_reservoir_samples_uniformly_above_capacity(fitted):
+    model, x = fitted
+    with _server(model) as server:
+        ap = RefitAutopilot(server, CFG, reservoir=64, seed=3)
+        for i in range(0, 800, 50):
+            ap.observe(x[i:i + 50])
+        st = ap.stats()
+        assert st["observed_rows"] == 800
+        assert st["reservoir_rows"] == 64       # capped
+        # every buffered row is a real observed row (vectorized check:
+        # each reservoir row matches at least one stream row exactly)
+        buf = ap._buffers[0]
+        match = (buf[:, None, :] == x[None, :800, :]).all(-1).any(-1)
+        assert match.all()
+        # replacement actually happened — the buffer is not just x[:64]
+        assert not np.array_equal(buf, x[:64])
+
+
+def test_reservoir_rejects_zero_capacity(fitted):
+    model, _ = fitted
+    with _server(model) as server:
+        with pytest.raises(ValueError, match="reservoir"):
+            RefitAutopilot(server, CFG, reservoir=0)
+
+
+# ---------------------------------------------------------------------------
+# the full cycle: publish and rollback
+# ---------------------------------------------------------------------------
+
+def test_refit_cycle_publishes_validated_model(fitted):
+    model, x = fitted
+    with _server(model) as server:
+        ap = RefitAutopilot(server, CFG, reservoir=1024, min_rows=128,
+                            holdout=64, seed=7)
+        ap.observe(x)
+        assert server.version == 0
+        version = ap.run_once()
+        assert version == 1
+        assert server.version == 1
+        st = ap.stats()
+        assert (st["refits"], st["published"], st["rollbacks"]) == (1, 1, 0)
+        assert st["last_rejection"] is None
+        # served labels now come from the refit model
+        got = server.submit(x[:16]).result(timeout=60)
+        assert got.version == 1
+        want, _ = predict(server.model, server.model.encode(x[:16]))
+        np.testing.assert_array_equal(got.labels, np.asarray(want))
+
+
+def test_injected_validation_failure_rolls_back(fitted):
+    model, x = fitted
+    with _server(model) as server:
+
+        def veto(candidate, result, parts):
+            return False, "injected fault"
+
+        ap = RefitAutopilot(server, CFG, reservoir=1024, min_rows=128,
+                            validator=veto, seed=7)
+        ap.observe(x)
+        assert ap.run_once() is None
+        # the incumbent keeps serving — the candidate never published
+        assert server.version == 0
+        assert server.registry.versions(server.name) == [0]
+        st = ap.stats()
+        assert (st["published"], st["rollbacks"]) == (0, 1)
+        rej = st["last_rejection"]
+        assert rej["incumbent_version"] == 0
+        assert any("injected fault" in g for g in rej["gates"])
+
+
+def test_k_star_gate_rolls_back(fitted):
+    model, x = fitted
+    with _server(model) as server:
+        # the blob data refits to k* ~ 8; a bound of 1 must reject it
+        ap = RefitAutopilot(server, CFG, reservoir=1024, min_rows=128,
+                            seed=7, max_k_star=1)
+        ap.observe(x)
+        assert ap.run_once() is None
+        assert server.version == 0
+        rej = ap.stats()["last_rejection"]
+        assert any(g.startswith("k_star") for g in rej["gates"])
+        assert rej["k_star"] > 1
+
+
+def test_no_mixed_versions_during_live_refit(fitted):
+    """Requests racing the publish serve exactly what they report."""
+    model, x = fitted
+    dev = jax.devices()[0]
+    with WorkerPool(model, devices=(dev, dev), max_batch=64,
+                    deadline_ms=2.0, min_bucket=16) as pool:
+        ap = RefitAutopilot(pool, CFG, reservoir=1024, min_rows=128,
+                            holdout=32, seed=7)
+        ap.observe(x)
+        published = []
+        t = threading.Thread(target=lambda: published.append(ap.run_once()))
+        futs = []
+        t.start()
+        for i in range(40):          # burst straddles the refit+publish
+            futs.append((8 * (i % 40), pool.submit(
+                x[8 * (i % 40):8 * (i % 40) + 8])))
+        t.join(timeout=300)
+        assert published == [1]
+        seen = set()
+        for off, fut in futs:
+            got = fut.result(timeout=60)
+            seen.add(got.version)
+            served_by = pool.registry.get(pool.name, got.version).model
+            want, _ = predict(served_by, served_by.encode(x[off:off + 8]))
+            np.testing.assert_array_equal(got.labels, np.asarray(want))
+        assert seen <= {0, 1}
+        assert pool.stats()["failed"] == 0
+
+
+def test_concurrent_run_once_skips_instead_of_stacking(fitted):
+    model, x = fitted
+    with _server(model) as server:
+        ap = RefitAutopilot(server, CFG, reservoir=1024, min_rows=128,
+                            seed=7)
+        ap.observe(x)
+        entered = threading.Event()
+        release = threading.Event()
+
+        def gate(candidate, result, parts):
+            entered.set()
+            release.wait(timeout=60)
+            return True, ""
+
+        ap.validator = gate
+        t = threading.Thread(target=ap.run_once)
+        t.start()
+        try:
+            assert entered.wait(timeout=120)
+            # a second cycle while the first is mid-fit: skip, not queue
+            assert ap.run_once() is None
+            assert ap.stats()["skipped"] == 1
+        finally:
+            release.set()
+            t.join(timeout=120)
+        assert ap.stats()["published"] == 1
+
+
+def test_background_loop_refits_on_the_clock(fitted):
+    model, x = fitted
+    with _server(model) as server:
+        ap = RefitAutopilot(server, CFG, reservoir=1024, min_rows=128,
+                            holdout=32, refit_every_s=0.05, seed=7)
+        ap.observe(x)
+        with ap.start():
+            deadline = threading.Event()
+            for _ in range(200):     # up to 10s for one cycle
+                if ap.stats()["published"] >= 1:
+                    break
+                deadline.wait(0.05)
+        assert ap.stats()["published"] >= 1
+        assert server.version >= 1
+        # closed: no further refits fire
+        settled = ap.stats()["refits"]
+        threading.Event().wait(0.2)
+        assert ap.stats()["refits"] == settled
+
+
+def test_start_requires_a_period(fitted):
+    model, _ = fitted
+    with _server(model) as server:
+        ap = RefitAutopilot(server, CFG)
+        with pytest.raises(ValueError, match="refit_every_s"):
+            ap.start()

@@ -1,0 +1,284 @@
+"""Multi-worker dispatch + registry retention (DESIGN.md §15).
+
+The contracts under test:
+
+- **Pool bit-identity.** A WorkerPool's labels equal the direct
+  ``predict`` path on the same rows — routing picks which device
+  computes, never what the answer is.
+- **Sticky-then-spill routing.** Requests stick to one worker while
+  its outstanding rows fit ``max_batch`` (full buckets); the overflow
+  spills to the least-queued worker and sticks there.
+- **Pool-wide hot-swap atomicity** (extends the PR 8 single-engine
+  test): one ``swap()`` on the pool, every worker snapshots the shared
+  registry per micro-batch, no request observes mixed versions and
+  none fails.
+- **Registry retention.** keep=2 eviction order; concurrent publishes
+  serialize with monotonic versions; ``load`` restores outside the
+  lock (readers never stall on checkpoint I/O); the pre-swap version
+  survives a pool-wide swap (in-flight work holds a live reference).
+
+Unit tests run on ONE CPU device by design (tests/conftest.py), so the
+pool here pins both workers to the same device — the routing, registry
+and atomicity logic is identical; only the parallel speedup needs real
+devices (benchmarks/bench_frontend.py measures that under forced host
+devices).
+"""
+import threading
+import time
+import types
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.api import GEEK, DenseData
+from repro.core.geek import GeekConfig
+from repro.core.model import predict
+from repro.serve import ModelRegistry, ServerClosedError, WorkerPool
+from repro.utils.platform import worker_devices
+
+CFG = GeekConfig(m=8, t=16, silk_l=3, delta=3, k_max=32, pair_cap=4096)
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    from repro.data import synthetic
+    d = synthetic.dense_blobs(jax.random.PRNGKey(0), n=900, d=16, k=8)
+    model = GEEK(CFG).fit(DenseData(d.x), jax.random.PRNGKey(1))
+    return jax.block_until_ready(model), np.asarray(d.x)
+
+
+@pytest.fixture(scope="module")
+def fitted_b():
+    from repro.data import synthetic
+    d = synthetic.dense_blobs(jax.random.PRNGKey(7), n=900, d=16, k=8)
+    model = GEEK(CFG).fit(DenseData(d.x), jax.random.PRNGKey(8))
+    return jax.block_until_ready(model), np.asarray(d.x)
+
+
+def _two_worker_pool(model, **kw):
+    dev = jax.devices()[0]
+    kw.setdefault("max_batch", 64)
+    kw.setdefault("deadline_ms", 2.0)
+    kw.setdefault("min_bucket", 16)
+    return WorkerPool(model, devices=(dev, dev), **kw)
+
+
+# ---------------------------------------------------------------------------
+# bit-identity + surface
+# ---------------------------------------------------------------------------
+
+def test_pool_labels_bit_identical_to_direct_predict(fitted):
+    model, x = fitted
+    want, _ = predict(model, x)
+    want = np.asarray(want)
+    with _two_worker_pool(model) as pool:
+        assert len(pool) == 2
+        futs = [(i, pool.submit(x[i:i + 23])) for i in range(0, 400, 23)]
+        for off, fut in futs:
+            got = fut.result(timeout=60)
+            np.testing.assert_array_equal(got.labels,
+                                          want[off:off + 23])
+    st = pool.stats()
+    assert st["failed"] == 0
+    assert st["rows_served"] >= 400
+    assert len(st["workers"]) == 2
+
+
+def test_pool_worker_count_defaults_to_local_devices(fitted):
+    model, x = fitted
+    # tests run on one device; the default pool matches it
+    assert worker_devices() == tuple(jax.local_devices())
+    with WorkerPool(model, max_batch=64, deadline_ms=2.0,
+                    min_bucket=16) as pool:
+        assert len(pool) == len(jax.local_devices())
+        got = pool.submit(x[:8]).result(timeout=60)
+        want, _ = predict(model, x[:8])
+        np.testing.assert_array_equal(got.labels, np.asarray(want))
+
+
+def test_pool_rejects_bad_worker_specs(fitted):
+    model, _ = fitted
+    dev = jax.devices()[0]
+    with pytest.raises(ValueError, match="disagrees"):
+        WorkerPool(model, workers=3, devices=(dev,))
+    with pytest.raises(ValueError, match="worker device"):
+        WorkerPool(model, workers=len(jax.local_devices()) + 1)
+    with pytest.raises(TypeError, match="GeekModel"):
+        WorkerPool(object())
+
+
+def test_pool_submit_after_close_raises_named_error(fitted):
+    model, x = fitted
+    pool = _two_worker_pool(model)
+    pool.close()
+    with pytest.raises(ServerClosedError):
+        pool.submit(x[:4])
+
+
+# ---------------------------------------------------------------------------
+# routing
+# ---------------------------------------------------------------------------
+
+def test_routing_sticks_until_overflow_then_spills(fitted):
+    model, _ = fitted
+    pool = _two_worker_pool(model, max_batch=64)
+    try:
+        # route directly (no submits) so queue charges are deterministic
+        assert pool._route(30) == pool._route(30)  # sticks: 60 <= 64
+        first = pool._last
+        spilled = pool._route(30)                  # 90 > 64: spill
+        assert spilled != first
+        assert pool._route(10) == spilled          # sticks on the new one
+        st = pool.stats()["routing"]
+        assert st["spills"] == 1
+        assert st["sticky"] == 3
+        assert sorted(st["queued_rows"]) == [40, 60]
+    finally:
+        pool.close()
+
+
+def test_routing_spreads_a_burst_across_workers(fitted):
+    model, x = fitted
+    with _two_worker_pool(model, max_batch=64, deadline_ms=20.0) as pool:
+        futs = [pool.submit(x[i:i + 32]) for i in range(0, 320, 32)]
+        for f in futs:
+            f.result(timeout=60)
+        st = pool.stats()
+        assert st["routing"]["spills"] >= 1
+        # both workers actually served rows
+        assert all(w["rows_served"] > 0 for w in st["workers"])
+        # charges are returned once futures resolve
+        assert st["routing"]["queued_rows"] == [0, 0]
+
+
+# ---------------------------------------------------------------------------
+# pool-wide hot-swap (extends the PR 8 single-engine swap test)
+# ---------------------------------------------------------------------------
+
+def test_pool_wide_swap_is_atomic_across_workers(fitted, fitted_b):
+    model_a, x = fitted
+    model_b, _ = fitted_b
+    by_version = {0: model_a, 1: model_b}
+    with _two_worker_pool(model_a, deadline_ms=3.0) as pool:
+        pool.warmup(x[:8])
+        first = pool.submit(x[:8]).result(timeout=60)
+        assert first.version == 0
+        futs = []
+        for i in range(12):
+            if i == 6:
+                assert pool.swap(model_b) == 1
+            futs.append((8 * i, pool.submit(x[8 * i:8 * i + 8])))
+            time.sleep(0.002)
+        seen = set()
+        for off, fut in futs:
+            got = fut.result(timeout=60)      # zero failed requests
+            seen.add(got.version)
+            want, _ = predict(by_version[got.version], x[off:off + 8])
+            # every row matches the version the request reports — no
+            # cross-version mixing inside any worker's micro-batch
+            np.testing.assert_array_equal(got.labels, np.asarray(want))
+        st = pool.stats()
+    assert 1 in seen, "post-swap traffic must serve on the new version"
+    assert st["failed"] == 0
+
+
+def test_pool_swap_publishes_exactly_once(fitted, fitted_b):
+    model_a, _ = fitted
+    model_b, _ = fitted_b
+    with _two_worker_pool(model_a) as pool:
+        assert pool.version == 0
+        assert pool.swap(model_b) == 1
+        # one publish for the whole pool, not one per worker
+        assert pool.registry.versions(pool.name) == [0, 1]
+        assert all(s.version == 1 for s in pool.servers)
+
+
+# ---------------------------------------------------------------------------
+# registry retention
+# ---------------------------------------------------------------------------
+
+def _dummy_model(d=8):
+    """transform=None reads as kind 'identity'; no JAX arrays needed."""
+    return types.SimpleNamespace(transform=None, d=d)
+
+
+def test_registry_keep2_eviction_order():
+    reg = ModelRegistry(keep=2)
+    models = [_dummy_model() for _ in range(4)]
+    for m in models:
+        reg.publish("m", m)
+    # oldest versions dropped first, newest two retained in order
+    assert reg.versions("m") == [2, 3]
+    assert reg.get("m", 2).model is models[2]
+    assert reg.get("m", 3).model is models[3]
+    for gone in (0, 1):
+        with pytest.raises(KeyError):
+            reg.get("m", gone)
+    with pytest.raises(ValueError, match="keep"):
+        ModelRegistry(keep=0)
+
+
+def test_registry_concurrent_publishes_serialize_monotonic():
+    reg = ModelRegistry(keep=100)
+    got: list[int] = []
+    lock = threading.Lock()
+
+    def publisher():
+        for _ in range(25):
+            v = reg.publish("m", _dummy_model())
+            with lock:
+                got.append(v)
+
+    threads = [threading.Thread(target=publisher) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    # every publish got a distinct version and the sequence is complete
+    assert sorted(got) == list(range(100))
+    assert reg.versions("m") == list(range(100))
+
+
+def test_registry_load_restores_outside_the_lock(monkeypatch):
+    """A slow checkpoint restore must not stall concurrent readers."""
+    import repro.checkpoint.manager as ckpt_mod
+    reg = ModelRegistry()
+    reg.publish("m", _dummy_model())
+    in_restore = threading.Event()
+    release = threading.Event()
+
+    def slow_restore(directory, step=None, mesh=None):
+        in_restore.set()
+        assert release.wait(timeout=60), "reader never released us"
+        return _dummy_model()
+
+    monkeypatch.setattr(ckpt_mod, "restore_model", slow_restore)
+    t = threading.Thread(target=reg.load, args=("m", "ignored"))
+    t.start()
+    try:
+        assert in_restore.wait(timeout=60)
+        # restore is blocked mid-"I/O"; current() must return immediately
+        # (it would deadlock here if load held the registry lock)
+        assert reg.current("m").version == 0
+        assert reg.versions("m") == [0]
+    finally:
+        release.set()
+        t.join(timeout=60)
+    assert reg.current("m").version == 1
+
+
+def test_prior_version_survives_pool_wide_swap(fitted, fitted_b):
+    """In-flight work holds its model; keep=2 retains the record too."""
+    model_a, x = fitted
+    model_b, _ = fitted_b
+    with _two_worker_pool(model_a) as pool:
+        pool.swap(model_b)
+        rec0 = pool.registry.get(pool.name, 0)
+        assert rec0.model is model_a          # retained, not dropped
+        # the old version still answers exactly as before the swap
+        want, _ = predict(model_a, x[:16])
+        got, _ = predict(rec0.model, x[:16])
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        # new traffic serves the new version
+        assert pool.submit(x[:8]).result(timeout=60).version == 1

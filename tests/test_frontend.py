@@ -1,0 +1,312 @@
+"""HTTP front end (DESIGN.md §15): wire format, named errors, lifecycle.
+
+This file is also the tier-1 network smoke test: it boots the front
+end on a loopback port with a real fitted engine behind it, round-trips
+assign/stats/swap over an actual socket, and shuts down cleanly.
+
+The contracts under test:
+
+- **Wire identity.** Labels served over HTTP — JSON and raw float32
+  bodies, JSON and raw responses — equal the direct ``predict`` path.
+- **Named 4xx at the door.** Malformed payloads are refused BEFORE
+  submit with ``{"error": <Name>}`` bodies: ArityMismatch,
+  WidthMismatch, KindMismatch, TooManyRows (413), BadRequest,
+  NotFound; a closed engine is 503 ServerClosed; an expired
+  per-request deadline is 504 DeadlineExceeded.
+- **Deadline propagation.** ``deadline_ms`` (field or header) bounds
+  the wait on the engine future, not the engine's batching deadline.
+- **Clean shutdown.** ``close()`` releases the socket; the engine
+  behind it keeps running (the frontend does not own it).
+"""
+import json
+import socket
+import threading
+import types
+import urllib.error
+import urllib.request
+from concurrent.futures import Future
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.api import GEEK, DenseData
+from repro.core.geek import GeekConfig
+from repro.core.model import predict
+from repro.serve import ClusterFrontend, ClusterServer
+from repro.serve.engine import ServerClosedError
+from repro.serve.frontend import _parse_assign, FrontendError
+
+CFG = GeekConfig(m=8, t=16, silk_l=3, delta=3, k_max=32, pair_cap=4096)
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    from repro.data import synthetic
+    d = synthetic.dense_blobs(jax.random.PRNGKey(0), n=600, d=16, k=8)
+    model = GEEK(CFG).fit(DenseData(d.x), jax.random.PRNGKey(1))
+    return jax.block_until_ready(model), np.asarray(d.x)
+
+
+@pytest.fixture(scope="module")
+def served(fitted):
+    """One engine + frontend for the whole module (boot is not free)."""
+    model, x = fitted
+    with ClusterServer(model, max_batch=64, deadline_ms=2.0,
+                       min_bucket=16) as server:
+        with ClusterFrontend(server) as fe:
+            yield fe, model, x
+
+
+def _request(url, path, data=None, headers=None, method=None):
+    """(status, headers, body) — errors returned, not raised."""
+    req = urllib.request.Request(url + path, data=data,
+                                 headers=headers or {}, method=method)
+    try:
+        with urllib.request.urlopen(req, timeout=60) as r:
+            return r.status, dict(r.headers), r.read()
+    except urllib.error.HTTPError as e:
+        return e.code, dict(e.headers), e.read()
+
+
+def _post_json(url, path, obj, headers=None):
+    hdrs = {"Content-Type": "application/json", **(headers or {})}
+    return _request(url, path, data=json.dumps(obj).encode(), headers=hdrs)
+
+
+def _error_name(body: bytes) -> str:
+    return json.loads(body)["error"]
+
+
+# ---------------------------------------------------------------------------
+# happy path over a real socket
+# ---------------------------------------------------------------------------
+
+def test_json_assign_round_trip(served):
+    fe, model, x = served
+    want, _ = predict(model, x[:9])
+    status, _, body = _post_json(fe.url, "/v1/assign",
+                                 {"rows": x[:9].tolist()})
+    assert status == 200
+    out = json.loads(body)
+    assert out["labels"] == np.asarray(want).tolist()
+    assert out["version"] == fe.server.version
+    assert len(out["dists"]) == 9
+
+
+def test_raw_float32_assign_round_trip(served):
+    fe, model, x = served
+    want_l, want_d = predict(model, x[:7])
+    status, headers, body = _request(
+        fe.url, "/v1/assign", data=x[:7].astype("<f4").tobytes(),
+        headers={"Content-Type": "application/octet-stream",
+                 "Accept": "application/octet-stream"})
+    assert status == 200
+    assert headers["X-Rows"] == "7"
+    assert headers["X-Model-Version"] == str(fe.server.version)
+    labels = np.frombuffer(body[:7 * 4], dtype="<i4")
+    dists = np.frombuffer(body[7 * 4:], dtype="<f4")
+    np.testing.assert_array_equal(labels, np.asarray(want_l))
+    np.testing.assert_allclose(dists, np.asarray(want_d), rtol=1e-5)
+
+
+def test_healthz_and_stats(served):
+    fe, model, _ = served
+    status, _, body = _request(fe.url, "/healthz")
+    assert (status, body) == (200, b"ok")
+    status, _, body = _request(fe.url, "/v1/stats")
+    assert status == 200
+    st = json.loads(body)
+    assert st["model"]["kind"] == "identity"
+    assert st["model"]["d"] == int(model.d)
+    assert st["engine"]["failed"] == 0
+    assert st["http"]["requests"] >= 1
+
+
+def test_swap_over_http(served, tmp_path):
+    from repro.checkpoint.manager import save_model
+    fe, model, x = served
+    save_model(str(tmp_path), model)
+    before = fe.server.version
+    status, _, body = _post_json(fe.url, "/v1/swap",
+                                 {"ckpt": str(tmp_path)})
+    assert status == 200
+    assert json.loads(body)["version"] == before + 1
+    assert fe.server.version == before + 1
+    # traffic keeps flowing on the swapped-in (identical) model
+    want, _ = predict(model, x[:5])
+    status, _, body = _post_json(fe.url, "/v1/assign",
+                                 {"rows": x[:5].tolist()})
+    assert status == 200
+    assert json.loads(body)["labels"] == np.asarray(want).tolist()
+
+
+# ---------------------------------------------------------------------------
+# named errors at the door
+# ---------------------------------------------------------------------------
+
+def test_named_4xx_errors(served):
+    fe, model, x = served
+    url = fe.url
+    d = int(model.d)
+    cases = [
+        # (status, name, request)
+        (400, "BadRequest",
+         lambda: _request(url, "/v1/assign", data=b"not json",
+                          headers={"Content-Type": "application/json"})),
+        (400, "BadRequest",
+         lambda: _post_json(url, "/v1/assign", {"nope": []})),
+        (400, "ArityMismatch",
+         lambda: _post_json(url, "/v1/assign",
+                            {"parts": [x[:2].tolist(), x[:2].tolist()]})),
+        (400, "WidthMismatch",
+         lambda: _post_json(url, "/v1/assign",
+                            {"rows": x[:2, :d - 1].tolist()})),
+        (400, "WidthMismatch",   # raw body not a whole number of rows
+         lambda: _request(url, "/v1/assign", data=b"\0" * (4 * d + 1),
+                          headers={"Content-Type":
+                                   "application/octet-stream"})),
+        (400, "BadRequest",      # 1-D rows
+         lambda: _post_json(url, "/v1/assign", {"rows": x[0].tolist()})),
+        (400, "BadRequest",      # bad deadline
+         lambda: _post_json(url, "/v1/assign",
+                            {"rows": x[:2].tolist(), "deadline_ms": -5})),
+        (413, "TooManyRows",
+         lambda: _post_json(url, "/v1/assign",
+                            {"rows": [[0.0] * d] * 65})),
+        (404, "NotFound", lambda: _request(url, "/v1/nope", data=b"{}")),
+        (404, "NotFound", lambda: _request(url, "/nope")),
+        (400, "BadRequest",
+         lambda: _post_json(url, "/v1/swap", {})),
+        (404, "CheckpointNotFound",
+         lambda: _post_json(url, "/v1/swap", {"ckpt": "/no/such/dir"})),
+    ]
+    for want_status, want_name, go in cases:
+        status, _, body = go()
+        assert status == want_status, (want_name, status, body)
+        assert _error_name(body) == want_name, body
+    # the engine never saw any of these
+    assert fe.server.stats()["failed"] == 0
+
+
+def test_raw_body_refused_for_non_dense_models():
+    kind_err = pytest.raises(FrontendError, match="dense models only")
+    with kind_err as e:
+        _parse_assign(b"\0" * 16, "application/octet-stream",
+                      "sparse", 2, 4, 64)
+    assert e.value.name == "KindMismatch"
+
+
+# ---------------------------------------------------------------------------
+# deadline + engine-failure mapping (duck-typed server: no real engine)
+# ---------------------------------------------------------------------------
+
+def _fake_frontend(submit):
+    model = types.SimpleNamespace(transform=None, d=4,
+                                  k_star=np.int32(1), metric="l2")
+    server = types.SimpleNamespace(model=model, version=0, max_batch=64,
+                                   submit=submit, stats=lambda: {},
+                                   swap=None)
+    return ClusterFrontend(server).start()
+
+
+def test_deadline_expiry_maps_to_504(served_unused=None):
+    fe = _fake_frontend(lambda parts: Future())   # never resolves
+    try:
+        status, _, body = _post_json(
+            fe.url, "/v1/assign",
+            {"rows": [[0.0] * 4] * 2, "deadline_ms": 50})
+        assert status == 504
+        assert _error_name(body) == "DeadlineExceeded"
+        # header spelling of the same deadline
+        status, _, body = _post_json(fe.url, "/v1/assign",
+                                     {"rows": [[0.0] * 4] * 2},
+                                     headers={"X-Deadline-Ms": "50"})
+        assert status == 504
+    finally:
+        fe.close()
+
+
+def test_closed_engine_maps_to_503():
+    def submit(parts):
+        raise ServerClosedError("server is closed")
+    fe = _fake_frontend(submit)
+    try:
+        status, _, body = _post_json(fe.url, "/v1/assign",
+                                     {"rows": [[0.0] * 4] * 2})
+        assert status == 503
+        assert _error_name(body) == "ServerClosed"
+    finally:
+        fe.close()
+
+
+def test_failed_batch_maps_to_500():
+    def submit(parts):
+        fut = Future()
+        fut.set_exception(ValueError("injected batch failure"))
+        return fut
+    fe = _fake_frontend(submit)
+    try:
+        status, _, body = _post_json(fe.url, "/v1/assign",
+                                     {"rows": [[0.0] * 4] * 2})
+        assert status == 500
+        assert _error_name(body) == "AssignFailed"
+    finally:
+        fe.close()
+
+
+# ---------------------------------------------------------------------------
+# observer + lifecycle
+# ---------------------------------------------------------------------------
+
+def test_observer_sees_parsed_traffic_and_never_breaks_serving(fitted):
+    model, x = fitted
+    seen_rows = []
+
+    def observer(parts):
+        seen_rows.append(parts[0].shape[0])
+        if len(seen_rows) == 2:
+            raise RuntimeError("observer bug")   # must not 500 the request
+
+    with ClusterServer(model, max_batch=64, deadline_ms=2.0,
+                       min_bucket=16) as server:
+        with ClusterFrontend(server, observer=observer) as fe:
+            for n in (3, 5, 7):
+                status, _, _ = _post_json(fe.url, "/v1/assign",
+                                          {"rows": x[:n].tolist()})
+                assert status == 200
+            status, _, body = _request(fe.url, "/v1/stats")
+    assert seen_rows == [3, 5, 7]
+    st = json.loads(body)
+    assert st["http"]["observer_errors"] == 1
+    assert st["http"]["requests"] == 3
+
+
+def test_close_releases_socket_and_leaves_engine_running(fitted):
+    model, x = fitted
+    with ClusterServer(model, max_batch=64, deadline_ms=2.0,
+                       min_bucket=16) as server:
+        fe = ClusterFrontend(server).start()
+        host, port = fe.address
+        assert _request(fe.url, "/healthz")[0] == 200
+        fe.close()
+        with pytest.raises((ConnectionError, urllib.error.URLError,
+                            socket.timeout, OSError)):
+            urllib.request.urlopen(f"http://{host}:{port}/healthz",
+                                   timeout=2)
+        # the engine outlives its frontend
+        want, _ = predict(model, x[:4])
+        got = server.submit(x[:4]).result(timeout=60)
+        np.testing.assert_array_equal(got.labels, np.asarray(want))
+
+
+def test_start_twice_refused(fitted):
+    model, _ = fitted
+    with ClusterServer(model, max_batch=64, deadline_ms=2.0,
+                       min_bucket=16) as server:
+        fe = ClusterFrontend(server).start()
+        try:
+            with pytest.raises(RuntimeError, match="already started"):
+                fe.start()
+        finally:
+            fe.close()

@@ -436,3 +436,51 @@ def test_constructor_validation():
                                    index_tables=0)
     with pytest.raises(ValueError, match="index_tables=0"):
         ClusterServer(no_index, probes=1)
+
+
+# ---------------------------------------------------------------------------
+# per-path ladder override
+# ---------------------------------------------------------------------------
+
+def test_ladder_override_serves_on_custom_rungs():
+    model, parts = _fitted("dense")
+    rungs = (8, 24, 64)
+    with ClusterServer(model, max_batch=64, deadline_ms=2.0,
+                       ladder=rungs) as server:
+        assert server.ladder == rungs
+        server.warmup(_rows(parts, slice(0, 4)))
+        for n in (3, 8, 20, 60):
+            got = server.submit(_rows(parts, slice(0, n))).result(timeout=60)
+            want_l, _ = _direct(model, _rows(parts, slice(0, n)))
+            np.testing.assert_array_equal(got.labels, want_l)
+        st = server.stats()
+    # padding went to the override rungs, not the default ladder:
+    # 3->8 (+5), 8->8 (+0), 20->24 (+4), 60->64 (+4)
+    assert st["padded_rows"] == 13
+
+
+def test_ladder_override_validation():
+    model, _ = _fitted("dense")
+    with pytest.raises(ValueError, match="strictly"):
+        ClusterServer(model, max_batch=64, ladder=())
+    with pytest.raises(ValueError, match="strictly"):
+        ClusterServer(model, max_batch=64, ladder=(16, 16, 64))
+    with pytest.raises(ValueError, match="strictly"):
+        ClusterServer(model, max_batch=64, ladder=(0, 64))
+    with pytest.raises(ValueError, match="cover"):
+        ClusterServer(model, max_batch=64, ladder=(16, 32))
+    mesh = make_mesh("data")
+    if mesh is not None:
+        # rungs must stay divisible by the mesh size (here 1 — fine)
+        with ClusterServer(model, max_batch=64, ladder=(16, 64),
+                           mesh=mesh) as server:
+            assert server.ladder == (16, 64)
+
+
+def test_device_and_mesh_are_mutually_exclusive():
+    model, _ = _fitted("dense")
+    mesh = make_mesh("data")
+    if mesh is None:
+        pytest.skip("no mesh on this host")
+    with pytest.raises(ValueError, match="device"):
+        ClusterServer(model, mesh=mesh, device=jax.devices()[0])

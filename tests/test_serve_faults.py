@@ -24,7 +24,7 @@ import pytest
 
 from repro.core.api import GEEK, DenseData
 from repro.core.geek import GeekConfig
-from repro.serve import ClusterServer
+from repro.serve import ClusterServer, ServerClosedError
 from repro.serve import engine as engine_mod
 
 CFG = GeekConfig(m=8, t=16, silk_l=3, delta=3, k_max=32, pair_cap=4096)
@@ -167,3 +167,50 @@ def test_close_drains_queued_requests(fitted):
         got = fut.result(timeout=60)
         assert got.labels.shape == (8,)
     assert server.stats()["flushes"]["close"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# submit after close: the named error, immediately and under the race
+# ---------------------------------------------------------------------------
+
+def test_submit_after_close_raises_named_error_immediately(fitted):
+    """The pre-check path: a closed server refuses at the door."""
+    model, x = fitted
+    server = ClusterServer(model, max_batch=32, deadline_ms=2.0)
+    server.close()
+    with pytest.raises(ServerClosedError, match="closed"):
+        server.submit(x[:4])
+    # and the named error IS a RuntimeError, so pre-existing callers
+    # that catch RuntimeError keep working
+    assert issubclass(ServerClosedError, RuntimeError)
+    server.close()                           # idempotent
+
+
+def test_submit_racing_close_never_hangs(fitted, monkeypatch):
+    """The race window: submit passes the closed pre-check, then a
+    concurrent close() fully drains and kills the worker BEFORE the
+    request lands on the queue. The future must still resolve — either
+    served by the close drain or failed with ServerClosedError — never
+    hang on the dead worker."""
+    model, x = fitted
+    server = ClusterServer(model, max_batch=32, deadline_ms=2.0)
+    real_put = server._queue.put
+    fired = []
+
+    def racing_put(item):
+        # interleave deterministically: the moment submit() tries to
+        # enqueue its request (pre-check already passed), run the whole
+        # close() first — sentinel in, worker drained and joined — then
+        # let the request land behind the final drain
+        if not fired and hasattr(item, "future"):
+            fired.append(item)
+            monkeypatch.setattr(server._queue, "put", real_put,
+                                raising=False)
+            server.close()
+        real_put(item)
+
+    monkeypatch.setattr(server._queue, "put", racing_put, raising=False)
+    fut = server.submit(x[:4])
+    with pytest.raises(ServerClosedError, match="closed"):
+        fut.result(timeout=60)               # resolves, does not hang
+    assert not server._worker.is_alive()
